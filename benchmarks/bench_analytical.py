@@ -1,0 +1,67 @@
+"""Paper Fig 13/14/15: analytical model validation + what-if simulations."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.algorithms import make_algorithm
+from repro.core.analytical import (
+    Workload, estimate_epochs, faas_time, iaas_time, q1_fast_hybrid,
+    q2_hot_data,
+)
+from repro.core.mlmodels import make_study_model, model_bytes
+from repro.core.runtimes import FaaSRuntime
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+def run(quick: bool = True):
+    rows = []
+    ds = make_dataset("higgs", rows=30_000 if quick else 400_000)
+    tr, va = train_val_split(ds)
+    model = make_study_model("lr", tr)
+    mbytes = model_bytes(model.init(jax.random.key(0)))
+
+    # ---- Fig 13a: model vs emulated runtime across epoch counts -------------
+    errs = []
+    for epochs in (1, 3, 10) if quick else (1, 3, 10, 30, 100):
+        algo = make_algorithm("ga_sgd", lr=0.3, batch_size=2048)
+        r = FaaSRuntime(workers=10).train(model, algo, tr, va,
+                                          max_epochs=epochs)
+        wl = Workload(s_bytes=tr.nbytes, m_bytes=mbytes, R=r.rounds, C=0.001)
+        t_pred = faas_time(wl, 10)
+        ratio = r.sim_time / t_pred
+        errs.append(ratio)
+        rows.append({"name": f"fig13a_epochs{epochs}",
+                     "us_per_call": r.sim_time * 1e6,
+                     "pred_s": t_pred, "actual_s": r.sim_time,
+                     "derived": f"actual/pred={ratio:.2f}"})
+
+    # ---- Fig 13b: sampling-based epoch estimator -----------------------------
+    algo = make_algorithm("ma_sgd", lr=0.3, batch_size=1024)
+    est = estimate_epochs(model, algo, tr, target_loss=0.55, max_epochs=20)
+    algo = make_algorithm("ma_sgd", lr=0.3, batch_size=1024)
+    real = FaaSRuntime(workers=1).train(model, algo, tr, va,
+                                        target_loss=0.55, max_epochs=20)
+    rows.append({"name": "fig13b_estimator", "us_per_call": est * 1e6,
+                 "derived": f"est_epochs={est};actual={real.rounds}"})
+
+    # ---- Fig 14 (Q1): faster FaaS-IaaS link ----------------------------------
+    wl_lr = Workload(s_bytes=16e9, m_bytes=16e3, R=20, C=60.0)
+    wl_mn = Workload(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)
+    for wname, wl in (("lr_yfcc", wl_lr), ("mn_cifar", wl_mn)):
+        q1 = q1_fast_hybrid(wl, 10)
+        rows.append({"name": f"fig14_{wname}", "us_per_call": q1["hybrid_now"] * 1e6,
+                     **{k: v for k, v in q1.items()},
+                     "derived": ";".join(f"{k}={v:.0f}s" for k, v in q1.items())})
+
+    # ---- Fig 15 (Q2): hot data ------------------------------------------------
+    q2 = q2_hot_data(wl_lr, 10)
+    rows.append({"name": "fig15_hot_data", "us_per_call": q2["iaas_hot"] * 1e6,
+                 **q2, "derived": f"iaas={q2['iaas_hot']:.0f}s;"
+                                  f"faas={q2['faas_hot']:.0f}s"})
+    return emit(rows, "bench_analytical")
+
+
+if __name__ == "__main__":
+    run()

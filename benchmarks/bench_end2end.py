@@ -1,0 +1,75 @@
+"""Paper Fig 11/12 + §5.1.1 COST check: end-to-end runtime vs cost profiles
+as a function of worker count, FaaS vs IaaS (+GPU for the NN model)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.algorithms import make_algorithm
+from repro.core.mlmodels import make_study_model
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+def run(quick: bool = True):
+    rows = []
+    ds = make_dataset("higgs", rows=30_000 if quick else 400_000)
+    tr, va = train_val_split(ds)
+    lr_model = make_study_model("lr", tr)
+    worker_counts = (1, 5, 10) if quick else (1, 5, 10, 25, 50, 100)
+
+    # ---- LR (communication-efficient via ADMM) ------------------------------
+    for w in worker_counts:
+        algo = make_algorithm("admm", lr=0.1, local_epochs=5)
+        f = FaaSRuntime(workers=w).train(lr_model, algo, tr, va, max_epochs=3)
+        algo = make_algorithm("admm", lr=0.1, local_epochs=5)
+        i = IaaSRuntime(workers=w).train(lr_model, algo, tr, va, max_epochs=3)
+        rows.append({"name": f"fig11_lr_faas_w{w}", "us_per_call": f.sim_time * 1e6,
+                     "sim_time_s": f.sim_time, "cost_usd": f.cost,
+                     "derived": f"cost=${f.cost:.4f};loss={f.final_loss:.4f}"})
+        rows.append({"name": f"fig11_lr_iaas_w{w}", "us_per_call": i.sim_time * 1e6,
+                     "sim_time_s": i.sim_time, "cost_usd": i.cost,
+                     "derived": f"cost=${i.cost:.4f};loss={i.final_loss:.4f}"})
+
+    # ---- MobileNet (communication-heavy GA-SGD) ------------------------------
+    cds = make_dataset("cifar10", rows=4_000 if quick else 50_000)
+    ctr, cva = train_val_split(cds)
+    mn = make_study_model("mobilenet", ctr)
+    for w in ((5, 10) if quick else (5, 10, 25)):
+        algo = make_algorithm("ga_sgd", lr=0.05, batch_size=512)
+        f = FaaSRuntime(workers=w, channel="memcached").train(
+            mn, algo, ctr, cva, max_epochs=1)
+        algo = make_algorithm("ga_sgd", lr=0.05, batch_size=512)
+        i = IaaSRuntime(workers=w, instance="g3s.xlarge", gpu=True).train(
+            mn, algo, ctr, cva, max_epochs=1)
+        rows.append({"name": f"fig12_mn_faas_w{w}", "us_per_call": f.sim_time * 1e6,
+                     "sim_time_s": f.sim_time, "cost_usd": f.cost,
+                     "derived": f"cost=${f.cost:.4f}"})
+        rows.append({"name": f"fig12_mn_iaasgpu_w{w}", "us_per_call": i.sim_time * 1e6,
+                     "sim_time_s": i.sim_time, "cost_usd": i.cost,
+                     "derived": f"cost=${i.cost:.4f}"})
+
+    # ---- COST sanity check (§5.1.1): same statistical work (5 EM epochs),
+    # compute-heavy k-means, single machine vs 10 workers --------------------
+    kds = make_dataset("higgs", rows=400_000 if quick else 2_000_000)
+    ktr, kva = train_val_split(kds)
+    km = make_study_model("kmeans", ktr, k=250 if quick else 1000)
+    single = IaaSRuntime(workers=1).train(km, make_algorithm("kmeans_em"),
+                                          ktr, kva, max_epochs=5)
+    f10 = FaaSRuntime(workers=10).train(km, make_algorithm("kmeans_em"),
+                                        ktr, kva, max_epochs=5)
+    i10 = IaaSRuntime(workers=10).train(km, make_algorithm("kmeans_em"),
+                                        ktr, kva, max_epochs=5)
+    # warm-cluster convention (paper §5.1.1 reports IaaS-10 at 98 s, below
+    # its own 132 s cluster-start -- i.e. measured from job start)
+    def warm(r):
+        return r.sim_time - r.breakdown["startup"]
+    rows.append({"name": "cost_check_kmeans",
+                 "us_per_call": single.sim_time * 1e6,
+                 "single_s": warm(single), "faas10_s": warm(f10),
+                 "iaas10_s": warm(i10),
+                 "derived": (f"faas10_speedup={warm(single) / warm(f10):.1f}x;"
+                             f"iaas10_speedup={warm(single) / warm(i10):.1f}x")})
+    return emit(rows, "bench_end2end")
+
+
+if __name__ == "__main__":
+    run()

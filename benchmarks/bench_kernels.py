@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks.
+
+CPU container: we time the pure-jnp oracle paths (the CPU execution baseline)
+and report the model bytes each kernel must stream, i.e. the TPU roofline
+floor time = bytes / 819 GB/s.  The Pallas kernels themselves are validated
+in interpret mode (tests/test_kernels.py) -- interpret-mode timing is not
+meaningful, so `derived` reports the v5e roofline floor instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant8.ref import quantize8_ref
+from repro.models.ssm import ssd_scan
+
+HBM_BW = 819e9
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention fwd: b*h=8, s=2048, d=128
+    bh, s, d = 8, 2048, 128
+    q = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True,
+                                              sm_scale=d ** -0.5))
+    t = timeit(lambda: jax.block_until_ready(f(q, q, q)))
+    flops = 4 * bh * s * s * d
+    rows.append({"name": "kern_flash_attention_ref", "us_per_call": t * 1e6,
+                 "derived": f"cpu_gflops={flops / t / 1e9:.1f};"
+                            f"tpu_floor_us={flops / 197e12 * 1e6:.1f}"})
+
+    # decode attention: b*m=16, S=32768, d=128, g=8
+    bm, g, S = 16, 8, 32768 if not quick else 8192
+    qd = jnp.asarray(rng.standard_normal((bm, g, d)), jnp.bfloat16)
+    kd = jnp.asarray(rng.standard_normal((bm, S, d)), jnp.bfloat16)
+    fd = jax.jit(lambda q, k, v: decode_attention_ref(q, k, v, S,
+                                                      sm_scale=d ** -0.5))
+    t = timeit(lambda: jax.block_until_ready(fd(qd, kd, kd)))
+    bytes_ = 2 * bm * S * d * 2
+    rows.append({"name": "kern_decode_attention_ref", "us_per_call": t * 1e6,
+                 "derived": f"cache_GB={bytes_ / 1e9:.3f};"
+                            f"tpu_floor_us={bytes_ / HBM_BW * 1e6:.1f}"})
+
+    # ssd scan: b=2, s=2048, h=16, p=64, n=64
+    b, s2, h, p, n = 2, 2048, 16, 64, 64
+    x = jnp.asarray(rng.standard_normal((b, s2, h, p)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.standard_normal((b, s2, h)), jnp.float32))
+    alog = jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s2, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s2, n)), jnp.float32)
+    fs = jax.jit(lambda *a: ssd_scan(*a, 256)[0])
+    t = timeit(lambda: jax.block_until_ready(fs(x, dt, alog, B, C)))
+    ssd_flops = 2 * b * s2 * 256 * h * p + 4 * b * s2 * h * p * n
+    rows.append({"name": "kern_ssd_scan_ref", "us_per_call": t * 1e6,
+                 "derived": f"tpu_floor_us={ssd_flops / 197e12 * 1e6:.2f}"})
+
+    # quant8: 64 MB tensor
+    nq = 16_000_000 if not quick else 4_000_000
+    xq = jnp.asarray(rng.standard_normal((nq // 256, 256)), jnp.float32)
+    fq = jax.jit(quantize8_ref)
+    t = timeit(lambda: jax.block_until_ready(fq(xq)))
+    bytes_q = nq * 5  # read fp32 + write int8
+    rows.append({"name": "kern_quant8_ref", "us_per_call": t * 1e6,
+                 "derived": f"cpu_GBps={bytes_q / t / 1e9:.1f};"
+                            f"tpu_floor_us={bytes_q / HBM_BW * 1e6:.1f}"})
+    return emit(rows, "bench_kernels")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Table 3: AllReduce vs ScatterReduce communication time for LR
+(224 B), MobileNet (12 MB) and ResNet50 (89 MB) sized updates over S3."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.channels import StorageChannel
+from repro.core.patterns import allreduce, scatter_reduce
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = {"lr_224B": 56, "mobilenet_12MB": 3_000_000,
+             "resnet50_89MB": 22_250_000}
+    w = 10
+    rng = np.random.default_rng(0)
+    for name, n in sizes.items():
+        if quick and n > 5_000_000:
+            n = 11_000_000  # keep the 2x regime but fit RAM quickly
+        ups = [rng.standard_normal(n).astype(np.float32) for _ in range(w)]
+        _, t_ar = allreduce(StorageChannel("s3"), ups, "a")
+        _, t_sr = scatter_reduce(StorageChannel("s3"), ups, "b")
+        ar, sr = float(np.max(t_ar)), float(np.max(t_sr))
+        rows.append({"name": f"table3_{name}_allreduce",
+                     "us_per_call": ar * 1e6, "sim_time_s": ar,
+                     "derived": f"ratio_ar_over_sr={ar / sr:.2f}"})
+        rows.append({"name": f"table3_{name}_scatterreduce",
+                     "us_per_call": sr * 1e6, "sim_time_s": sr,
+                     "derived": f"workers={w}"})
+    return emit(rows, "bench_patterns")
+
+
+if __name__ == "__main__":
+    run()

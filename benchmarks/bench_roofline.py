@@ -1,0 +1,38 @@
+"""Roofline table (beyond paper): per (arch x shape x mesh) three-term
+roofline from the dry-run artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(quick: bool = True):
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(p.read_text())
+        if not d.get("ok") or d.get("skipped") or d.get("reduced"):
+            continue
+        rows.append({
+            "name": f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}",
+            "us_per_call": d["t_compute_s"] * 1e6,
+            "t_compute_s": d["t_compute_s"], "t_memory_s": d["t_memory_s"],
+            "t_collective_s": d["t_collective_s"],
+            "bottleneck": d["bottleneck"],
+            "roofline_fraction": d["roofline_fraction"],
+            "flops_ratio": d["flops_ratio"],
+            "derived": (f"bound={d['bottleneck']};"
+                        f"frac={d['roofline_fraction']:.3f};"
+                        f"useful_flops_ratio={d['flops_ratio']:.2f}"),
+        })
+    if not rows:
+        rows.append({"name": "roofline_missing", "us_per_call": 0,
+                     "derived": "run `python -m repro.launch.dryrun` first"})
+    return emit(rows, "bench_roofline")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Benchmark harness utilities: CSV rows in the required
+``name,us_per_call,derived`` format + JSON dumps under experiments/bench/."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def emit(rows: list[dict], bench: str):
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{bench}.json").write_text(json.dumps(rows, indent=1, default=float))
+    for r in rows:
+        name = r.get("name", bench)
+        us = r.get("us_per_call", r.get("sim_time_s", 0) * 1e6)
+        derived = r.get("derived", "")
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

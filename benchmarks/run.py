@@ -1,0 +1,53 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+``python -m benchmarks.run [--full]`` prints ``name,us_per_call,derived``
+CSV (the scaffold contract) and writes JSON rows to experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_patterns",      # Table 3
+    "bench_algorithms",    # Fig 7
+    "bench_channels",      # Tables 1-2
+    "bench_sync",          # Fig 8
+    "bench_breakdown",     # Fig 10
+    "bench_end2end",       # Fig 11/12 + COST check
+    "bench_pipeline",      # Table 5
+    "bench_analytical",    # Fig 13/14/15
+    "bench_roofline",      # §Roofline (dry-run derived)
+    "bench_crosspod",      # §Perf paper-technique headline
+    "bench_kernels",       # kernel microbench
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        if args.only and args.only not in mod:
+            continue
+        t0 = time.time()
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["run"])
+            m.run(quick=not args.full)
+            print(f"# {mod} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {mod} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,87 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+"""MA-SGD / DiLoCo across pods, end to end on 8 emulated devices.
+
+The paper's technique (sync models every H steps instead of gradients every
+step) running as a REAL training loop on a (pod=2, data=2, model=2) mesh:
+H inner steps with collectives confined to each pod, then one outer sync
+(plain averaging for --algo ma_sgd, Nesterov outer step for --algo diloco,
+optionally int8-compressed).  Prints the loss curve and the measured
+cross-pod bytes per step vs the GA-SGD baseline.
+
+    PYTHONPATH=src python examples/diloco_pods.py --algo diloco --h 8 --compress
+"""
+import argparse    # noqa: E402
+import dataclasses  # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_reduced                      # noqa: E402
+from repro.configs.base import ShapeConfig                 # noqa: E402
+from repro.distributed.hlo_analysis import analyze_hlo     # noqa: E402
+from repro.distributed.local_sgd import build_local_sgd    # noqa: E402
+from repro.distributed.step import build_train_step        # noqa: E402
+from repro.launch.mesh import make_mesh                    # noqa: E402
+from repro.launch.specs import make_batch                  # noqa: E402
+from repro.models import build_model                       # noqa: E402
+from repro.optim import make_optimizer                     # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="diloco", choices=["ma_sgd", "diloco"])
+    ap.add_argument("--h", type=int, default=8, help="inner steps per sync")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--compress", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    shape = ShapeConfig("demo", 128, 8, "train")
+    arch = get_reduced("smollm-360m")
+    arch = arch.replace(train=dataclasses.replace(
+        arch.train, algorithm=args.algo, sync_period=args.h,
+        compress_cross_pod=args.compress, learning_rate=3e-3))
+
+    ls = build_local_sgd(arch, mesh, shape)
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    P = ls.n_pods
+    params_st = jax.tree.map(lambda x: jnp.stack([x] * P), params)
+    opt = make_optimizer(arch.train)
+    opt_st = jax.tree.map(lambda x: jnp.stack([x] * P), opt.init(params))
+    out_state = None  # initialized from params on first sync (see below)
+
+    with mesh:
+        # measured cross-pod traffic, this config vs GA baseline
+        inner = analyze_hlo(ls.lower_inner().compile().as_text(), pod_size=4)
+        outer = analyze_hlo(ls.lower_outer().compile().as_text(), pod_size=4)
+        ga = build_train_step(arch, mesh, shape)
+        ga_r = analyze_hlo(ga.lower().compile().as_text(), pod_size=4)
+        eff = inner["cross_pod_bytes"] + outer["cross_pod_bytes"] / args.h
+        print(f"cross-pod bytes/step: GA-SGD {ga_r['cross_pod_bytes'] / 1e6:.2f} MB"
+              f" -> {args.algo}(H={args.h}"
+              f"{',int8' if args.compress else ''}) {eff / 1e6:.3f} MB "
+              f"({ga_r['cross_pod_bytes'] / max(eff, 1e-9):.0f}x less)")
+        print(f"inner-step cross-pod bytes: {inner['cross_pod_bytes']:.0f} "
+              "(zero by construction)\n")
+
+        out_state = ls.init_outer_fn(params_st)
+        step = 0
+        for r in range(args.rounds):
+            for _ in range(args.h):
+                batch = make_batch(arch, 8, 128, seed=step)
+                batch = jax.tree.map(jnp.asarray, batch)
+                params_st, opt_st, m = ls.inner_fn(params_st, opt_st, batch)
+                step += 1
+                if step % 4 == 0:
+                    print(f"  step {step:3d}  loss {float(m['loss'][0]):.4f}")
+            params_st, out_state = ls.outer_fn(params_st, out_state)
+            print(f"== outer sync {r + 1} (every H={args.h}) done ==")
+        leaf = jax.tree.leaves(params_st)[2]
+        print("replicas equal after final sync:",
+              bool(jnp.allclose(leaf[0], leaf[1], atol=1e-3)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's core result in 60 seconds on a laptop.
+
+Trains logistic regression on (synthetic) Higgs with the three distributed
+optimization algorithms under BOTH the FaaS (LambdaML) and IaaS runtimes and
+prints the time/cost tradeoff -- the paper's Fig 9/Table-5-style comparison.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.algorithms import make_algorithm
+from repro.core.mlmodels import make_study_model
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+def main():
+    ds = make_dataset("higgs", rows=50_000)
+    tr, va = train_val_split(ds)
+    model = make_study_model("lr", tr)
+
+    print(f"{'system':22s} {'algo':8s} {'rounds':>6s} {'sim time':>10s} "
+          f"{'cost':>9s} {'loss':>8s}")
+    for alg, kw in [("ga_sgd", dict(lr=0.3, batch_size=1024)),
+                    ("ma_sgd", dict(lr=0.3, batch_size=1024)),
+                    ("admm", dict(lr=0.1, local_epochs=10))]:
+        for sys_name, rt in [("FaaS (LambdaML/S3)", FaaSRuntime(workers=10)),
+                             ("IaaS (PyTorch-like)", IaaSRuntime(workers=10))]:
+            r = rt.train(model, make_algorithm(alg, **kw), tr, va,
+                         max_epochs=5)
+            print(f"{sys_name:22s} {alg:8s} {r.rounds:6d} "
+                  f"{r.sim_time:9.1f}s ${r.cost:8.4f} {r.final_loss:8.4f}")
+
+    print("\nPaper's insight #1: ADMM/MA (communication-efficient) make FaaS "
+          "competitive;\ninsight #2: even when FaaS is faster it is not much "
+          "cheaper (Lambda GB-s pricing).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Dev loop: forward+grad+decode every reduced arch on CPU, report failures."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import list_archs, get_reduced
+from repro.models import build_model
+from repro.launch.specs import make_batch
+
+ok = True
+for name in list_archs():
+    arch = get_reduced(name)
+    model = build_model(arch)
+    try:
+        params = model.init(jax.random.key(0))
+        batch = make_batch(arch, batch=2, seq=32)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        assert jnp.isfinite(loss), f"loss not finite: {loss}"
+        gnorm = jax.tree.reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads))
+        assert jnp.isfinite(gnorm), "grad not finite"
+        msg = f"{name:24s} loss={float(loss):.4f} params={model.param_count():,}"
+        if model.cfg.supports_decode:
+            cache = model.init_cache(2, 16)
+            tok = jnp.array([1, 2], jnp.int32)
+            logits, cache = model.decode_step(params, cache, tok, jnp.int32(0))
+            assert logits.shape == (2, model.cfg.vocab_size), logits.shape
+            assert bool(jnp.all(jnp.isfinite(logits))), "decode logits not finite"
+            logits2, cache = model.decode_step(params, cache, tok, jnp.int32(1))
+            assert bool(jnp.all(jnp.isfinite(logits2)))
+            msg += " decode=ok"
+        print(msg)
+    except Exception:
+        ok = False
+        print(f"{name}: FAIL")
+        traceback.print_exc()
+print("ALL OK" if ok else "FAILURES")
+sys.exit(0 if ok else 1)

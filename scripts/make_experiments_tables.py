@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+import json
+import sys
+from pathlib import Path
+
+DRY = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3 or x >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.{digits}f}"
+
+
+def main():
+    recs = []
+    for p in sorted(DRY.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("reduced"):
+            continue
+        recs.append(d)
+
+    arch_order = ["grok-1-314b", "deepseek-v2-lite-16b", "hubert-xlarge",
+                  "phi3-medium-14b", "llama3-405b", "stablelm-3b",
+                  "smollm-360m", "zamba2-2.7b", "mamba2-370m",
+                  "llama-3.2-vision-90b"]
+    shape_order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    def key(d):
+        return (arch_order.index(d["arch"]), shape_order.index(d["shape"]),
+                d["mesh"])
+
+    recs.sort(key=key)
+
+    print("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+          "bound | roofline frac | useful/HLO flops | coll bytes/dev | "
+          "temp GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for d in recs:
+        if d.get("skipped"):
+            if d["mesh"] == "16x16":
+                print(f"| {d['arch']} | {d['shape']} | - | - | - | - | "
+                      f"SKIP ({d['reason']}) | - | - | - | - |")
+            continue
+        mem = d.get("memory_analysis", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 2**30
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {fmt(d['t_compute_s'])} | {fmt(d['t_memory_s'])} "
+              f"| {fmt(d['t_collective_s'])} | {d['bottleneck']} "
+              f"| {d['roofline_fraction']:.3f} | {d['flops_ratio']:.2f} "
+              f"| {fmt(d['collective_bytes_per_device'] / 1e9)} GB "
+              f"| {temp:.1f} |")
+
+    print("\n\n### Collective op breakdown (single-pod train_4k)\n")
+    print("| arch | all-gather | all-reduce | reduce-scatter | all-to-all | "
+          "collective-permute |")
+    print("|---|---|---|---|---|---|")
+    for d in recs:
+        if d.get("skipped") or d["shape"] != "train_4k" or d["mesh"] != "16x16":
+            continue
+        c = d["collectives"]
+        def gb(k):
+            return f"{c[k]['operand_bytes'] / 1e9:.1f} GB ({c[k]['count']})"
+        print(f"| {d['arch']} | {gb('all-gather')} | {gb('all-reduce')} | "
+              f"{gb('reduce-scatter')} | {gb('all-to-all')} | "
+              f"{gb('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Architecture registry: ``get_arch(name)`` / ``list_archs()``.
+
+Each assigned architecture lives in its own module with two entry points:
+``CONFIG`` (the exact published configuration) and ``reduced()`` (a tiny
+same-family variant for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ModelConfig,
+    ShapeConfig,
+    ShardingRules,
+    SHAPES,
+    TrainConfig,
+)
+
+ARCH_IDS = [
+    "grok-1-314b",
+    "deepseek-v2-lite-16b",
+    "hubert-xlarge",
+    "phi3-medium-14b",
+    "llama3-405b",
+    "stablelm-3b",
+    "smollm-360m",
+    "zamba2-2.7b",
+    "mamba2-370m",
+    "llama-3.2-vision-90b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name])
+
+
+def get_arch(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    return _module(name).reduced()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,17 @@
+"""LambdaML core: the paper's design space as composable pieces.
+
+- algorithms: GA-SGD / MA-SGD / ADMM / EM-kmeans (shared FaaS+IaaS impls)
+- channels:   S3 / Memcached / Redis / DynamoDB / hybrid VM-PS emulation
+- patterns:   AllReduce / ScatterReduce over a storage channel
+- runtimes:   FaaSRuntime (LambdaML) and IaaSRuntime (distributed-PyTorch)
+- analytical: the §5.3 cost/performance model + what-if studies
+"""
+from repro.core.algorithms import (  # noqa: F401
+    ADMM, Algorithm, EMKMeans, GASGD, MASGD, make_algorithm,
+)
+from repro.core.channels import (  # noqa: F401
+    CHANNEL_SPECS, ChannelItemTooLarge, StorageChannel, VMParameterServer,
+)
+from repro.core.mlmodels import StudyModel, make_study_model, model_bytes  # noqa: F401
+from repro.core.patterns import allreduce, scatter_reduce  # noqa: F401
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime, RunResult  # noqa: F401

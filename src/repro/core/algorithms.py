@@ -1,0 +1,204 @@
+"""Distributed optimization algorithms of the study (§3.2.1, §4.2):
+GA-SGD, MA-SGD, consensus ADMM (convex models), EM k-means.
+
+Each algorithm is a pure strategy object: the SAME implementation runs under
+the FaaS and the IaaS runtime (paper principle 1), which only differ in how
+they time/merge the flat update vectors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.mlmodels import StudyModel
+from repro.data.synthetic import Dataset
+
+
+def _batches(part: Dataset, batch_size: int):
+    n = part.n
+    for lo in range(0, n, batch_size):
+        hi = min(lo + batch_size, n)
+        b = {"x": jnp.asarray(part.x[lo:hi]), "y": jnp.asarray(part.y[lo:hi])}
+        if part.sparse:
+            b["idx"] = jnp.asarray(part.idx[lo:hi])
+        yield b
+
+
+@dataclass
+class WorkerState:
+    part: Dataset
+    params: Any
+    extra: dict = field(default_factory=dict)
+
+
+class Algorithm:
+    name = "base"
+    convex_only = False
+
+    def __init__(self, lr: float = 0.1, batch_size: int = 4096):
+        self.lr = lr
+        self.batch_size = batch_size
+
+    def init_worker(self, model: StudyModel, params, part: Dataset) -> WorkerState:
+        return WorkerState(part, params)
+
+    def rounds_per_epoch(self, part: Dataset) -> int:
+        raise NotImplementedError
+
+    def rows_per_round(self, part: Dataset) -> int:
+        raise NotImplementedError
+
+    def local_update(self, model, st: WorkerState, rnd: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def apply_merged(self, model, st: WorkerState, merged: np.ndarray, w: int):
+        raise NotImplementedError
+
+    def eval_params(self, st: WorkerState):
+        return st.params
+
+
+class GASGD(Algorithm):
+    """Gradient averaging: sync every mini-batch."""
+    name = "ga_sgd"
+
+    def rounds_per_epoch(self, part):
+        return max(1, -(-part.n // self.batch_size))
+
+    def rows_per_round(self, part):
+        return min(self.batch_size, part.n)
+
+    def init_worker(self, model, params, part):
+        st = WorkerState(part, params)
+        st.extra["unravel"] = ravel_pytree(params)[1]
+        st.extra["bi"] = 0
+        return st
+
+    def local_update(self, model, st, rnd):
+        n = st.part.n
+        bs = min(self.batch_size, n)
+        lo = (rnd * bs) % max(n - bs + 1, 1)
+        b = {"x": jnp.asarray(st.part.x[lo:lo + bs]),
+             "y": jnp.asarray(st.part.y[lo:lo + bs])}
+        if st.part.sparse:
+            b["idx"] = jnp.asarray(st.part.idx[lo:lo + bs])
+        _, g = model.grad(st.params, b)
+        return np.asarray(ravel_pytree(g)[0], np.float32)
+
+    def apply_merged(self, model, st, merged, w):
+        flat, unravel = ravel_pytree(st.params)
+        st.params = unravel(flat - self.lr * jnp.asarray(merged))
+
+
+class MASGD(Algorithm):
+    """Model averaging: local SGD for `local_epochs`, then average params."""
+    name = "ma_sgd"
+
+    def __init__(self, lr=0.1, batch_size=4096, local_epochs: int = 1):
+        super().__init__(lr, batch_size)
+        self.local_epochs = local_epochs
+
+    def rounds_per_epoch(self, part):
+        return 1  # one sync per local_epochs epochs; epoch accounting below
+
+    def rows_per_round(self, part):
+        return part.n * self.local_epochs
+
+    def local_update(self, model, st, rnd):
+        params = st.params
+        for _ in range(self.local_epochs):
+            for b in _batches(st.part, self.batch_size):
+                _, g = model.grad(params, b)
+                flat, unravel = ravel_pytree(params)
+                params = unravel(flat - self.lr * ravel_pytree(g)[0])
+        st.params = params
+        return np.asarray(ravel_pytree(params)[0], np.float32)
+
+    def apply_merged(self, model, st, merged, w):
+        _, unravel = ravel_pytree(st.params)
+        st.params = unravel(jnp.asarray(merged))
+
+
+class ADMM(Algorithm):
+    """Consensus ADMM (Boyd et al.): x-update via `local_epochs` SGD epochs on
+    the augmented Lagrangian, z-update in closed form for L2, dual ascent.
+    Convex models only (the paper shows it fails for NNs, §4.2)."""
+    name = "admm"
+    convex_only = True
+
+    def __init__(self, lr=0.05, batch_size=4096, rho: float = 0.01,
+                 local_epochs: int = 10, l2: float = 1e-4):
+        super().__init__(lr, batch_size)
+        self.rho = rho
+        self.local_epochs = local_epochs
+        self.l2 = l2
+
+    def rounds_per_epoch(self, part):
+        return 1
+
+    def rows_per_round(self, part):
+        return part.n * self.local_epochs
+
+    def init_worker(self, model, params, part):
+        st = WorkerState(part, params)
+        flat = np.asarray(ravel_pytree(params)[0], np.float32)
+        st.extra["x"] = flat.copy()
+        st.extra["u"] = np.zeros_like(flat)
+        st.extra["z"] = flat.copy()
+        return st
+
+    def local_update(self, model, st, rnd):
+        _, unravel = ravel_pytree(st.params)
+        x = jnp.asarray(st.extra["x"])
+        zu = jnp.asarray(st.extra["z"] - st.extra["u"])
+        rho = self.rho
+        for _ in range(self.local_epochs):
+            for b in _batches(st.part, self.batch_size):
+                _, g = model.grad(unravel(x), b)
+                g = ravel_pytree(g)[0] + rho * (x - zu)
+                x = x - self.lr * g
+        st.extra["x"] = np.asarray(x, np.float32)
+        return st.extra["x"] + st.extra["u"]
+
+    def apply_merged(self, model, st, merged, w):
+        # merged = avg(x_i + u_i); z* = w*rho*merged / (l2 + w*rho)
+        z = merged * (w * self.rho / (self.l2 + w * self.rho))
+        st.extra["u"] = st.extra["u"] + st.extra["x"] - z
+        st.extra["z"] = z
+        _, unravel = ravel_pytree(st.params)
+        st.params = unravel(jnp.asarray(z))
+
+
+class EMKMeans(Algorithm):
+    """One EM round per epoch: merge (sums, counts), recompute centroids."""
+    name = "kmeans_em"
+
+    def rounds_per_epoch(self, part):
+        return 1
+
+    def rows_per_round(self, part):
+        return part.n
+
+    def local_update(self, model, st, rnd):
+        b = {"x": jnp.asarray(st.part.x), "y": jnp.asarray(st.part.y)}
+        s = model.local_stats(st.params, b)
+        return np.concatenate([np.asarray(s["sums"], np.float32).ravel(),
+                               np.asarray(s["counts"], np.float32)])
+
+    def apply_merged(self, model, st, merged, w):
+        k, d = st.params.shape
+        sums = (merged[: k * d] * w).reshape(k, d)   # undo pattern's averaging
+        counts = merged[k * d:] * w
+        st.params = jnp.where(counts[:, None] > 0,
+                              sums / np.maximum(counts[:, None], 1.0),
+                              st.params)
+
+
+def make_algorithm(name: str, **kw) -> Algorithm:
+    return {"ga_sgd": GASGD, "ma_sgd": MASGD, "admm": ADMM,
+            "kmeans_em": EMKMeans}[name](**kw)

@@ -1,0 +1,125 @@
+"""The paper's analytical cost/performance model (§5.3, Table 6).
+
+    FaaS(w) = t_F(w) + s/B_S3
+              + R_F * f_F(w) * [ (3w-2) * (m/w/B_ch + L_ch) + C_F/w ]
+    IaaS(w) = t_I(w) + s/min(B_S3, B_n)
+              + R_I * f_I(w) * [ (2w-2) * (m/w/B_n + L_n) + C_I/w ]
+
+(s = dataset MB, m = model MB, R = epochs to converge on one worker, f(w) =
+convergence scaling factor, C = single-worker epoch compute seconds.)
+
+Includes the Table 6 constants, a sampling-based epoch estimator (Kaoudi et
+al. [54], 10% sample), and the Q1/Q2 what-if studies (faster FaaS-IaaS
+link / GPU-FaaS pricing; hot data).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.runtimes import _T_FAAS, _T_IAAS, interp_startup
+
+# ------------------------------- Table 6 -------------------------------------
+TABLE6 = {
+    "t_F": dict(_T_FAAS),
+    "t_I": dict(_T_IAAS),
+    "B_S3": 65e6, "B_EBS": 1950e6,
+    "B_n": {"t2.medium": 120e6, "c5.large": 225e6},
+    "B_EC": {"cache.t3.medium": 630e6, "cache.m5.large": 1260e6},
+    "L_S3": 8e-2, "L_EBS": 3e-5,
+    "L_n": {"t2.medium": 5e-4, "c5.large": 1.5e-4},
+    "L_EC": {"cache.t3.medium": 1e-2},
+}
+
+
+@dataclass
+class Workload:
+    s_bytes: float          # dataset size
+    m_bytes: float          # model size
+    R: float                # single-worker epochs to target loss
+    C: float                # single-worker seconds per epoch
+    f: callable = field(default=lambda w: 1.0)  # convergence scaling
+
+
+def faas_time(wl: Workload, w: int, *, channel: str = "s3") -> float:
+    if channel == "s3":
+        b, lat = TABLE6["B_S3"], TABLE6["L_S3"]
+    else:
+        b, lat = TABLE6["B_EC"]["cache.t3.medium"], TABLE6["L_EC"]["cache.t3.medium"]
+    t = interp_startup(TABLE6["t_F"], w) + wl.s_bytes / w / TABLE6["B_S3"]
+    per_round = (3 * w - 2) * (wl.m_bytes / w / b + lat) + wl.C / w
+    return t + wl.R * wl.f(w) * per_round
+
+
+def iaas_time(wl: Workload, w: int, *, instance: str = "t2.medium") -> float:
+    bn = TABLE6["B_n"][instance]
+    ln = TABLE6["L_n"][instance]
+    t = interp_startup(TABLE6["t_I"], w) + wl.s_bytes / w / min(TABLE6["B_S3"], bn)
+    per_round = (2 * w - 2) * (wl.m_bytes / w / bn + ln) + wl.C / w
+    return t + wl.R * wl.f(w) * per_round
+
+
+def faas_cost(wl: Workload, w: int, t: float, gb: float = 3.0) -> float:
+    from repro.core import cost as pricing
+    return pricing.lambda_cost(gb, t * w, w)
+
+
+def iaas_cost(wl: Workload, w: int, t: float,
+              instance: str = "t2.medium") -> float:
+    from repro.core import cost as pricing
+    return pricing.ec2_cost(instance, t, w)
+
+
+# ----------------------------- epoch estimator --------------------------------
+
+def estimate_epochs(model, algo, ds, target_loss: float, *, sample_frac=0.1,
+                    max_epochs=100, seed=0) -> float:
+    """Sampling-based estimator [54]: train on a 10% sample single-worker,
+    count epochs to the target; also calibrates C (epoch seconds)."""
+    import jax
+    from repro.data.synthetic import Dataset
+
+    n = max(int(ds.n * sample_frac), 64)
+    sub = Dataset(ds.name, ds.x[:n], ds.y[:n],
+                  None if ds.idx is None else ds.idx[:n], ds.dim, ds.n_classes)
+    params = model.init(jax.random.key(seed))
+    st = algo.init_worker(model, params, sub)
+    for ep in range(1, max_epochs + 1):
+        upd = algo.local_update(model, st, ep - 1)
+        algo.apply_merged(model, st, upd, 1)
+        if model.eval_loss(algo.eval_params(st), sub) <= target_loss:
+            return float(ep)
+    return float(max_epochs)
+
+
+# ------------------------------- what-ifs (§5.3.1) ----------------------------
+
+def hybridps_time(wl: Workload, w: int, *, bandwidth: float = 40.5e6,
+                  update_unit: float = 2.7 / 75e6) -> float:
+    """Hybrid VM-PS FaaS: 2 transfers + PS update per round."""
+    t = interp_startup(TABLE6["t_F"], w) + wl.s_bytes / w / TABLE6["B_S3"]
+    per_round = (2 * wl.m_bytes / bandwidth
+                 + update_unit * wl.m_bytes * w + wl.C / w)
+    return t + wl.R * wl.f(w) * per_round
+
+
+def q1_fast_hybrid(wl: Workload, w: int) -> dict:
+    """Q1: 10 GB/s FaaS<->VM link, no serialization bottleneck."""
+    return {
+        "hybrid_now": hybridps_time(wl, w),
+        "hybrid_10GBps": hybridps_time(wl, w, bandwidth=10e9, update_unit=0.0),
+        "faas_s3": faas_time(wl, w),
+        "iaas": iaas_time(wl, w),
+    }
+
+
+def q2_hot_data(wl: Workload, w: int) -> dict:
+    """Q2: data pre-resident on a VM; everyone reads from that VM."""
+    bn = TABLE6["B_n"]["t2.medium"]
+    iaas_hot = iaas_time(wl, w) - wl.s_bytes / w / TABLE6["B_S3"] \
+        + wl.s_bytes / w / bn
+    # FaaS must still pull from the VM at Lambda-to-EC2 speed (~40.5 MB/s)
+    faas_hot = faas_time(wl, w) - wl.s_bytes / w / TABLE6["B_S3"] \
+        + wl.s_bytes / w / 40.5e6
+    return {"iaas_hot": iaas_hot, "faas_hot": faas_hot}

@@ -1,0 +1,12 @@
+"""FaaS runtime (LambdaML) -- named entry point per DESIGN.md §5.
+
+The implementation lives in :mod:`repro.core.runtimes` (FaaS and IaaS share
+the algorithm/partition/metering machinery; keeping them in one module keeps
+the "same algorithm both sides" guarantee structural).  This module is the
+documented import surface:
+
+    from repro.core.faas import FaaSRuntime, LIFETIME
+"""
+from repro.core.runtimes import (  # noqa: F401
+    FaaSRuntime, LIFETIME, LIFETIME_MARGIN, RunResult, interp_startup,
+)

@@ -1,0 +1,3 @@
+"""IaaS runtime (distributed-PyTorch-style VM cluster) -- named entry point
+per DESIGN.md §5; implementation in :mod:`repro.core.runtimes`."""
+from repro.core.runtimes import IaaSRuntime, RunResult  # noqa: F401

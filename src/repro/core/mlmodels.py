@@ -1,0 +1,207 @@
+"""The paper's study models in JAX: LR, SVM, k-means, and MLP stand-ins sized
+to MobileNet (12 MB) / ResNet50 (89 MB) parameter footprints.
+
+All are expressed against a common functional interface used by both the
+FaaS and IaaS runtimes (paper principle: *same algorithm both sides*):
+
+    init(key, ds)                  -> params (pytree)
+    grad(params, batch)            -> (loss, grads)         # SGD family
+    local_stats(params, batch)     -> stats                 # EM (k-means)
+    apply_stats(params, stats)     -> params
+    eval_loss(params, ds)          -> float
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import Dataset
+
+L2 = 1e-4
+
+
+def _dot(params_w, batch):
+    """Dense or sparse x.w"""
+    if "idx" in batch:
+        return jnp.sum(batch["x"] * params_w[batch["idx"]], axis=1)
+    return batch["x"] @ params_w
+
+
+def _batch_of(ds: Dataset, lo: int, hi: int) -> dict:
+    b = {"x": jnp.asarray(ds.x[lo:hi]), "y": jnp.asarray(ds.y[lo:hi])}
+    if ds.sparse:
+        b["idx"] = jnp.asarray(ds.idx[lo:hi])
+    return b
+
+
+@dataclass(frozen=True)
+class StudyModel:
+    name: str
+    init: Callable
+    grad: Optional[Callable] = None
+    eval_loss: Optional[Callable] = None
+    local_stats: Optional[Callable] = None
+    apply_stats: Optional[Callable] = None
+    convex: bool = True
+    flops_per_row: float = 0.0  # analytic compute model (per data row)
+
+
+# ------------------------------------------------------------------ LR -------
+
+def make_lr(ds: Dataset) -> StudyModel:
+    d = ds.d
+
+    def init(key):
+        return jnp.zeros((d,), jnp.float32)
+
+    @jax.jit
+    def loss_fn(w, batch):
+        z = _dot(w, batch) * batch["y"]
+        # paper reports plain logistic loss; L2 only regularizes the grad path
+        return jnp.mean(jnp.logaddexp(0.0, -z)) + 0.5 * L2 * jnp.sum(w * w)
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    def eval_loss(w, dset: Dataset, max_rows: int = 50_000):
+        b = _batch_of(dset, 0, min(dset.n, max_rows))
+        z = _dot(w, b) * b["y"]
+        return float(jnp.mean(jnp.logaddexp(0.0, -z)))
+
+    nnz = ds.x.shape[1] if ds.sparse else d
+    return StudyModel("lr", init, grad, eval_loss, convex=True,
+                      flops_per_row=4.0 * nnz)
+
+
+# ------------------------------------------------------------------ SVM ------
+
+def make_svm(ds: Dataset) -> StudyModel:
+    d = ds.d
+
+    def init(key):
+        return jnp.zeros((d,), jnp.float32)
+
+    @jax.jit
+    def loss_fn(w, batch):
+        z = _dot(w, batch) * batch["y"]
+        return jnp.mean(jnp.maximum(0.0, 1.0 - z)) + 0.5 * L2 * jnp.sum(w * w)
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    def eval_loss(w, dset: Dataset, max_rows: int = 50_000):
+        b = _batch_of(dset, 0, min(dset.n, max_rows))
+        z = _dot(w, b) * b["y"]
+        return float(jnp.mean(jnp.maximum(0.0, 1.0 - z)))
+
+    nnz = ds.x.shape[1] if ds.sparse else d
+    return StudyModel("svm", init, grad, eval_loss, convex=True,
+                      flops_per_row=4.0 * nnz)
+
+
+# --------------------------------------------------------------- k-means -----
+
+def make_kmeans(ds: Dataset, k: int = 10) -> StudyModel:
+    d = ds.d
+    if ds.sparse:
+        raise ValueError("kmeans study model requires dense features")
+
+    def init(key):
+        i = jax.random.choice(key, ds.n, (k,), replace=False)
+        return jnp.asarray(ds.x[np.asarray(i)])
+
+    @jax.jit
+    def local_stats(centers, batch):
+        x = batch["x"]
+        d2 = (jnp.sum(x * x, 1)[:, None] - 2 * x @ centers.T
+              + jnp.sum(centers * centers, 1)[None, :])
+        a = jnp.argmin(d2, axis=1)
+        one = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        return {"sums": one.T @ x, "counts": one.sum(0),
+                "sse": jnp.sum(jnp.min(d2, axis=1))}
+
+    @jax.jit
+    def apply_stats(centers, stats):
+        c = stats["counts"][:, None]
+        return jnp.where(c > 0, stats["sums"] / jnp.maximum(c, 1.0), centers)
+
+    def eval_loss(centers, dset: Dataset, max_rows: int = 50_000):
+        b = _batch_of(dset, 0, min(dset.n, max_rows))
+        s = local_stats(centers, b)
+        return float(s["sse"] / b["x"].shape[0])
+
+    return StudyModel("kmeans", init, local_stats=local_stats,
+                      apply_stats=apply_stats, eval_loss=eval_loss,
+                      convex=False, flops_per_row=3.0 * d * k)
+
+
+# ------------------------------------------------ NN stand-ins (MN / RN) -----
+
+def _mlp_sizes(d_in: int, n_out: int, target_mb: float):
+    """Pick one hidden width so total fp32 params ~= target_mb."""
+    target = target_mb * 1e6 / 4.0
+    # params ~ d_in*h + h*h + h*n_out
+    a, b, c = 1.0, d_in + n_out, -target
+    h = int((-b + (b * b - 4 * a * c) ** 0.5) / 2)
+    return (d_in, h, h, n_out)
+
+
+def make_mlp(ds: Dataset, target_mb: float, name: str) -> StudyModel:
+    """MobileNet-12MB / ResNet50-89MB stand-ins (see DESIGN.md: the paper's
+    CNNs are stand-ins sized by parameter bytes, which is what drives the
+    communication study)."""
+    sizes = _mlp_sizes(ds.d, ds.n_classes, target_mb)
+
+    def init(key):
+        ks = jax.random.split(key, len(sizes) - 1)
+        return [(jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
+                 jnp.zeros((b,))) for k, (a, b) in
+                zip(ks, zip(sizes[:-1], sizes[1:]))]
+
+    def apply(params, x):
+        for i, (w, b) in enumerate(params):
+            x = x @ w + b
+            if i < len(params) - 1:
+                x = jax.nn.relu(x)
+        return x
+
+    @jax.jit
+    def loss_fn(params, batch):
+        logits = apply(params, batch["x"])
+        y = batch["y"].astype(jnp.int32)
+        if ds.n_classes == 2:
+            y = ((y + 1) // 2).astype(jnp.int32)  # {-1,1} -> {0,1}
+            logits2 = jnp.stack([jnp.zeros_like(logits[:, 0]), logits[:, 0]], 1) \
+                if logits.shape[-1] == 1 else logits
+            return -jnp.mean(jax.nn.log_softmax(logits2)[jnp.arange(y.shape[0]), y])
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    def eval_loss(params, dset: Dataset, max_rows: int = 20_000):
+        return float(loss_fn(params, _batch_of(dset, 0, min(dset.n, max_rows))))
+
+    flops = 6.0 * sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
+    return StudyModel(name, init, grad, eval_loss, convex=False,
+                      flops_per_row=flops)
+
+
+def model_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def make_study_model(name: str, ds: Dataset, **kw) -> StudyModel:
+    if name == "lr":
+        return make_lr(ds)
+    if name == "svm":
+        return make_svm(ds)
+    if name == "kmeans":
+        return make_kmeans(ds, **kw)
+    if name == "mobilenet":
+        return make_mlp(ds, 12.0, "mobilenet")
+    if name == "resnet50":
+        return make_mlp(ds, 89.0, "resnet50")
+    raise KeyError(name)

@@ -1,0 +1,325 @@
+"""FaaS and IaaS training runtimes (paper §3.3, §5).
+
+Both runtimes execute the REAL optimization math in JAX (identical numerics,
+so FaaS and IaaS converge identically for the same algorithm -- the paper's
+statistical/system efficiency split) while metering simulated wall-clock and
+dollars from the measured constants of Tables 2/6 and the pricing model.
+
+FaaS specifics implemented here:
+- starter->worker hierarchical invocation (startup t^F(w)),
+- 15-minute worker lifetime: checkpoint to the channel + re-invocation,
+- BSP via the two-phase merge/update pattern, ASP via SIREN-style global
+  model overwrite (event-driven, stale reads emerge naturally),
+- straggler injection + optional backup-invocation mitigation,
+- pure-FaaS channels (S3/Memcached/Redis/DynamoDB) or hybrid VM-PS.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import cost as pricing
+from repro.core.algorithms import Algorithm
+from repro.core.channels import (
+    ChannelItemTooLarge, StorageChannel, VMParameterServer, nbytes,
+)
+from repro.core.mlmodels import StudyModel, model_bytes
+from repro.core.patterns import PATTERNS
+from repro.data.synthetic import Dataset, partition
+
+# Table 6 startup constants (seconds) -- linear interpolation between points
+_T_FAAS = {1: 1.2, 10: 1.2, 50: 11.0, 100: 18.0, 200: 35.0, 300: 50.0}
+_T_IAAS = {1: 100.0, 10: 132.0, 50: 160.0, 100: 292.0, 200: 606.0}
+B_S3 = 65e6
+L_S3 = 8e-2
+B_NET = {"t2.medium": 120e6, "c5.large": 225e6, "c5.xlarge": 600e6,
+         "t2.2xlarge": 120e6, "c5.4xlarge": 1250e6, "m5a.12xlarge": 1250e6,
+         "g3s.xlarge": 1250e6, "g4dn.xlarge": 1250e6}
+L_NET = {"t2.medium": 5e-4, "c5.large": 1.5e-4}
+
+LIFETIME = 900.0          # Lambda max duration (s)
+LIFETIME_MARGIN = 20.0
+
+
+def interp_startup(table: dict, w: int) -> float:
+    ks = sorted(table)
+    if w <= ks[0]:
+        return table[ks[0]]
+    for a, b in zip(ks, ks[1:]):
+        if w <= b:
+            f = (w - a) / (b - a)
+            return table[a] + f * (table[b] - table[a])
+    return table[ks[-1]] * w / ks[-1]
+
+
+@dataclass
+class RunResult:
+    system: str
+    algorithm: str
+    workers: int
+    history: list = field(default_factory=list)   # [(sim_time_s, loss)]
+    rounds: int = 0
+    sim_time: float = 0.0
+    cost: float = 0.0
+    breakdown: dict = field(default_factory=dict)
+    converged: bool = False
+    error: str = ""
+
+    @property
+    def final_loss(self) -> float:
+        return self.history[-1][1] if self.history else float("nan")
+
+    def to_dict(self):
+        return {"system": self.system, "algorithm": self.algorithm,
+                "workers": self.workers, "rounds": self.rounds,
+                "sim_time_s": round(self.sim_time, 2),
+                "cost_usd": round(self.cost, 4),
+                "final_loss": self.final_loss,
+                "converged": self.converged,
+                "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
+                "error": self.error}
+
+
+def _speeds(w: int, straggler: float, seed: int = 0) -> np.ndarray:
+    """Per-worker relative compute slowdown (1.0 = nominal)."""
+    rng = np.random.default_rng(seed)
+    s = np.exp(rng.normal(0.0, 0.05, w))
+    if straggler > 1.0:
+        s[rng.integers(0, w)] *= straggler
+    return s
+
+
+@dataclass
+class FaaSRuntime:
+    """LambdaML."""
+    workers: int = 10
+    channel: str = "s3"                  # s3|memcached|redis|dynamodb|vmps
+    pattern: str = "allreduce"           # allreduce|scatter_reduce
+    sync: str = "bsp"                    # bsp|asp
+    lambda_gb: float = 3.0
+    straggler: float = 1.0
+    backup_invocations: bool = False     # straggler mitigation (beyond paper)
+    lifetime: float = LIFETIME
+    seed: int = 0
+
+    def worker_flops(self) -> float:
+        return (pricing.LAMBDA_3GB_FLOPS if self.lambda_gb >= 3.0
+                else pricing.LAMBDA_1GB_FLOPS)
+
+    def train(self, model: StudyModel, algo: Algorithm, ds_train: Dataset,
+              ds_val: Dataset, *, target_loss: float | None = None,
+              max_epochs: int = 10, eval_every: int = 1) -> RunResult:
+        import jax
+
+        w = self.workers
+        res = RunResult("faas", algo.name, w)
+        parts = partition(ds_train, w)
+        params0 = model.init(jax.random.key(self.seed))
+        states = [algo.init_worker(model, params0, p) for p in parts]
+        part_bytes = max(p.nbytes for p in parts)
+        mbytes = model_bytes(params0)
+        if 4 * mbytes * self.lambda_gb == 0 or mbytes > self.lambda_gb * 1e9 / 3:
+            res.error = "model exceeds Lambda memory"
+            return res
+        speeds = _speeds(w, self.straggler, self.seed)
+        if self.backup_invocations:
+            # backup lambda races the straggler; effective speed = min(x, p50)
+            speeds = np.minimum(speeds, np.median(speeds))
+
+        hybrid = self.channel == "vmps"
+        chan = StorageChannel("s3" if hybrid else self.channel)
+        ps = VMParameterServer() if hybrid else None
+
+        t_start = interp_startup(_T_FAAS, w)
+        if hybrid:
+            t_start = max(t_start, ps.startup)
+        t_start = max(t_start, chan.spec.startup)
+        t_load = L_S3 + part_bytes / B_S3
+        clock = np.full(w, t_start + t_load)
+        res.breakdown = {"startup": t_start, "load": t_load,
+                         "compute": 0.0, "comm": 0.0, "checkpoint": 0.0}
+        invoked_at = clock.copy()
+        invocations = w
+        flops = self.worker_flops()
+        rows = algo.rows_per_round(parts[0])
+        c_round = rows * model.flops_per_row / flops
+
+        if self.sync == "asp":
+            return self._train_asp(model, algo, states, parts, ds_val, chan,
+                                   res, clock, c_round, speeds, target_loss,
+                                   max_epochs, invocations)
+
+        rpe = algo.rounds_per_epoch(parts[0])
+        epoch_rows = parts[0].n
+        total_rounds = max_epochs * rpe * max(1, algo.rows_per_round(parts[0])
+                                              // max(epoch_rows, 1)) \
+            if algo.name == "ga_sgd" else max_epochs
+        if algo.name == "ga_sgd":
+            total_rounds = max_epochs * rpe
+
+        try:
+            for rnd in range(total_rounds):
+                # lifetime management: checkpoint + re-invoke if needed
+                est = c_round * float(np.max(speeds)) + 5.0
+                for i in range(w):
+                    if clock[i] - invoked_at[i] + est > self.lifetime - LIFETIME_MARGIN:
+                        dt = chan.put(f"ckpt/{i}", np.zeros(mbytes // 4,
+                                                            np.float32))
+                        restart = interp_startup(_T_FAAS, 1)
+                        _, dtg = chan.get(f"ckpt/{i}")
+                        clock[i] += dt + restart + dtg
+                        res.breakdown["checkpoint"] += dt + restart + dtg
+                        invoked_at[i] = clock[i]
+                        invocations += 1
+
+                updates = [algo.local_update(model, st, rnd) for st in states]
+                c = c_round * speeds
+                clock += c
+                res.breakdown["compute"] += float(np.mean(c))
+                if hybrid:
+                    size = updates[0].nbytes
+                    dt = ps.push_pull_round(size, w)
+                    merged = np.mean(updates, axis=0)
+                    clock += dt
+                    res.breakdown["comm"] += dt
+                else:
+                    merged, times = PATTERNS[self.pattern](
+                        chan, updates, f"r{rnd}")
+                    base = float(np.max(clock))  # BSP barrier
+                    res.breakdown["comm"] += float(np.mean(times))
+                    clock = base + times
+                for st in states:
+                    algo.apply_merged(model, st, merged, w)
+                res.rounds += 1
+                if rnd % eval_every == 0 or rnd == total_rounds - 1:
+                    loss = model.eval_loss(algo.eval_params(states[0]), ds_val)
+                    res.history.append((float(np.max(clock)), loss))
+                    if target_loss is not None and loss <= target_loss:
+                        res.converged = True
+                        break
+        except ChannelItemTooLarge as e:
+            res.error = str(e)
+            return res
+
+        res.sim_time = float(np.max(clock))
+        res.cost = (pricing.lambda_cost(self.lambda_gb,
+                                        float(np.sum(clock)), invocations)
+                    + chan.service_cost(res.sim_time)
+                    + (pricing.ec2_cost(ps.instance, res.sim_time)
+                       if hybrid else 0.0))
+        return res
+
+    # ---------------------------------------------------------------- ASP ----
+    def _train_asp(self, model, algo, states, parts, ds_val, chan, res,
+                   clock, c_round, speeds, target_loss, max_epochs,
+                   invocations):
+        """SIREN-style: one global model on storage, workers run free."""
+        import jax
+        from jax.flatten_util import ravel_pytree
+
+        w = self.workers
+        flat0, unravel = ravel_pytree(states[0].params)
+        chan.put("global", np.asarray(flat0, np.float32))
+        rpe = algo.rounds_per_epoch(parts[0])
+        total = max_epochs * rpe * w
+        heap = [(clock[i], i) for i in range(w)]
+        heapq.heapify(heap)
+        done = 0
+        while done < total:
+            t, i = heapq.heappop(heap)
+            g_flat, dt1 = chan.get("global")
+            states[i].params = unravel(g_flat)
+            upd = algo.local_update(model, states[i], done)
+            # SGD step on the (possibly stale) global model
+            T = max(done // (rpe * w), 1)
+            lr = algo.lr / np.sqrt(T)  # 1/sqrt(T) decay (paper §4.5)
+            new = g_flat - lr * upd
+            dt2 = chan.put("global", new.astype(np.float32))
+            c = c_round * speeds[i]
+            t += dt1 + c + dt2
+            res.breakdown["comm"] += dt1 + dt2
+            res.breakdown["compute"] += c / w
+            heapq.heappush(heap, (t, i))
+            done += 1
+            res.rounds = done
+            if done % (w * max(rpe // 4, 1)) == 0 or done == total:
+                cur, _ = chan.get("global")
+                loss = model.eval_loss(unravel(cur), ds_val)
+                res.history.append((t, loss))
+                if target_loss is not None and loss <= target_loss:
+                    res.converged = True
+                    break
+        res.sim_time = max(t for t, _ in heap) if heap else 0.0
+        res.cost = (pricing.lambda_cost(self.lambda_gb, res.sim_time * w,
+                                        invocations)
+                    + chan.service_cost(res.sim_time))
+        return res
+
+
+@dataclass
+class IaaSRuntime:
+    """Distributed-PyTorch-style VM cluster (strong IaaS baseline)."""
+    workers: int = 10
+    instance: str = "t2.medium"
+    gpu: bool = False
+    straggler: float = 1.0
+    seed: int = 0
+
+    def worker_flops(self, model: StudyModel) -> float:
+        if self.gpu and not model.convex:
+            return pricing.VM_GPU_FLOPS.get(self.instance, 150e9)
+        return pricing.VM_CPU_FLOPS
+
+    def train(self, model: StudyModel, algo: Algorithm, ds_train: Dataset,
+              ds_val: Dataset, *, target_loss: float | None = None,
+              max_epochs: int = 10, eval_every: int = 1,
+              data_local: bool = False) -> RunResult:
+        import jax
+
+        w = self.workers
+        res = RunResult("iaas" + ("-gpu" if self.gpu else ""), algo.name, w)
+        parts = partition(ds_train, w)
+        params0 = model.init(jax.random.key(self.seed))
+        states = [algo.init_worker(model, params0, p) for p in parts]
+        mbytes = model_bytes(params0)
+        speeds = _speeds(w, self.straggler, self.seed)
+        bn = B_NET.get(self.instance, 120e6)
+        ln = L_NET.get(self.instance, 5e-4)
+
+        t_start = interp_startup(_T_IAAS, w)
+        part_bytes = max(p.nbytes for p in parts)
+        t_load = part_bytes / (B_NET[self.instance] if data_local else B_S3)
+        clock = np.full(w, t_start + t_load)
+        res.breakdown = {"startup": t_start, "load": t_load,
+                         "compute": 0.0, "comm": 0.0}
+        flops = self.worker_flops(model)
+        rows = algo.rows_per_round(parts[0])
+        c_round = rows * model.flops_per_row / flops
+        rpe = algo.rounds_per_epoch(parts[0])
+        total_rounds = max_epochs * rpe
+
+        for rnd in range(total_rounds):
+            updates = [algo.local_update(model, st, rnd) for st in states]
+            merged = np.mean(updates, axis=0)
+            c = c_round * speeds
+            # MPI AllReduce (paper model): (2w-2) * (m/w/Bn + Ln)
+            t_comm = (2 * w - 2) * (updates[0].nbytes / w / bn + ln) if w > 1 else 0.0
+            clock = float(np.max(clock + c)) + t_comm
+            clock = np.full(w, clock)
+            res.breakdown["compute"] += float(np.mean(c))
+            res.breakdown["comm"] += t_comm
+            for st in states:
+                algo.apply_merged(model, st, merged, w)
+            res.rounds += 1
+            if rnd % eval_every == 0 or rnd == total_rounds - 1:
+                loss = model.eval_loss(algo.eval_params(states[0]), ds_val)
+                res.history.append((float(np.max(clock)), loss))
+                if target_loss is not None and loss <= target_loss:
+                    res.converged = True
+                    break
+
+        res.sim_time = float(np.max(clock))
+        res.cost = pricing.ec2_cost(self.instance, res.sim_time, w)
+        return res

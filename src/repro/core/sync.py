@@ -1,0 +1,14 @@
+"""Synchronization protocols (paper §3.2.4) -- named entry point.
+
+- BSP: the two-phase merge/update protocol is implemented by the pattern
+  functions (:mod:`repro.core.patterns`) -- named files + polling semantics,
+  barrier = the max over per-worker completion times.
+- ASP: SIREN-style global-model overwrite is the event-driven loop in
+  :meth:`repro.core.runtimes.FaaSRuntime._train_asp` (select with
+  ``FaaSRuntime(sync="asp")``).
+"""
+from repro.core.patterns import PATTERNS, allreduce, scatter_reduce  # noqa: F401
+from repro.core.runtimes import FaaSRuntime  # noqa: F401
+
+BSP = "bsp"
+ASP = "asp"

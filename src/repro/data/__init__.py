@@ -1,0 +1,5 @@
+"""Data pipeline: paper-study synthetic datasets + LM token streams."""
+from repro.data.synthetic import (  # noqa: F401
+    DATASETS, Dataset, make_dataset, partition,
+)
+from repro.data.tokens import TokenStream, lm_batches  # noqa: F401

@@ -1,0 +1,431 @@
+"""Post-SPMD HLO cost analyzer with while-loop (scan) trip-count accounting.
+
+Why this exists: ``compiled.cost_analysis()`` visits each HLO instruction
+ONCE -- a model whose layers live inside a ``lax.scan`` (as all ours do, to
+keep 512-device compiles fast) under-counts FLOPs/bytes/collectives by the
+layer count.  This module parses the partitioned HLO text into a computation
+graph and evaluates costs with:
+
+- while bodies multiplied by their (statically parsed) trip count,
+- fusion-aware byte accounting (only fusion operands/results touch HBM;
+  internal instructions are free),
+- dot FLOPs recomputed exactly from operand shapes + contraction dims,
+- collective operand bytes per kind (all-gather/-reduce/reduce-scatter/
+  all-to-all/collective-permute), with reduce-scatter counted at its
+  pre-scatter size and all-gather at its per-shard input size,
+- in-place dynamic-update-slice (counts the updated slice, not the buffer).
+
+Shapes in post-SPMD HLO are per-device, so every number is per-device.
+Validated in tests against unrolled compiles of the same model.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16, "f32": 4, "s32": 4,
+    "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "s8": 1, "u8": 1, "pred": 1, "s4": 0.5,
+    "u4": 0.5, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"([a-z0-9\-]+)\((.*)$")
+_CALLED_RE = {
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+}
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_GROUPS_LEGACY_FULL_RE = re.compile(r"replica_groups=\{(\{[0-9,\{\} ]+\})\}")
+_GROUPS_LEGACY_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+_DIMS_RE = {
+    "lc": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "rc": re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}"),
+    "lb": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+    "rb": re.compile(r"rhs_batch_dims=\{([0-9,]*)\}"),
+}
+
+# elementwise-ish opcodes we charge 1 flop / output element
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "clamp", "power",
+}
+_TRANSCEND = {"exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+              "sine", "cosine", "exponential-minus-one", "log-plus-one",
+              "atan2", "cbrt", "erf"}
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator"}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[float, float]:
+    """Total (elements, bytes) over all array shapes in a (maybe tuple) shape."""
+    elems = 0.0
+    bts = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bts += n * _DTYPE_BYTES[dt]
+    return elems, bts
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str                      # operand list + attrs (raw tail)
+    operands: list = field(default_factory=list)
+
+
+def _split_operands(rest: str) -> tuple[list[str], str]:
+    """Split 'op1, op2, ...), attrs' -> ([operand names], attrs)."""
+    depth = 1
+    buf, ops = [], []
+    i = 0
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                break
+        if ch == "," and depth == 1:
+            ops.append("".join(buf).strip())
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        ops.append("".join(buf).strip())
+    attrs = rest[i + 1:]
+    names = []
+    for o in ops:
+        m = re.search(r"%?([\w\.\-]+)\s*$", o)
+        names.append(m.group(1) if m else o)
+    return names, attrs
+
+
+class HloCost:
+    def __init__(self, hlo_text: str, pod_size: int | None = None):
+        """pod_size: devices per pod (leading mesh axis); enables cross-pod
+        collective classification (bytes moved over the inter-pod DCN)."""
+        self.comps: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self.pod_size = pod_size
+        self._parse(hlo_text)
+        self._memo_flops_only: dict[str, float] = {}
+        self._memo_full: dict[str, dict] = {}
+
+    def _spans_pods(self, ins: Instr) -> bool:
+        """True if any replica group mixes devices from different pods."""
+        if not self.pod_size:
+            return False
+        P = self.pod_size
+        m = _GROUPS_IOTA_RE.search(ins.rest)
+        if m:
+            import numpy as _np
+            g, s_ = int(m.group(1)), int(m.group(2))
+            dims = [int(x) for x in m.group(3).split(",")]
+            ids = _np.arange(int(_np.prod(dims))).reshape(dims)
+            if m.group(4):
+                ids = ids.transpose([int(x) for x in m.group(4).split(",")])
+            groups = ids.reshape(g, s_)
+            pods = groups // P
+            return bool((pods != pods[:, :1]).any())
+        m = _GROUPS_LEGACY_FULL_RE.search(ins.rest)
+        if m:
+            for grp in m.group(1).split("},{"):
+                ids = [int(x) for x in grp.replace("{", "").replace("}", "")
+                       .split(",") if x.strip()]
+                if len({i // P for i in ids}) > 1:
+                    return True
+            return False
+        m = re.search(r"source_target_pairs=\{(.+?)\}\}", ins.rest)
+        if m:  # collective-permute: spans pods iff any (src, dst) pair does
+            for pair in (m.group(1) + "}").split("},{"):
+                ids = [int(x) for x in pair.replace("{", "").replace("}", "")
+                       .split(",") if x.strip()]
+                if len(ids) == 2 and ids[0] // P != ids[1] // P:
+                    return True
+            return False
+        return True  # unknown format: be conservative
+
+    # ------------------------------------------------------------ parsing ----
+    def _parse(self, text: str):
+        cur: list[Instr] | None = None
+        cur_name = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur_name = m.group(1)
+                    cur = []
+                    if raw.lstrip().startswith("ENTRY"):
+                        self.entry = cur_name
+                continue
+            if line.strip() == "}":
+                self.comps[cur_name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, shape, opcode, rest = m.groups()
+                ops, attrs = _split_operands(rest)
+                ins = Instr(name, shape, opcode, rest, ops)
+                cur.append(ins)
+
+    def _instr_map(self, comp: str) -> dict[str, Instr]:
+        return {i.name: i for i in self.comps.get(comp, [])}
+
+    # --------------------------------------------------------- primitives ----
+    def _operand_shape(self, comp: str, opname: str) -> str:
+        ins = self._instr_map(comp).get(opname)
+        return ins.shape if ins else ""
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        lhs = self._operand_shape(comp, ins.operands[0])
+        m = _SHAPE_RE.search(lhs)
+        if not m:
+            return 0.0
+        ldims = [int(d) for d in m.group(2).split(",") if d]
+        dims = {}
+        for k, rx in _DIMS_RE.items():
+            mm = rx.search(ins.rest)
+            dims[k] = [int(d) for d in mm.group(1).split(",") if d] if mm else []
+        contract = 1
+        for d in dims["lc"]:
+            if d < len(ldims):
+                contract *= ldims[d]
+        out_elems, _ = _shape_elems_bytes(ins.shape)
+        return 2.0 * out_elems * contract
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Parse the loop bound from a scan-style condition computation.
+
+        lax.scan lowers to ``while(cond: i < L)``; post-optimization the
+        compare is usually fused, so we take the max scalar s32 constant in
+        the condition computation (the only constants there are loop bounds).
+        Validated against known layer counts in tests.
+        """
+        best = None
+        for ins in self.comps.get(cond_comp, []):
+            if ins.opcode == "constant" and ins.shape.startswith("s32[]"):
+                mc = _CONST_RE.search("constant(" + ins.rest)
+                if mc:
+                    v = int(mc.group(1))
+                    if v > 0:
+                        best = v if best is None else max(best, v)
+        return best if best else 1
+
+    def _group_size(self, ins: Instr) -> int:
+        m = _GROUPS_RE.search(ins.rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LEGACY_RE.search(ins.rest)
+        if m:
+            return len(m.group(1).split(","))
+        return 1
+
+    _LAYOUT_ONLY = {"parameter", "convert", "transpose", "copy", "reshape",
+                    "broadcast", "bitcast"}
+
+    def _is_convert_fusion(self, comp: str) -> bool:
+        """True if the fused computation only converts/relayouts (no math).
+
+        XLA-CPU has no native bf16 matmul: every dot's operands/results are
+        wrapped in convert fusions that would NOT exist on TPU.  These are
+        tracked separately so the roofline can report a TPU-dtype-adjusted
+        memory term (raw numbers are always reported too)."""
+        instrs = self.comps.get(comp, [])
+        if not instrs:
+            return False
+        return all(i.opcode in self._LAYOUT_ONLY for i in instrs)
+
+    # ------------------------------------------------------- flops-only ------
+    def _flops_only(self, comp: str) -> float:
+        """FLOPs inside a fused computation (no bytes)."""
+        if comp in self._memo_flops_only:
+            return self._memo_flops_only[comp]
+        total = 0.0
+        for ins in self.comps.get(comp, []):
+            if ins.opcode == "dot":
+                total += self._dot_flops(comp, ins)
+            elif ins.opcode in _ARITH:
+                e, _ = _shape_elems_bytes(ins.shape)
+                total += e
+            elif ins.opcode in _TRANSCEND:
+                e, _ = _shape_elems_bytes(ins.shape)
+                total += 4 * e
+            elif ins.opcode == "fusion":
+                m = _CALLED_RE["calls"].search(ins.rest)
+                if m:
+                    total += self._flops_only(m.group(1))
+            elif ins.opcode == "reduce":
+                e, _ = _shape_elems_bytes(
+                    self._operand_shape(comp, ins.operands[0]))
+                total += e
+        self._memo_flops_only[comp] = total
+        return total
+
+    # ------------------------------------------------------------- full ------
+    def _operand_bytes(self, comp: str, ins: Instr) -> float:
+        b = 0.0
+        imap = self._instr_map(comp)
+        for op in ins.operands:
+            src = imap.get(op)
+            if src is not None:
+                _, ob = _shape_elems_bytes(src.shape)
+                b += ob
+        return b
+
+    def comp_cost(self, comp: str) -> dict:
+        if comp in self._memo_full:
+            return self._memo_full[comp]
+        c = {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
+             "scope_bytes": 0.0, "scope_flops": 0.0, "convert_bytes": 0.0,
+             "cross_pod_bytes": 0.0,
+             "coll": {k: {"count": 0, "operand_bytes": 0.0} for k in COLLECTIVES}}
+        for ins in self.comps.get(comp, []):
+            op = ins.opcode
+            base = op.replace("-start", "").replace("-done", "")
+            if op in _FREE:
+                continue
+            if op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                _, rb = _shape_elems_bytes(ins.shape)
+                s = self._group_size(ins)
+                if base == "all-gather":
+                    b = rb / max(s, 1)
+                elif base == "reduce-scatter":
+                    b = rb * s
+                else:
+                    b = rb
+                c["coll"][base]["count"] += 1
+                c["coll"][base]["operand_bytes"] += b
+                c["coll_bytes"] += b
+                if self._spans_pods(ins):
+                    c["cross_pod_bytes"] += b
+                c["bytes"] += rb  # it also touches memory
+                continue
+            if op == "while":
+                body = _CALLED_RE["body"].search(ins.rest)
+                cond = _CALLED_RE["condition"].search(ins.rest)
+                trips = self._trip_count(cond.group(1)) if cond else 1
+                if body:
+                    sub = self.comp_cost(body.group(1))
+                    for k in ("flops", "bytes", "coll_bytes", "scope_bytes",
+                              "scope_flops", "convert_bytes",
+                              "cross_pod_bytes"):
+                        c[k] += trips * sub[k]
+                    for kk, vv in sub["coll"].items():
+                        c["coll"][kk]["count"] += trips * vv["count"]
+                        c["coll"][kk]["operand_bytes"] += trips * vv["operand_bytes"]
+                continue
+            if op in ("call", "conditional", "async-start"):
+                m = _CALLED_RE["calls"].search(ins.rest)
+                if m:
+                    sub = self.comp_cost(m.group(1))
+                    for k in ("flops", "bytes", "coll_bytes", "scope_bytes",
+                              "scope_flops", "convert_bytes",
+                              "cross_pod_bytes"):
+                        c[k] += sub[k]
+                    for kk, vv in sub["coll"].items():
+                        c["coll"][kk]["count"] += vv["count"]
+                        c["coll"][kk]["operand_bytes"] += vv["operand_bytes"]
+                continue
+            if op == "fusion":
+                m = _CALLED_RE["calls"].search(ins.rest)
+                fl = self._flops_only(m.group(1)) if m else 0.0
+                c["flops"] += fl
+                _, rb = _shape_elems_bytes(ins.shape)
+                bb = rb + self._operand_bytes(comp, ins)
+                c["bytes"] += bb
+                if m and self._is_convert_fusion(m.group(1)):
+                    c["convert_bytes"] += bb
+                if "flashrgn" in ins.rest:
+                    c["scope_bytes"] += bb
+                    c["scope_flops"] += fl
+                continue
+            if op == "dot":
+                fl = self._dot_flops(comp, ins)
+                c["flops"] += fl
+                _, rb = _shape_elems_bytes(ins.shape)
+                bb = rb + self._operand_bytes(comp, ins)
+                c["bytes"] += bb
+                if "flashrgn" in ins.rest:
+                    c["scope_bytes"] += bb
+                    c["scope_flops"] += fl
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: read+write the updated slice only
+                upd = (self._operand_shape(comp, ins.operands[1])
+                       if len(ins.operands) > 1 else ins.shape)
+                _, ub = _shape_elems_bytes(upd)
+                c["bytes"] += 2 * ub
+                continue
+            if op == "dynamic-slice":
+                # reads only the extracted slice (result), writes it
+                _, rb = _shape_elems_bytes(ins.shape)
+                c["bytes"] += 2 * rb
+                continue
+            if op in _ARITH or op in _TRANSCEND:
+                e, rb = _shape_elems_bytes(ins.shape)
+                fl = 4 * e if op in _TRANSCEND else e
+                bb = rb + self._operand_bytes(comp, ins)
+                c["flops"] += fl
+                c["bytes"] += bb
+                if "flashrgn" in ins.rest:
+                    c["scope_bytes"] += bb
+                    c["scope_flops"] += fl
+                continue
+            if op == "reduce":
+                e, _ = _shape_elems_bytes(
+                    self._operand_shape(comp, ins.operands[0]))
+                c["flops"] += e
+                _, rb = _shape_elems_bytes(ins.shape)
+                c["bytes"] += rb + self._operand_bytes(comp, ins)
+                continue
+            # default: memory-touching op (copy, reshape-materialize, gather,
+            # scatter, dynamic-slice, convert, transpose, pad, concatenate...)
+            _, rb = _shape_elems_bytes(ins.shape)
+            bb = rb + self._operand_bytes(comp, ins)
+            c["bytes"] += bb
+            if op in ("convert", "copy", "transpose"):
+                c["convert_bytes"] += bb
+            if "flashrgn" in ins.rest:
+                c["scope_bytes"] += bb
+        self._memo_full[comp] = c
+        return c
+
+    def cost(self) -> dict:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        out = dict(self.comp_cost(self.entry))
+        out["coll"]["total_operand_bytes"] = sum(
+            v["operand_bytes"] for v in out["coll"].values())
+        out["coll"]["wire_bytes"] = sum(
+            v["operand_bytes"] * (2.0 if k == "all-reduce" else 1.0)
+            for k, v in out["coll"].items() if isinstance(v, dict))
+        return out
+
+
+def analyze_hlo(hlo_text: str, pod_size: int | None = None) -> dict:
+    return HloCost(hlo_text, pod_size=pod_size).cost()

@@ -1,0 +1,277 @@
+"""MA-SGD on pods: local-SGD / DiLoCo across the "pod" mesh axis.
+
+This is the paper's central insight mapped to multi-pod TPU training.  In
+LambdaML, MA-SGD beats GA-SGD exactly when the communication channel is slow
+relative to compute (§4.2): workers train locally and average models every H
+steps instead of averaging gradients every step.  On a multi-pod mesh the
+slow channel is the inter-pod DCN, so:
+
+- inner step:  a normal train step whose collectives span ONLY the intra-pod
+  ("data","model") axes -- realized with shard_map(manual="pod",
+  auto={"data","model"}) so GSPMD provably cannot emit cross-pod collectives
+  (verifiable in the dry-run HLO);
+- outer step (every H inner steps): average the per-pod model replicas over
+  "pod" (MA-SGD), or apply a Nesterov outer optimizer to the average delta
+  (DiLoCo), optionally with 8-bit + error-feedback compression of the delta
+  (cross-pod bytes /4 on top of the H x reduction).
+
+Cross-pod bytes per inner step drop from every-step gradient all-reduce to
+(model_bytes [/4 if compressed]) / H.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.distributed.sharding import ShardingCtx, use_sharding
+from repro.distributed.step import batch_shardings, resolve_shardings, _is_axes
+from repro.models import build_model
+from repro.optim import make_optimizer
+
+
+def _inner_ctx(arch: ArchConfig, mesh: Mesh) -> ShardingCtx:
+    """Sharding ctx for use INSIDE shard_map(manual='pod'): batch maps to
+    'data' only and nothing may reference 'pod'."""
+    rules = arch.sharding
+    if arch.train.comm_pattern == "allreduce":
+        rules = dataclasses.replace(rules, fsdp_axis=None)
+    ctx = ShardingCtx(mesh, rules)
+    ctx.map["batch"] = ("data",) if "data" in mesh.axis_names else None
+    ctx.map["group"] = ctx.map["batch"]
+    return ctx
+
+
+def _stack_sharding(mesh: Mesh, inner: NamedSharding) -> NamedSharding:
+    return NamedSharding(mesh, P(*(("pod",) + tuple(inner.spec))))
+
+
+@dataclass
+class LocalSGDStep:
+    """inner_fn(params_st, opt_st, batch) -> (params_st, opt_st, metrics)
+    outer_fn(params_st, outer_state) -> (params_st, outer_state)
+    run H inner steps, then one outer step."""
+    inner_fn: Callable
+    outer_fn: Callable
+    inner_inputs: tuple
+    outer_inputs: tuple
+    init_outer_fn: Callable = None
+    n_pods: int = 1
+    sync_period: int = 1
+
+    def lower_inner(self):
+        return self.inner_fn.lower(*self.inner_inputs)
+
+    def lower_outer(self):
+        return self.outer_fn.lower(*self.outer_inputs)
+
+
+def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
+                    batch_specs: dict | None = None) -> LocalSGDStep:
+    assert "pod" in mesh.axis_names, "local-SGD needs the multi-pod mesh"
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    n_pods = mesh.shape["pod"]
+    model = build_model(arch)
+    tc = arch.train
+    opt = make_optimizer(tc)
+    ctx = _inner_ctx(arch, mesh)
+
+    params_abs = model.abstract()
+    param_sh_in = resolve_shardings(ctx, model.axes(), params_abs)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_sh_in = resolve_shardings(ctx, opt.state_axes(model.axes()), opt_abs)
+
+    def stack_abs(t):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, s.dtype), t)
+
+    params_st_abs = stack_abs(params_abs)
+    opt_st_abs = stack_abs(opt_abs)
+    params_st_sh = jax.tree.map(partial(_stack_sharding, mesh), param_sh_in)
+    opt_st_sh = jax.tree.map(partial(_stack_sharding, mesh), opt_sh_in)
+
+    if batch_specs is None:
+        from repro.launch.specs import input_specs
+        batch_specs = input_specs(arch, sh)["batch"]
+    # batch leading dim sharded over pod (outer) then data (inner)
+    batch_sh = {k: NamedSharding(mesh, P(("pod", "data"),
+                                         *([None] * (len(v.shape) - 1))))
+                for k, v in batch_specs.items()}
+
+    # ---------------------------------------------------------- inner -------
+    def inner_body(params, opt_state, batch):
+        # leading pod dim of size 1 inside shard_map
+        params = jax.tree.map(lambda x: x[0], params)
+        opt_state = jax.tree.map(lambda x: x[0], opt_state)
+        with use_sharding(ctx):
+            def loss_of(p, b):
+                return model.loss(p, b, remat=tc.remat,
+                                  scan_layers=tc.scan_layers)
+            (_, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+            new_p, new_s, stats = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        # NO pmean over "pod": the inner step must emit ZERO cross-pod
+        # collectives (asserted in tests); metrics come back per-pod (P,)
+        add_pod = lambda t: jax.tree.map(lambda x: x[None], t)  # noqa: E731
+        metrics = jax.tree.map(lambda m: m[None], metrics)
+        return add_pod(new_p), add_pod(new_s), metrics
+
+    pod_leading = lambda t: jax.tree.map(lambda _: P("pod"), t)  # noqa: E731
+    inner_sm = jax.shard_map(
+        inner_body, mesh=mesh,
+        in_specs=(pod_leading(params_st_abs), pod_leading(opt_st_abs),
+                  jax.tree.map(lambda _: P(("pod",)), batch_specs)),
+        out_specs=(pod_leading(params_st_abs), pod_leading(opt_st_abs),
+                   P("pod")),
+        axis_names={"pod"},   # "pod" manual; "data"/"model" stay auto (GSPMD)
+        check_vma=False)
+
+    inner_fn = jax.jit(inner_sm,
+                       in_shardings=(params_st_sh, opt_st_sh, batch_sh),
+                       out_shardings=(params_st_sh, opt_st_sh, None),
+                       donate_argnums=(0, 1))
+
+    # ---------------------------------------------------------- outer -------
+    algo = tc.algorithm  # ma_sgd | diloco
+    compress = tc.compress_cross_pod
+
+    def outer_init(params_st):
+        p0 = jax.tree.map(lambda x: x[0], params_st)
+        state = {"outer_params": jax.tree.map(
+            lambda x: x.astype(jnp.float32), p0)}
+        if algo == "diloco":
+            state["momentum"] = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p0)
+        if compress:
+            state["residual"] = jax.tree.map(
+                lambda x: jnp.zeros((n_pods,) + x.shape, jnp.float32),
+                p0)
+        return state
+
+    def _compressed_mean(x, res, pspec):
+        """Cross-pod mean with int8 on the wire + error feedback.
+
+        FULLY-MANUAL shard_map (all mesh axes, explicit per-leaf specs): each
+        device quantizes its own shard per-channel (one fp32 scale per local
+        row -- no reshape, so sharding never degrades), all-gathers the int8
+        codes over 'pod' ONLY (4x fewer cross-pod wire bytes than fp32,
+        verified in the dry-run HLO), dequantizes and averages locally.  The
+        quantization error is carried per-pod in `res` (error feedback).
+
+        Two earlier versions were refuted by measurement (§Perf P2): (a)
+        256-block quantization reshapes TP-sharded dims and GSPMD replicated
+        the codes; (b) pod-only-manual shard_map let GSPMD all-gather the
+        codes over (data, model) before the pod exchange.
+        """
+        full_in = P(*(("pod",) + tuple(pspec)))
+
+        def body(xl, rl):
+            xe = xl[0].astype(jnp.float32) + rl[0]
+            scale = jnp.max(jnp.abs(xe), axis=-1, keepdims=True) / 127.0
+            scale = jnp.maximum(scale, 1e-12)
+            q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
+            qs = jax.lax.all_gather(q, "pod")          # int8 over the wire
+            ss = jax.lax.all_gather(scale, "pod")
+            deq = qs.astype(jnp.float32) * ss
+            new_res = xe - q.astype(jnp.float32) * scale
+            return jnp.mean(deq, axis=0), new_res[None]
+
+        mean, new_res = jax.shard_map(
+            body, mesh=mesh, in_specs=(full_in, full_in),
+            out_specs=(P(*pspec), full_in),
+            axis_names=set(mesh.axis_names), check_vma=False)(x, res)
+        return mean, new_res
+
+    leaf_pspecs = [sh.spec for sh in jax.tree.leaves(param_sh_in)]
+
+    def outer_step(params_st, state):
+        """Average replicas over 'pod' (MA) or Nesterov-outer-step (DiLoCo)."""
+        def mean_pods(x, res=None, pspec=None):
+            if not compress:
+                return jnp.mean(x, axis=0), None
+            return _compressed_mean(x, res, pspec)
+
+        if algo != "diloco":  # ma_sgd (ga_sgd uses the same averaging outer)
+            res_st = state.get("residual")
+            leaves, tdef = jax.tree.flatten(params_st)
+            res_leaves = (tdef.flatten_up_to(res_st) if compress
+                          else [None] * len(leaves))
+            outs = [mean_pods(x.astype(jnp.float32), r, sp)
+                    for x, r, sp in zip(leaves, res_leaves, leaf_pspecs)]
+            mean = jax.tree.unflatten(tdef, [o[0] for o in outs])
+            new_p = jax.tree.map(
+                lambda ps, m: jnp.broadcast_to(
+                    m.astype(ps.dtype)[None], ps.shape), params_st, mean)
+            new_state = dict(state)
+            new_state["outer_params"] = mean
+            if compress:
+                new_state["residual"] = jax.tree.unflatten(
+                    tdef, [o[1] for o in outs])
+            return new_p, new_state
+
+        # DiLoCo: delta = outer - mean(inner); Nesterov on outer params
+        mu, lr = tc.outer_momentum, tc.outer_lr
+        res_st = state.get("residual")
+        leaves, tdef = jax.tree.flatten(params_st)
+        o_leaves = tdef.flatten_up_to(state["outer_params"])
+        m_leaves = tdef.flatten_up_to(state["momentum"])
+        res_leaves = (tdef.flatten_up_to(res_st) if compress
+                      else [None] * len(leaves))
+        new_p, new_o, new_m, new_r = [], [], [], []
+        for x, o, m, r, sp in zip(leaves, o_leaves, m_leaves, res_leaves,
+                                  leaf_pspecs):
+            delta_pods = o[None] - x.astype(jnp.float32)     # (P, ...)
+            mean_delta, nr = mean_pods(delta_pods, r, sp)
+            nm = mu * m + mean_delta
+            no = o - lr * (mu * nm + mean_delta)             # Nesterov
+            new_p.append(jnp.broadcast_to(no.astype(x.dtype)[None], x.shape))
+            new_o.append(no)
+            new_m.append(nm)
+            new_r.append(nr)
+        out_state = {"outer_params": jax.tree.unflatten(tdef, new_o),
+                     "momentum": jax.tree.unflatten(tdef, new_m)}
+        if compress:
+            out_state["residual"] = jax.tree.unflatten(tdef, new_r)
+        return jax.tree.unflatten(tdef, new_p), out_state
+
+    outer_abs = jax.eval_shape(outer_init, params_st_abs)
+    outer_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, P()), outer_abs)  # refined below
+
+    def _outer_leaf_sh(path_is_residual, inner_sh):
+        return (_stack_sharding(mesh, inner_sh) if path_is_residual
+                else inner_sh)
+
+    # outer params/momentum share the per-param (non-stacked) shardings
+    o_sh = {"outer_params": jax.tree.map(
+        lambda s: NamedSharding(mesh, s.spec), param_sh_in)}
+    if algo == "diloco":
+        o_sh["momentum"] = o_sh["outer_params"]
+    if compress:
+        o_sh["residual"] = jax.tree.map(partial(_stack_sharding, mesh),
+                                        jax.tree.map(
+                                            lambda s: NamedSharding(mesh, s.spec),
+                                            param_sh_in))
+    outer_sh = o_sh
+
+    outer_fn = jax.jit(outer_step,
+                       in_shardings=(params_st_sh, outer_sh),
+                       out_shardings=(params_st_sh, outer_sh),
+                       donate_argnums=(0, 1))
+    init_outer_fn = jax.jit(outer_init, in_shardings=(params_st_sh,),
+                            out_shardings=outer_sh)
+
+    return LocalSGDStep(
+        inner_fn=inner_fn, outer_fn=outer_fn,
+        inner_inputs=(params_st_abs, opt_st_abs, batch_specs),
+        outer_inputs=(params_st_abs, outer_abs),
+        init_outer_fn=init_outer_fn,
+        n_pods=n_pods, sync_period=tc.sync_period)

@@ -1,0 +1,159 @@
+"""Logical-axis sharding: resolve ('embed','heads',...) -> mesh axes.
+
+Models are written against *logical* axis names; a `ShardingCtx` installed by
+the step builder maps them to physical mesh axes and applies
+``with_sharding_constraint`` hints.  Outside a ctx (CPU smoke tests) every
+hint is the identity, so the same model code runs anywhere.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShardingRules
+
+_TLS = threading.local()
+
+
+def _logical_map(rules: ShardingRules, mesh: Mesh) -> dict:
+    axes = set(mesh.axis_names)
+    batch_axes = ("pod", "data", "model") if rules.dp_over_model \
+        else ("pod", "data")
+    batch = tuple(a for a in batch_axes if a in axes)
+    m = {
+        "batch": batch or None,
+        "group": batch or None,          # MoE dispatch groups track data shards
+        "seq": rules.seq,
+        "embed": rules.embed,
+        "heads": rules.heads,
+        "kv_heads": rules.heads,         # same axis family as heads
+        "head_dim": None,
+        "ff": rules.ff,
+        "vocab": rules.vocab,
+        "experts": rules.experts,
+        "kv_seq": rules.kv_seq,
+        "img_seq": None,
+        "layers": None,
+        "lora": None,
+        "state": None,
+        "conv": None,
+        None: None,
+    }
+    if rules.dp_over_model:
+        # pure DP: weight TP mappings would fight the batch sharding
+        for k in ("heads", "kv_heads", "ff", "vocab", "experts", "seq",
+                  "kv_seq"):
+            m[k] = None
+    return {k: (v if v in axes or v is None or isinstance(v, tuple) else None)
+            for k, v in m.items()}
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: ShardingRules):
+        self.mesh = mesh
+        self.rules = rules
+        self.map = _logical_map(rules, mesh)
+
+    def pspec(self, axes: tuple) -> P:
+        return P(*self._dedup([self.map.get(a, None) for a in axes]))
+
+    @staticmethod
+    def _dedup(mesh_axes: list) -> list:
+        """A mesh axis may shard at most one dim -- first occurrence wins
+        (e.g. EP keeps "model" on the experts dim; the per-expert ff falls
+        back to replication)."""
+        seen: set = set()
+        out = []
+        for m in mesh_axes:
+            ms = (m,) if isinstance(m, str) else (m or ())
+            if any(a in seen for a in ms):
+                out.append(None)
+            else:
+                seen.update(ms)
+                out.append(m)
+        return out
+
+    def sharding(self, axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes))
+
+    def _axis_size(self, m) -> int:
+        if m is None:
+            return 1
+        axes = (m,) if isinstance(m, str) else m
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def fit_axes(self, dim: int, m):
+        """Trim trailing axes of a tuple mapping until it divides `dim`
+        (e.g. global_batch=256 with batch axes (pod,data,model)=512 shards
+        falls back to (pod,data)=32)."""
+        if m is None or isinstance(m, str):
+            return m if dim % self._axis_size(m) == 0 else None
+        axes = tuple(m)
+        while axes and dim % self._axis_size(axes) != 0:
+            axes = axes[:-1]
+        return axes or None
+
+    # ---- parameter sharding with FSDP fill-in -------------------------------
+    def param_pspec(self, shape: tuple, axes: tuple) -> P:
+        mesh_axes = [self.map.get(a, None) for a in axes]
+        # drop mappings that do not divide the dim (tiny smoke shapes, scales)
+        mesh_axes = [m if shape[i] % self._axis_size(m) == 0 else None
+                     for i, m in enumerate(mesh_axes)]
+        mesh_axes = self._dedup(mesh_axes)
+        fsdp = self.rules.fsdp_axis
+        if isinstance(fsdp, str):
+            fsdp = (fsdp,) if fsdp in self.mesh.axis_names else ()
+        else:
+            fsdp = tuple(a for a in (fsdp or ()) if a in self.mesh.axis_names)
+        if fsdp:
+            fsdp_size = int(np.prod([self.mesh.shape[a] for a in fsdp]))
+            used = set()
+            for x in mesh_axes:
+                used.update((x,) if isinstance(x, str) else (x or ()))
+            if not used & set(fsdp):
+                # shard the largest still-replicated, divisible dim over fsdp axis
+                cands = [(shape[i], i) for i, m in enumerate(mesh_axes)
+                         if m is None and axes[i] != "layers"
+                         and shape[i] % fsdp_size == 0 and shape[i] >= fsdp_size]
+                if cands:
+                    _, i = max(cands)
+                    mesh_axes[i] = fsdp if len(fsdp) > 1 else fsdp[0]
+        return P(*mesh_axes)
+
+    def param_sharding(self, shape: tuple, axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_pspec(shape, axes))
+
+
+def current() -> Optional[ShardingCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o ctx).
+
+    Per-dim mappings that don't divide are trimmed (tuple mappings lose
+    trailing axes first) rather than dropping the whole constraint."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank mismatch: {x.shape} vs {axes}")
+    ps = ctx.pspec(axes)
+    fitted = [ctx.fit_axes(dim, m) for dim, m in zip(x.shape, ps)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*fitted)))

@@ -1,0 +1,88 @@
+"""Flash-decoding Pallas kernel: one query token vs. a long KV cache.
+
+Decode is memory-bound: the whole job is streaming the (S, d) cache through
+VMEM once.  Grid = (batch*kv_heads, n_kv_blocks) with the KV dim sequential;
+running (g, d) accumulator + softmax stats live in scratch (g = GQA group =
+q heads per kv head, so all group queries amortize one cache read -- the
+GQA-aware layout matters: a per-q-head kernel would read the cache g times).
+A `length` scalar masks cache positions beyond the current decode position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 1024
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            sm_scale: float, block_k: int):
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+
+    @pl.when(ik * block_k < length)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)                  # (g, d)
+        k = k_ref[...].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+        kpos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)            # (g, bk)
+        m_prev = m_ref[...]                                 # (g, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        corr = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, length, *, sm_scale: float,
+                            block_k: int = DEFAULT_BLOCK_K,
+                            interpret: bool = True):
+    """q (bm, g, d); k/v (bm, S, d); length scalar int32 -> o (bm, g, d)."""
+    bm, g, d = q.shape
+    S = k.shape[1]
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    grid = (bm, S // block_k)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, g, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, g, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bm, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

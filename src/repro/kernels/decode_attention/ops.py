@@ -1,0 +1,26 @@
+"""Public wrapper: (b, h, d) query + (b, S, m, d) cache -> (b, h, d)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, cache_k, cache_v, length, *, block_k: int = 1024,
+                     interpret: bool | None = None):
+    """q (b, h, dk); cache_k/v (b, S, m, dk); length = valid prefix length."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, d = q.shape
+    S, m = cache_k.shape[1], cache_k.shape[2]
+    g = h // m
+    qf = q.reshape(b, m, g, d).reshape(b * m, g, d)
+    kf = cache_k.transpose(0, 2, 1, 3).reshape(b * m, S, d)
+    vf = cache_v.transpose(0, 2, 1, 3).reshape(b * m, S, d)
+    o = decode_attention_kernel(qf, kf, vf, length, sm_scale=d ** -0.5,
+                                block_k=block_k, interpret=interpret)
+    return o.reshape(b, m, g, d).reshape(b, h, d)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for flash decoding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length, *, sm_scale: float):
+    """q (bm, g, d); k/v (bm, S, d); positions >= length masked."""
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    mask = jnp.arange(k.shape[1])[None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Flash attention Pallas kernel (TPU): online-softmax over K/V blocks.
+
+Grid = (batch*heads, n_q_blocks, n_kv_blocks); the last grid dim is
+sequential on TPU, so the (block_q, d) accumulator, running max and running
+sum live in VMEM scratch across kv iterations.  Block shapes are multiples
+of (8, 128) to line up with VREG/MXU tiling; K/V stream HBM->VMEM one block
+per step, which is the roofline-optimal pattern when the KV sequence does
+not fit VMEM (32k+ contexts).  Causal blocks strictly above the diagonal
+are skipped via pl.when (half the work at long context).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            sm_scale: float, causal: bool, block_q: int, block_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    if causal:
+        run = (ik * block_k) <= (iq * block_q + block_q - 1)
+    else:
+        run = ik >= 0  # always true (traced)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)                      # (bq, d)
+        k = k_ref[...].astype(jnp.float32)                      # (bk, d)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s * sm_scale                                      # (bq, bk)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                                   # (bq, 1)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        corr = jnp.exp(m_prev - m_cur)                        # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool, sm_scale: float,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = True):
+    """q (bh, sq, d); k/v (bh, sk, d) -> o (bh, sq, d)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    grid = (bh, sq // block_q, sk // block_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, sm_scale=sm_scale, causal=causal,
+                          block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

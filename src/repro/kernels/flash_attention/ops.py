@@ -1,0 +1,35 @@
+"""Public wrapper: GQA plumbing + interpret-mode switch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+    """q (b, sq, h, dk); k/v (b, sk, m, dk) with h % m == 0 (GQA).
+
+    Returns (b, sq, h, dk).  interpret=None -> auto (False on TPU).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, h, d = q.shape
+    sk, m = k.shape[1], k.shape[2]
+    g = h // m
+    # fold GQA: repeat each kv head g times, flatten (b, heads)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, sk, d)
+    o = flash_attention_kernel(qf, kf, vf, causal=causal,
+                               sm_scale=d ** -0.5, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

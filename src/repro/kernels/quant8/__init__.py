@@ -1,0 +1,1 @@
+from repro.kernels.quant8.ops import dequantize8, quantize8  # noqa: F401

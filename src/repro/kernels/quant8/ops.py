@@ -1,0 +1,35 @@
+"""Public wrapper: arbitrary-shape tensors <-> padded (rows, 256) tiles."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8.kernel import BLOCK, dequantize8_kernel, quantize8_kernel
+
+
+def _pad_rows(flat):
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, BLOCK), pad
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize8(x, *, interpret: bool | None = None):
+    """Any-shape fp tensor -> (codes int8 (rows, 256), scales (rows, 1))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rows, _ = _pad_rows(x.astype(jnp.float32).reshape(-1))
+    return quantize8_kernel(rows, interpret=interpret)
+
+
+def dequantize8(q, s, shape, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    x = dequantize8_kernel(q, s, interpret=interpret).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return x[:n].reshape(shape)

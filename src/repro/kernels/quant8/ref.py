@@ -1,0 +1,16 @@
+"""Oracle: the optimizer's numpy-style blockwise quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize8_ref(x):
+    """x (rows, 256) -> (q int8, scales (rows, 1))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1,
+                                keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize8_ref(q, s):
+    return q.astype(jnp.float32) * s

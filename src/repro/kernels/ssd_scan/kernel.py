@@ -1,0 +1,103 @@
+"""Mamba2 SSD chunk kernel (TPU): intra-chunk dual form + carried state.
+
+Grid = (batch*heads, n_chunks); the chunk dim is sequential so the (p, n)
+SSM state lives in VMEM scratch across chunks -- the HBM-resident
+inter-chunk state tensors of the jnp reference (materialized (b, nc, h, p,
+n)) never exist.  Per chunk the kernel computes the paper's (SSD, Dao & Gu
+2024) blocks:
+
+    y_diag = (C B^T ∘ L) (x*dt)          -- MXU matmuls, (l x l) masked
+    y_off  = decay_in * (C S_prev^T)     -- carried state contribution
+    S_new  = decay_chunk * S_prev + (dec_end * x*dt)^T B
+
+dt / decay handling is fp32 throughout (exp/segsum are precision-critical).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref,
+            *, chunk: int):
+    ic = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (l, p)
+    dt = dt_ref[...].astype(jnp.float32)          # (l, 1)
+    A = a_ref[0]                                  # scalar (per head)
+    B = b_ref[...].astype(jnp.float32)            # (l, n)
+    C = c_ref[...].astype(jnp.float32)            # (l, n)
+
+    da = dt[:, 0] * A                             # (l,) log decays
+    cum = jnp.cumsum(da)                          # inclusive
+    xdt = x * dt                                  # (l, p)
+
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (l, l)
+    y = jax.lax.dot(scores * L, xdt, preferred_element_type=jnp.float32)
+
+    # carried-state contribution
+    st = state_ref[...]                           # (p, n)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, st, (((1,), (1,)), ((), ())))          # (l, p)
+
+    # state update
+    dec_end = jnp.exp(cum[-1] - cum)              # (l,)
+    state_ref[...] = (jnp.exp(cum[-1]) * st
+                      + jax.lax.dot_general(xdt * dec_end[:, None], B,
+                                            (((0,), (0,)), ((), ()))))
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        st_out_ref[...] = state_ref[...]
+
+
+def ssd_scan_kernel(x, dt, a, B, C, *, chunk: int, interpret: bool = True):
+    """x (bh, s, p); dt (bh, s); a (bh,) = A (negative); B/C (bh, s, n).
+
+    Returns y (bh, s, p) fp32-accurate and final state (bh, p, n) fp32.
+    """
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    grid = (bh, s // chunk)
+    dt2 = dt[..., None]
+    a2 = a.reshape(bh, 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, p, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt2, a2, B, C)

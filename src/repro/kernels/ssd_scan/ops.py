@@ -1,0 +1,32 @@
+"""Public wrapper for the SSD chunk kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_fused(x, dt, a_log, B, C, *, chunk: int = 256,
+                   interpret: bool | None = None):
+    """Model-facing contract (matches repro.models.ssm.ssd_scan):
+    x (b, s, h, p); dt (b, s, h) post-softplus; a_log (h,); B/C (b, s, n).
+    Returns (y (b, s, h, p) fp32, state (b, h, p, n) fp32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))                     # (h,)
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s)
+    af = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h)
+    Bf = jnp.broadcast_to(B[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    Cf = jnp.broadcast_to(C[:, None], (b, h, s, n)).reshape(b * h, s, n)
+    y, st = ssd_scan_kernel(xf, dtf, af, Bf, Cf, chunk=chunk,
+                            interpret=interpret)
+    return (y.reshape(b, h, s, p).transpose(0, 2, 1, 3).astype(jnp.float32),
+            st.reshape(b, h, p, n))

@@ -1,0 +1,29 @@
+"""Oracle for the SSD chunk kernel: exact sequential state recurrence.
+
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * B_t (x_t)^T
+    y_t = C_t . S_t
+
+(The models' chunked jnp ssd_scan is separately tested against this same
+recurrence in tests/test_models.py -- kernel, chunked-jnp and recurrence all
+agree.)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, B, C):
+    """x (bh, s, p); dt (bh, s); a (bh,) negative; B/C (bh, s, n)
+    -> (y (bh, s, p), final state (bh, p, n))."""
+    bh, s, p = x.shape
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    st = jnp.zeros((bh, p, B.shape[-1]), jnp.float32)
+    ys = []
+    for t in range(s):
+        dec = jnp.exp(dtf[:, t] * a)[:, None, None]
+        upd = jnp.einsum("bp,bn->bpn", xf[:, t] * dtf[:, t, None],
+                         B[:, t].astype(jnp.float32))
+        st = st * dec + upd
+        ys.append(jnp.einsum("bpn,bn->bp", st, C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), st

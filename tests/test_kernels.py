@@ -1,0 +1,126 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant8.ops import dequantize8, quantize8
+from repro.kernels.quant8.ref import quantize8_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ops import ssd_scan_fused
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.ssm import ssd_scan as ssd_jnp
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ------------------------------------------------------------ flash ----------
+
+@pytest.mark.parametrize("b,sq,sk,h,m,d,causal,dtype", [
+    (2, 256, 256, 4, 2, 64, True, jnp.float32),
+    (1, 512, 512, 2, 2, 128, False, jnp.float32),
+    (2, 128, 128, 3, 1, 32, True, jnp.float32),
+    (1, 256, 256, 8, 4, 64, True, jnp.bfloat16),
+    (1, 384, 384, 2, 1, 128, True, jnp.float32),
+])
+def test_flash_attention(b, sq, sk, h, m, d, causal, dtype):
+    q, k, v = (_arr((b, sq, h, d), dtype), _arr((b, sk, m, d), dtype),
+               _arr((b, sk, m, d), dtype))
+    o = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                        interpret=True)
+    g = h // m
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, 1).reshape(b * h, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, 1).reshape(b * h, sk, d)
+    ref = attention_ref(qf, kf, vf, causal=causal, sm_scale=d ** -0.5)
+    ref = ref.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_blocks_irrelevant():
+    """Block-shape sweep: numerics must not depend on tiling."""
+    q, k, v = _arr((1, 512, 2, 64)), _arr((1, 512, 2, 64)), _arr((1, 512, 2, 64))
+    outs = [flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                            interpret=True)
+            for bq, bk in [(64, 64), (128, 256), (512, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------ decode ---------
+
+@pytest.mark.parametrize("b,h,m,d,S,length,dtype", [
+    (2, 8, 2, 64, 2048, 1500, jnp.float32),
+    (1, 4, 4, 128, 1024, 1024, jnp.float32),
+    (3, 6, 2, 32, 512, 100, jnp.float32),
+    (2, 4, 1, 64, 768, 700, jnp.bfloat16),
+])
+def test_decode_attention(b, h, m, d, S, length, dtype):
+    q = _arr((b, h, d), dtype)
+    k = _arr((b, S, m, d), dtype)
+    v = _arr((b, S, m, d), dtype)
+    o = decode_attention(q, k, v, length, block_k=256, interpret=True)
+    g = h // m
+    qf = q.reshape(b, m, g, d).reshape(b * m, g, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * m, S, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * m, S, d)
+    ref = decode_attention_ref(qf, kf, vf, length, sm_scale=d ** -0.5)
+    ref = ref.reshape(b, m, g, d).reshape(b, h, d)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+# ------------------------------------------------------------ ssd ------------
+
+@pytest.mark.parametrize("bh,s,p,n,chunk", [
+    (4, 256, 64, 32, 64), (2, 128, 32, 16, 32), (3, 96, 16, 8, 32),
+    (1, 64, 128, 64, 16),
+])
+def test_ssd_kernel_vs_recurrence(bh, s, p, n, chunk):
+    x = _arr((bh, s, p))
+    dt = jnp.abs(_arr((bh, s), scale=0.2))
+    a = -jnp.abs(_arr((bh,))) - 0.5
+    B, C = _arr((bh, s, n)), _arr((bh, s, n))
+    y, st = ssd_scan_kernel(x, dt, a, B, C, chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(x, dt, a, B, C)
+    np.testing.assert_allclose(y, yr, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(st, sr, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_fused_matches_model_path():
+    b, s, h, p, n = 2, 128, 4, 32, 16
+    x = _arr((b, s, h, p))
+    dt = jnp.abs(_arr((b, s, h), scale=0.2))
+    a_log = _arr((h,), scale=0.3)
+    B, C = _arr((b, s, n)), _arr((b, s, n))
+    yk, stk = ssd_scan_fused(x, dt, a_log, B, C, chunk=32, interpret=True)
+    yj, stj = ssd_jnp(x, dt, a_log, B, C, 32)
+    np.testing.assert_allclose(yk, yj, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(stk, stj, atol=1e-3, rtol=1e-3)
+
+
+# ------------------------------------------------------------ quant8 ---------
+
+@pytest.mark.parametrize("shape", [(1000,), (33, 70), (4, 256), (7, 13, 11)])
+def test_quant8_roundtrip(shape):
+    x = _arr(shape, scale=3.0)
+    q, s = quantize8(x, interpret=True)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % 256
+    xf = jnp.concatenate([flat, jnp.zeros((pad,))]).reshape(-1, 256)
+    qr, _ = quantize8_ref(xf)
+    assert jnp.array_equal(q, qr)
+    xd = dequantize8(q, s, shape, interpret=True)
+    # blockwise max-abs scaling: error bounded by scale/2 per element
+    assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) * 0.51

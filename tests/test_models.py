@@ -1,0 +1,162 @@
+"""Model-zoo correctness: decode-vs-forward consistency (the strongest cache
+test), SSD chunked-vs-recurrence, MLA absorbed decode, conv cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.launch.specs import make_batch
+from repro.models import build_model
+from repro.models.ssm import _conv1d_causal, ssd_scan
+
+DECODE_ARCHS = [n for n in ARCH_IDS if n != "hubert-xlarge"]
+
+
+def _fp32(arch):
+    return arch.replace(model=arch.model.replace(dtype="float32"))
+
+
+@pytest.mark.parametrize("name", DECODE_ARCHS)
+def test_decode_matches_forward(name):
+    """Teacher-forced decode through the cache must reproduce the training
+    forward logits position by position (fp32).
+
+    MoE archs run with a large capacity factor: capacity-based dispatch
+    DROPS overflow tokens under load in the batched forward, while one-token
+    decode never overflows -- that (designed) difference is exactly what
+    this test would otherwise flag (and did, during development).
+    """
+    arch = _fp32(get_reduced(name))
+    if arch.model.num_experts:
+        arch = arch.replace(model=arch.model.replace(capacity_factor=8.0))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 12
+    batch = make_batch(arch, b, s, seed=3)
+    ref_logits, _ = model.forward(params, batch)          # (b, s, v)
+
+    cache = model.init_cache(b, s)
+    if arch.model.family == "vlm":
+        cache = model.prime_cross_cache(params, cache, batch["image_embeds"])
+    errs = []
+    for t in range(s):
+        step_logits, cache = model.decode_step(
+            params, cache, batch["tokens"][:, t], jnp.int32(t))
+        errs.append(float(jnp.max(jnp.abs(step_logits - ref_logits[:, t]))))
+    assert max(errs) < 2e-2, f"{name}: decode/forward divergence {max(errs)}"
+
+
+def test_ssd_chunked_matches_recurrence():
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 64, 3, 8, 4
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, h))) * 0.2, jnp.float32)
+    a_log = jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+
+    y16, st16 = ssd_scan(x, dt, a_log, B, C, chunk=16)
+    y64, st64 = ssd_scan(x, dt, a_log, B, C, chunk=64)
+    np.testing.assert_allclose(y16, y64, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st16, st64, rtol=1e-4, atol=1e-4)
+
+    # exact sequential recurrence
+    A = -jnp.exp(a_log)
+    st = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        dec = jnp.exp(dt[:, t] * A)[..., None, None]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t], B[:, t], x[:, t])
+        st = st * dec + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t], st))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y16, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_init_state_continuation():
+    """Scanning [first half] then [second half from carried state] must equal
+    one full scan -- the property decode and prefill-chunking rely on."""
+    rng = np.random.default_rng(1)
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, h))) * 0.2, jnp.float32)
+    a_log = jnp.asarray(rng.standard_normal(h) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    y_full, st_full = ssd_scan(x, dt, a_log, B, C, chunk=16)
+    m = s // 2
+    y1, st1 = ssd_scan(x[:, :m], dt[:, :m], a_log, B[:, :m], C[:, :m], 16)
+    y2, st2 = ssd_scan(x[:, m:], dt[:, m:], a_log, B[:, m:], C[:, m:], 16,
+                       init_state=st1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st2, st_full, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_cache_streaming():
+    """Streaming 1 token at a time through the conv cache == full conv."""
+    rng = np.random.default_rng(2)
+    b, s, c, w = 2, 10, 6, 4
+    x = jnp.asarray(rng.standard_normal((b, s, c)), jnp.float32)
+    wgt = jnp.asarray(rng.standard_normal((w, c)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal(c), jnp.float32)
+    full, _ = _conv1d_causal(x, wgt, bias)
+    cache = jnp.zeros((b, w - 1, c))
+    outs = []
+    for t in range(s):
+        o, cache = _conv1d_causal(x[:, t:t + 1], wgt, bias, cache)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_encoder_is_bidirectional():
+    """Perturbing a FUTURE frame must change an encoder output at position 0
+    (and must NOT for a causal LM)."""
+    arch = _fp32(get_reduced("hubert-xlarge"))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(arch, 1, 8, seed=0)
+    out1, _ = model.forward(params, batch)
+    batch2 = dict(batch)
+    batch2["frames"] = batch["frames"].at[:, -1].add(1.0)
+    out2, _ = model.forward(params, batch2)
+    assert float(jnp.max(jnp.abs(out1[:, 0] - out2[:, 0]))) > 1e-6
+
+    arch = _fp32(get_reduced("smollm-360m"))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(arch, 1, 8, seed=0)
+    outa, _ = model.forward(params, batch)
+    batchb = dict(batch)
+    batchb["tokens"] = batch["tokens"].at[:, -1].set(
+        (batch["tokens"][:, -1] + 1) % arch.model.vocab_size)
+    outb, _ = model.forward(params, batchb)
+    np.testing.assert_allclose(outa[:, 0], outb[:, 0], atol=1e-6)
+
+
+def test_vlm_uses_image():
+    arch = _fp32(get_reduced("llama-3.2-vision-90b"))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(arch, 1, 8, seed=0)
+    out1, _ = model.forward(params, batch)
+    batch2 = dict(batch)
+    batch2["image_embeds"] = batch["image_embeds"] * 0.0
+    out2, _ = model.forward(params, batch2)
+    assert float(jnp.max(jnp.abs(out1 - out2))) > 1e-6
+
+
+def test_masked_loss_ignores_unmasked():
+    arch = _fp32(get_reduced("hubert-xlarge"))
+    model = build_model(arch)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(arch, 2, 8, seed=0)
+    loss1, _ = model.loss(params, batch)
+    b2 = dict(batch)
+    # flip labels outside the mask: loss must not change
+    b2["labels"] = jnp.where(batch["mask"], batch["labels"],
+                             (batch["labels"] + 7) % arch.model.vocab_size)
+    loss2, _ = model.loss(params, b2)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)

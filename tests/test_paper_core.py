@@ -1,0 +1,183 @@
+"""Paper-core behaviour: algorithms, channels, sync protocols, FaaS runtime
+semantics (lifetime/checkpoint, stragglers, DynamoDB limits), analytical
+model vs emulator."""
+import numpy as np
+import pytest
+
+from repro.core.algorithms import make_algorithm
+from repro.core.analytical import (
+    TABLE6, Workload, estimate_epochs, faas_time, iaas_time, q1_fast_hybrid,
+    q2_hot_data,
+)
+from repro.core.channels import CHANNEL_SPECS, StorageChannel
+from repro.core.mlmodels import make_study_model, model_bytes
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+from repro.data.synthetic import make_dataset, partition, train_val_split
+
+
+@pytest.fixture(scope="module")
+def higgs():
+    ds = make_dataset("higgs", rows=30_000)
+    return train_val_split(ds)
+
+
+def test_admm_converges_faster_than_ga(higgs):
+    """Paper Fig 7a: for LR on Higgs, ADMM reaches a lower loss than GA-SGD
+    in the same number of communication rounds."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    ga = FaaSRuntime(workers=10).train(
+        model, make_algorithm("ga_sgd", lr=0.3, batch_size=1024), tr, va,
+        max_epochs=5)
+    admm = FaaSRuntime(workers=10).train(
+        model, make_algorithm("admm", lr=0.1, local_epochs=10), tr, va,
+        max_epochs=5)
+    assert admm.final_loss < ga.final_loss
+
+
+def test_ma_reduces_comm_rounds(higgs):
+    """MA-SGD syncs once per epoch; GA-SGD once per batch."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    ga = FaaSRuntime(workers=5).train(
+        model, make_algorithm("ga_sgd", lr=0.3, batch_size=512), tr, va,
+        max_epochs=2)
+    ma = FaaSRuntime(workers=5).train(
+        model, make_algorithm("ma_sgd", lr=0.3, batch_size=512), tr, va,
+        max_epochs=2)
+    assert ma.rounds < ga.rounds
+    assert ma.breakdown["comm"] < ga.breakdown["comm"]
+
+
+def test_faas_identical_numerics_to_iaas(higgs):
+    """Paper principle 1: same algorithm both sides -> identical loss curves
+    (only time/cost differ)."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    kw = dict(max_epochs=3)
+    f = FaaSRuntime(workers=4).train(
+        model, make_algorithm("ga_sgd", lr=0.2, batch_size=2048), tr, va, **kw)
+    i = IaaSRuntime(workers=4).train(
+        model, make_algorithm("ga_sgd", lr=0.2, batch_size=2048), tr, va, **kw)
+    np.testing.assert_allclose([l for _, l in f.history],
+                               [l for _, l in i.history], rtol=1e-6)
+    assert f.sim_time != i.sim_time
+
+
+def test_faas_startup_beats_iaas(higgs):
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    f = FaaSRuntime(workers=10).train(
+        model, make_algorithm("admm", local_epochs=2), tr, va, max_epochs=1)
+    i = IaaSRuntime(workers=10).train(
+        model, make_algorithm("admm", local_epochs=2), tr, va, max_epochs=1)
+    assert f.breakdown["startup"] < i.breakdown["startup"]
+
+
+def test_dynamodb_rejects_large_models():
+    ds = make_dataset("cifar10", rows=2000)
+    tr, va = train_val_split(ds)
+    mn = make_study_model("mobilenet", tr)          # 12 MB > 400 KB limit
+    r = FaaSRuntime(workers=4, channel="dynamodb").train(
+        mn, make_algorithm("ga_sgd", lr=0.05, batch_size=512), tr, va,
+        max_epochs=1)
+    assert "dynamodb" in r.error
+
+
+def test_lifetime_checkpointing_kicks_in(higgs):
+    """With a tiny lifetime the runtime must checkpoint + re-invoke and still
+    produce the same numerics as an uninterrupted run."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    algo = lambda: make_algorithm("ga_sgd", lr=0.3, batch_size=1024)  # noqa
+    uninterrupted = FaaSRuntime(workers=4).train(model, algo(), tr, va,
+                                                 max_epochs=2)
+    interrupted = FaaSRuntime(workers=4, lifetime=25.0).train(
+        model, algo(), tr, va, max_epochs=2)
+    assert interrupted.breakdown["checkpoint"] > 0
+    assert interrupted.sim_time > uninterrupted.sim_time
+    np.testing.assert_allclose(interrupted.final_loss,
+                               uninterrupted.final_loss, rtol=1e-6)
+
+
+def test_straggler_mitigation(higgs):
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    algo = lambda: make_algorithm("ma_sgd", lr=0.3, batch_size=1024)  # noqa
+    slow = FaaSRuntime(workers=8, straggler=5.0).train(
+        model, algo(), tr, va, max_epochs=2)
+    mitigated = FaaSRuntime(workers=8, straggler=5.0,
+                            backup_invocations=True).train(
+        model, algo(), tr, va, max_epochs=2)
+    assert mitigated.breakdown["compute"] < slow.breakdown["compute"]
+
+
+def test_asp_runs_more_rounds_less_stable(higgs):
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    bsp = FaaSRuntime(workers=6).train(
+        model, make_algorithm("ga_sgd", lr=0.3, batch_size=4096), tr, va,
+        max_epochs=3)
+    asp = FaaSRuntime(workers=6, sync="asp").train(
+        model, make_algorithm("ga_sgd", lr=0.3, batch_size=4096), tr, va,
+        max_epochs=3)
+    assert asp.rounds >= bsp.rounds  # w updates per epoch vs 1 sync'd
+
+
+def test_kmeans_em(higgs):
+    tr, va = higgs
+    km = make_study_model("kmeans", tr, k=5)
+    r = FaaSRuntime(workers=4).train(km, make_algorithm("kmeans_em"), tr, va,
+                                     max_epochs=4)
+    losses = [l for _, l in r.history]
+    assert losses[-1] <= losses[0]  # EM monotone (up to eval subsampling)
+
+
+def test_channel_specs_table6():
+    assert CHANNEL_SPECS["s3"].bandwidth == 65e6
+    assert CHANNEL_SPECS["s3"].latency == 8e-2
+    assert CHANNEL_SPECS["memcached"].bandwidth == 630e6
+    assert CHANNEL_SPECS["memcached"].startup > 100   # the 2-minute startup
+    assert CHANNEL_SPECS["dynamodb"].max_item == 400_000
+
+
+def test_analytical_model_regimes():
+    """The paper's headline: FaaS wins for small models/quick convergence;
+    loses when the per-round communication m dominates."""
+    # tiny model, few epochs (LR-like): FaaS faster
+    small = Workload(s_bytes=1e9, m_bytes=1e3, R=10, C=30.0)
+    assert faas_time(small, 10) < iaas_time(small, 10)
+    # big model, many rounds (ResNet-like): IaaS faster
+    big = Workload(s_bytes=1e9, m_bytes=100e6, R=200, C=300.0)
+    assert faas_time(big, 10) > iaas_time(big, 10)
+
+
+def test_analytical_matches_emulator_shape(higgs):
+    """Emulated FaaS runtime within 2x of the closed-form model (same
+    constants, same round counts)."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    algo = make_algorithm("ga_sgd", lr=0.3, batch_size=1024)
+    r = FaaSRuntime(workers=5).train(model, algo, tr, va, max_epochs=3)
+    rounds = r.rounds
+    wl = Workload(s_bytes=tr.nbytes, m_bytes=model_bytes(model.init(
+        __import__("jax").random.key(0))), R=rounds, C=0.001,
+        f=lambda w: 1.0)
+    t_model = faas_time(wl, 5)
+    assert 0.5 < r.sim_time / t_model < 2.0
+
+
+def test_what_if_q1_q2():
+    wl = Workload(s_bytes=4e9, m_bytes=12e6, R=50, C=120.0)
+    q1 = q1_fast_hybrid(wl, 10)
+    assert q1["hybrid_10GBps"] < q1["hybrid_now"]
+    q2 = q2_hot_data(wl, 10)
+    assert q2["iaas_hot"] < q2["faas_hot"]  # paper Fig 15
+
+
+def test_epoch_estimator(higgs):
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    algo = make_algorithm("ma_sgd", lr=0.3, batch_size=1024)
+    ep = estimate_epochs(model, algo, tr, target_loss=0.55, max_epochs=20)
+    assert 1 <= ep <= 20
