@@ -47,6 +47,24 @@ def run(quick: bool = True):
                      "sim_time_s": i.sim_time, "cost_usd": i.cost,
                      "derived": f"cost=${i.cost:.4f}"})
 
+    # ---- heterogeneous fleets (engine scenario, DESIGN.md §7.2) ------------
+    algo = make_algorithm("ga_sgd", lr=0.05, batch_size=512)
+    het_f = FaaSRuntime(workers=6, lambda_gb=(3.0, 3.0, 3.0, 3.0, 1.0, 1.0),
+                        channel="memcached").train(mn, algo, ctr, cva,
+                                                   max_epochs=1)
+    rows.append({"name": "hetero_faas_mixed_gb",
+                 "us_per_call": het_f.sim_time * 1e6,
+                 "sim_time_s": het_f.sim_time, "cost_usd": het_f.cost,
+                 "derived": f"cost=${het_f.cost:.4f};loss={het_f.final_loss:.4f}"})
+    algo = make_algorithm("admm", lr=0.1, local_epochs=5)
+    het_i = IaaSRuntime(workers=4, instance=("c5.large", "c5.large",
+                                             "t2.medium", "t2.medium")).train(
+        lr_model, algo, tr, va, max_epochs=3)
+    rows.append({"name": "hetero_iaas_mixed_instances",
+                 "us_per_call": het_i.sim_time * 1e6,
+                 "sim_time_s": het_i.sim_time, "cost_usd": het_i.cost,
+                 "derived": f"cost=${het_i.cost:.4f};loss={het_i.final_loss:.4f}"})
+
     # ---- COST sanity check (§5.1.1): same statistical work (5 EM epochs),
     # compute-heavy k-means, single machine vs 10 workers --------------------
     kds = make_dataset("higgs", rows=400_000 if quick else 2_000_000)

@@ -44,6 +44,28 @@ def main():
         print(f"{name:14s} startup={bd['startup']:7.1f}s load={bd['load']:5.2f}s"
               f" compute={bd['compute']:6.2f}s comm={bd['comm']:8.2f}s")
 
+    print("\n== sync protocols through the engine (BSP / ASP / SSP s=2) ==")
+    for sync in ("bsp", "asp", "ssp:2"):
+        r = FaaSRuntime(workers=10, sync=sync, straggler=6.0).train(
+            model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048), tr, va,
+            max_epochs=3)
+        print(f"{sync:7s} rounds={r.rounds:4d} time={r.sim_time:7.1f}s "
+              f"loss={r.final_loss:.4f} max_staleness={r.max_staleness}")
+
+    print("\n== spot-instance IaaS: preemptions + restart-from-checkpoint ==")
+    demand = IaaSRuntime(workers=10).train(
+        model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048), tr, va,
+        max_epochs=3)
+    t0 = demand.breakdown["startup"]
+    spot = IaaSRuntime(workers=10, spot=True,
+                       preempt_at=((2, t0 + 2.0), (7, t0 + 5.0))).train(
+        model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048), tr, va,
+        max_epochs=3)
+    print(f"on-demand {demand.sim_time:7.1f}s ${demand.cost:.4f}   "
+          f"spot {spot.sim_time:7.1f}s ${spot.cost:.4f} "
+          f"({spot.preemptions} preemptions, identical numerics: "
+          f"{abs(spot.final_loss - demand.final_loss) < 1e-6})")
+
     print("\n== what-if: 10 GB/s FaaS<->VM link (paper Fig 14) ==")
     wl = Workload(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)
     for k, v in q1_fast_hybrid(wl, 10).items():

@@ -1,17 +1,26 @@
 """LambdaML core: the paper's design space as composable pieces.
 
 - algorithms: GA-SGD / MA-SGD / ADMM / EM-kmeans (shared FaaS+IaaS impls)
-- channels:   S3 / Memcached / Redis / DynamoDB / hybrid VM-PS emulation
+- channels:   S3 / Memcached / Redis / DynamoDB / hybrid VM-PS / VM NICs
 - patterns:   AllReduce / ScatterReduce over a storage channel
+- engine:     the discrete-event simulation core (clocks, failures, metering)
+- sync:       BSP / ASP / SSP protocol objects over the engine
 - runtimes:   FaaSRuntime (LambdaML) and IaaSRuntime (distributed-PyTorch)
+              platform adapters, incl. spot and heterogeneous fleets
 - analytical: the §5.3 cost/performance model + what-if studies
 """
 from repro.core.algorithms import (  # noqa: F401
     ADMM, Algorithm, EMKMeans, GASGD, MASGD, make_algorithm,
 )
 from repro.core.channels import (  # noqa: F401
-    CHANNEL_SPECS, ChannelItemTooLarge, StorageChannel, VMParameterServer,
+    CHANNEL_SPECS, ChannelItemTooLarge, StorageChannel, VMNetwork,
+    VMParameterServer,
+)
+from repro.core.engine import (  # noqa: F401
+    FailureProcess, InjectedPreemptions, PoissonPreemptions, RunResult,
+    SimContext, StragglerProcess, simulate,
 )
 from repro.core.mlmodels import StudyModel, make_study_model, model_bytes  # noqa: F401
 from repro.core.patterns import allreduce, scatter_reduce  # noqa: F401
-from repro.core.runtimes import FaaSRuntime, IaaSRuntime, RunResult  # noqa: F401
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime  # noqa: F401
+from repro.core.sync import ASP, BSP, SSP, SyncProtocol, make_sync  # noqa: F401

@@ -25,6 +25,16 @@ class ChannelItemTooLarge(Exception):
 
 @dataclass(frozen=True)
 class ChannelSpec:
+    """Measured constants for one storage service (Table 6 methodology,
+    DESIGN.md §3): per-op time = ``latency + size / bandwidth``.
+
+    ``large_item_slowdown`` models a single-threaded value server: for items
+    over 10 MB the effective bandwidth is divided by this factor.  The paper
+    observes this for Redis (§4.3) -- one event-loop thread serializes big
+    GET/SET payloads, so Redis falls behind the otherwise identically-priced
+    Memcached once update vectors reach CNN sizes, while staying on par for
+    the small linear models of Table 1.
+    """
     name: str
     bandwidth: float                 # bytes/s per worker stream
     latency: float                   # s per op
@@ -36,21 +46,30 @@ class ChannelSpec:
     large_item_slowdown: float = 1.0  # >1: single-threaded server (Redis)
 
 
-# Table 6 (+ §4.3 observations)
+# Table 6 (+ §4.3 observations), row by row:
 CHANNEL_SPECS = {
+    # Table 6 "S3" row: B_S3 = 65 MB/s per stream, L_S3 = 80 ms per request;
+    # no provisioning (always-on service), request-priced (no hourly $).
     "s3": ChannelSpec("s3", 65e6, 8e-2, 0.0, None, 0.0,
                       pricing.S3_PUT, pricing.S3_GET),
+    # Table 6 "ElastiCache" row, cache.t3.medium: B_EC = 630 MB/s,
+    # L_EC = 10 ms; ~2-minute cluster provisioning; hourly-priced.
     "memcached": ChannelSpec("memcached", 630e6, 1e-2, 130.0, None,
                              pricing.ELASTICACHE_HOURLY["cache.t3.medium"]),
+    # Table 6 "ElastiCache" row, cache.m5.large: 2x the t3.medium bandwidth
+    # (1260 MB/s) at ~2.3x the hourly price.
     "memcached_large": ChannelSpec("memcached_large", 1260e6, 1e-2, 130.0,
                                    None,
                                    pricing.ELASTICACHE_HOURLY["cache.m5.large"]),
+    # Same ElastiCache constants as memcached (same service class), plus the
+    # §4.3 single-threaded-server penalty on > 10 MB items (see ChannelSpec).
     "redis": ChannelSpec("redis", 630e6, 1e-2, 130.0, None,
                          pricing.ELASTICACHE_HOURLY["cache.t3.medium"],
                          large_item_slowdown=2.0),
-    # latency calibrated so small-model rounds run ~20% faster than S3,
-    # matching Table 1 (slowdown 0.81-0.93); item limit makes models
-    # > 400 KB infeasible exactly as the paper reports
+    # Table 1 + §4.3: bandwidth/latency calibrated so small-model rounds run
+    # ~20% faster than S3 (Table 1 slowdown 0.81-0.93 vs S3); the 400 KB
+    # item limit makes models > 400 KB infeasible exactly as the paper
+    # reports ("N/A" cells of Table 1); on-demand request pricing.
     "dynamodb": ChannelSpec("dynamodb", 81e6, 6.2e-2, 0.0, 400_000, 0.0,
                             put_cost=pricing.DYNAMODB_PER_MREQ / 1e6,
                             get_cost=pricing.DYNAMODB_PER_MREQ / 4e6),
@@ -106,6 +125,48 @@ class StorageChannel:
 
     def service_cost(self, seconds: float) -> float:
         return self.spec.hourly_cost / 3600.0 * seconds + self.op_cost
+
+
+class VMNetwork:
+    """Metered point-to-point VM network + in-memory key-value host.
+
+    Implements the same metering interface as :class:`StorageChannel`
+    (``put``/``get`` return simulated seconds, op counters accumulate) so the
+    discrete-event engine can treat "files on S3" and "tensors over a NIC"
+    uniformly (DESIGN.md §4.3).  ``put``/``get`` model a worker exchanging a
+    payload with the key-value host (worker 0) over one NIC stream;
+    ``allreduce_time`` is the paper's ring model for the BSP collective.
+    The network itself bills nothing -- NICs come with the instances.
+    """
+
+    def __init__(self, bandwidth: float, latency: float):
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.store: dict[str, np.ndarray] = {}
+        self.ops = {"put": 0, "get": 0}
+
+    def _xfer(self, size: int) -> float:
+        return self.latency + size / self.bandwidth
+
+    def put(self, key: str, payload: np.ndarray) -> float:
+        self.store[key] = payload
+        self.ops["put"] += 1
+        return self._xfer(nbytes(payload))
+
+    def get(self, key: str) -> tuple[np.ndarray, float]:
+        payload = self.store[key]
+        self.ops["get"] += 1
+        return payload, self._xfer(nbytes(payload))
+
+    def allreduce_time(self, size: int, workers: int) -> float:
+        """MPI ring AllReduce (paper model): ``(2w-2) * (m/w/Bn + Ln)``."""
+        if workers <= 1:
+            return 0.0
+        return (2 * workers - 2) * (size / workers / self.bandwidth
+                                    + self.latency)
+
+    def service_cost(self, seconds: float) -> float:
+        return 0.0
 
 
 @dataclass

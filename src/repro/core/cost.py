@@ -26,6 +26,8 @@ ELASTICACHE_HOURLY = {
     "cache.m5.large": 0.156,
 }
 DYNAMODB_PER_MREQ = 1.25          # $ per million write request units (on-demand)
+SPOT_DISCOUNT = 0.3               # spot price as a fraction of on-demand
+                                  # (paper-era us-east-1 averages ~65-75% off)
 S3_PUT = 5e-6                     # $ per PUT
 S3_GET = 4e-7                     # $ per GET
 

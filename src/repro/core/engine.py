@@ -1,0 +1,393 @@
+"""Discrete-event training simulation engine (DESIGN.md §4).
+
+One per-worker virtual-clock event loop drives every (infrastructure x sync
+protocol) combination in the study.  The engine owns everything that used to
+be duplicated between the FaaS and IaaS training loops:
+
+- per-worker clocks, the startup/load prologue, and the time/cost meters,
+- the checkpoint/restart machinery (Lambda 15-minute lifetime rotation and
+  spot-instance preemption share one code path, DESIGN.md §7.1),
+- pluggable straggler and failure processes,
+- the ``CommBackend`` seam: a metering interface shared by storage channels
+  (:class:`repro.core.channels.StorageChannel`), the hybrid VM parameter
+  server, and VM NIC networks (:class:`repro.core.channels.VMNetwork`).
+
+Sync protocols (:mod:`repro.core.sync`) are strategy objects over a
+:class:`SimContext`; infrastructures (:mod:`repro.core.runtimes`) are
+platform adapters queried through duck-typed hooks.  Neither imports the
+other, so new protocols and new platforms compose for free.
+
+All payloads are REAL numpy arrays (numerics are exact; only time and money
+are simulated) -- the paper's statistical/system efficiency split.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core import cost as pricing
+from repro.core.channels import ChannelItemTooLarge, StorageChannel, VMNetwork
+from repro.core.mlmodels import model_bytes
+from repro.core.patterns import PATTERNS
+from repro.data.synthetic import partition
+
+
+@dataclass
+class RunResult:
+    """Outcome of one simulated training run (shared FaaS/IaaS schema)."""
+    system: str
+    algorithm: str
+    workers: int
+    history: list = field(default_factory=list)   # [(sim_time_s, loss)]
+    rounds: int = 0
+    sim_time: float = 0.0
+    cost: float = 0.0
+    breakdown: dict = field(default_factory=dict)
+    converged: bool = False
+    error: str = ""
+    preemptions: int = 0          # involuntary restarts (spot / crash)
+    max_staleness: int = 0        # max observed round lag at a model read
+
+    @property
+    def final_loss(self) -> float:
+        return self.history[-1][1] if self.history else float("nan")
+
+    def to_dict(self):
+        return {"system": self.system, "algorithm": self.algorithm,
+                "workers": self.workers, "rounds": self.rounds,
+                "sim_time_s": round(self.sim_time, 2),
+                "cost_usd": round(self.cost, 4),
+                "final_loss": self.final_loss,
+                "converged": self.converged,
+                "preemptions": self.preemptions,
+                "max_staleness": self.max_staleness,
+                "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
+                "error": self.error}
+
+
+# ------------------------------------------------------------ processes -----
+
+@dataclass
+class StragglerProcess:
+    """Per-worker relative compute slowdown (1.0 = nominal).
+
+    Log-normal jitter plus one deterministic straggler when ``factor > 1``;
+    ``cap`` models backup invocations racing the straggler (effective speed =
+    min(own, median), DESIGN.md §7.3).
+    """
+    factor: float = 1.0
+    jitter: float = 0.05
+    cap_at_median: bool = False
+
+    def speeds(self, w: int, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        s = np.exp(rng.normal(0.0, self.jitter, w))
+        if self.factor > 1.0:
+            s[rng.integers(0, w)] *= self.factor
+        if self.cap_at_median:
+            s = np.minimum(s, np.median(s))
+        return s
+
+
+class FailureProcess:
+    """Base failure process: no preemptions ever."""
+
+    def next_preemption(self, worker: int, after_t: float,
+                        before_t: float) -> float | None:
+        """Pop the next preemption for ``worker`` due before ``before_t``
+        (or None).  ``after_t`` is the start of the queried healthy-runtime
+        window; stochastic processes count exposure from it, deterministic
+        ones may ignore it and let past events fire clamped to the present.
+        Per-worker calls must be time-monotone; a returned event is
+        consumed."""
+        return None
+
+
+class PoissonPreemptions(FailureProcess):
+    """Memoryless spot-market preemptions at ``rate`` per worker-hour.
+
+    Exposure is counted in *healthy instance runtime*: a replacement
+    instance brought up after a preemption starts a fresh memoryless lease,
+    so restart/checkpoint time itself is never preempted (and a high rate
+    degrades throughput instead of deadlocking the simulation).
+    """
+
+    def __init__(self, rate_per_hour: float, workers: int, seed: int = 0):
+        self.scale = 3600.0 / max(rate_per_hour, 1e-12)
+        self._rng = np.random.default_rng(seed ^ 0x5107)
+        self._togo = [float(self._rng.exponential(self.scale))
+                      for _ in range(workers)]   # healthy s until next kill
+
+    def next_preemption(self, worker, after_t, before_t):
+        window = max(before_t - after_t, 0.0)
+        if self._togo[worker] >= window:
+            self._togo[worker] -= window
+            return None
+        t = after_t + self._togo[worker]
+        self._togo[worker] = float(self._rng.exponential(self.scale))
+        return t
+
+
+class InjectedPreemptions(FailureProcess):
+    """Deterministic preemptions at explicit ``(worker, sim_time)`` points --
+    the reproducible way to script a spot scenario in tests/benchmarks.
+
+    Unlike :class:`PoissonPreemptions`, ``after_t`` is ignored: a scripted
+    kill never silently vanishes.  An injected time that is already in the
+    worker's past (e.g. before startup finished) fires at the next query and
+    is executed clamped to the worker's current clock."""
+
+    def __init__(self, at: tuple[tuple[int, float], ...]):
+        self._pending: dict[int, list[float]] = {}
+        for wk, t in at:
+            self._pending.setdefault(int(wk), []).append(float(t))
+        for ts in self._pending.values():
+            ts.sort(reverse=True)  # pop() from the end = earliest first
+
+    def next_preemption(self, worker, after_t, before_t):
+        ts = self._pending.get(worker)
+        if ts and ts[-1] < before_t:
+            return ts.pop()
+        return None
+
+
+# --------------------------------------------------------- comm backends ----
+
+class CommBackend:
+    """How a fleet moves update vectors.  All backends expose:
+
+    - ``bsp_reduce(ctx, updates, tag)``: merge one BSP round, advancing
+      ``ctx.clock`` and the comm meter; returns the merged vector.
+    - ``kvstore()``: a metered key-value store (``put``/``get`` returning
+      simulated seconds) holding the global model for ASP/SSP.
+    - ``service_cost(seconds)``: $ for the communication substrate itself.
+    """
+
+    def bsp_reduce(self, ctx: "SimContext", updates: list, tag: str):
+        raise NotImplementedError
+
+    def kvstore(self):
+        raise NotImplementedError
+
+    def service_cost(self, seconds: float) -> float:
+        return 0.0
+
+
+class ChannelComm(CommBackend):
+    """Pure-FaaS: AllReduce/ScatterReduce files on a storage channel."""
+
+    def __init__(self, chan: StorageChannel, pattern: str):
+        self.chan = chan
+        self.pattern = pattern
+
+    def bsp_reduce(self, ctx, updates, tag):
+        merged, times = PATTERNS[self.pattern](self.chan, updates, tag)
+        base = float(np.max(ctx.clock))      # BSP barrier
+        ctx.meter_add("comm", float(np.mean(times)))
+        ctx.clock[:] = base + times
+        return merged
+
+    def kvstore(self):
+        return self.chan
+
+    def service_cost(self, seconds):
+        return self.chan.service_cost(seconds)
+
+
+class PSComm(CommBackend):
+    """Hybrid (Cirrus): VM-hosted parameter server; S3 keeps checkpoints and
+    the ASP/SSP global model (Table 2 costs bound the PS itself)."""
+
+    def __init__(self, ps, chan: StorageChannel):
+        self.ps = ps
+        self.chan = chan
+
+    def bsp_reduce(self, ctx, updates, tag):
+        dt = self.ps.push_pull_round(updates[0].nbytes, ctx.w)
+        ctx.clock += dt
+        ctx.meter_add("comm", dt)
+        return np.mean(updates, axis=0)
+
+    def kvstore(self):
+        return self.chan
+
+    def service_cost(self, seconds):
+        return (self.chan.service_cost(seconds)
+                + pricing.ec2_cost(self.ps.instance, seconds, self.ps.n_servers))
+
+
+class MPIComm(CommBackend):
+    """IaaS: ring AllReduce over VM NICs; worker 0 doubles as the in-memory
+    key-value host for ASP/SSP (reached through the same metered network)."""
+
+    def __init__(self, net: VMNetwork):
+        self.net = net
+
+    def bsp_reduce(self, ctx, updates, tag):
+        merged = np.mean(updates, axis=0)
+        t_comm = self.net.allreduce_time(updates[0].nbytes, ctx.w)
+        ctx.clock[:] = float(np.max(ctx.clock)) + t_comm   # full barrier
+        ctx.meter_add("comm", t_comm)
+        return merged
+
+    def kvstore(self):
+        return self.net
+
+    def service_cost(self, seconds):
+        return 0.0   # NICs come with the instances; billed by the platform
+
+
+# -------------------------------------------------------------- context -----
+
+@dataclass
+class SimContext:
+    """Mutable state of one simulated run, shared by engine + protocol."""
+    platform: Any
+    model: Any
+    algo: Any
+    states: list
+    parts: list
+    ds_val: Any
+    res: RunResult
+    comm: CommBackend
+    ckpt_store: Any
+    failure: FailureProcess
+    clock: np.ndarray          # per-worker virtual time (s)
+    invoked_at: np.ndarray     # per-worker start of current lease
+    speeds: np.ndarray         # straggler multipliers
+    c_round: np.ndarray        # per-worker nominal seconds per round
+    mbytes: int
+    lifetime: float            # s before planned rotation; inf = never
+    lifetime_margin: float
+    target_loss: float | None
+    max_epochs: int
+    eval_every: int
+    invocations: int = 0
+
+    @property
+    def w(self) -> int:
+        return len(self.clock)
+
+    def meter_add(self, key: str, dt: float):
+        self.res.breakdown[key] = self.res.breakdown.get(key, 0.0) + dt
+
+    # ---- compute ----
+    def tick_compute(self):
+        """Advance every worker by one local round of compute."""
+        c = self.c_round * self.speeds
+        self.clock += c
+        self.meter_add("compute", float(np.mean(c)))
+
+    def step_compute(self, i: int) -> float:
+        """One worker's seconds for one local round (event-driven loops)."""
+        c = float(self.c_round[i] * self.speeds[i])
+        self.meter_add("compute", c / self.w)
+        return c
+
+    # ---- checkpoint / restart machinery (shared lifetime + spot path) ----
+    def _rotate(self, i: int, at_time: float, meter_key: str):
+        """Checkpoint worker ``i`` to the checkpoint store and bring a fresh
+        replacement up at ``at_time``: ckpt put + cold start + ckpt get."""
+        blob = np.zeros(max(self.mbytes // 4, 1), np.float32)
+        dt_put = self.ckpt_store.put(f"ckpt/{i}", blob)
+        restart = self.platform.restart_time()
+        _, dt_get = self.ckpt_store.get(f"ckpt/{i}")
+        self.clock[i] = at_time + dt_put + restart + dt_get
+        self.meter_add(meter_key, dt_put + restart + dt_get)
+        self.invoked_at[i] = self.clock[i]
+        self.invocations += 1
+
+    def ensure_alive(self, i: int, est: float):
+        """Guarantee worker ``i`` survives its next ``est`` seconds of work:
+        consume any spot/crash preemption in the window, then rotate ahead of
+        a planned lifetime expiry (the Lambda 15-minute contract)."""
+        t_pre = self.failure.next_preemption(i, float(self.clock[i]),
+                                             float(self.clock[i]) + est)
+        while t_pre is not None:
+            self._rotate(i, max(t_pre, float(self.clock[i])), "restart")
+            self.res.preemptions += 1
+            t_pre = self.failure.next_preemption(i, float(self.clock[i]),
+                                                 float(self.clock[i]) + est)
+        if (math.isfinite(self.lifetime)
+                and self.clock[i] - self.invoked_at[i] + est
+                > self.lifetime - self.lifetime_margin):
+            self._rotate(i, float(self.clock[i]), "checkpoint")
+
+    # ---- evaluation ----
+    def record_eval(self, rnd: int, total_rounds: int, params) -> bool:
+        """Round-boundary eval (BSP); returns True when converged."""
+        if rnd % self.eval_every == 0 or rnd == total_rounds - 1:
+            loss = self.model.eval_loss(params, self.ds_val)
+            self.res.history.append((float(np.max(self.clock)), loss))
+            if self.target_loss is not None and loss <= self.target_loss:
+                self.res.converged = True
+                return True
+        return False
+
+    def record_eval_at(self, t: float, params) -> bool:
+        """Event-time eval (ASP/SSP); returns True when converged."""
+        loss = self.model.eval_loss(params, self.ds_val)
+        self.res.history.append((t, loss))
+        if self.target_loss is not None and loss <= self.target_loss:
+            self.res.converged = True
+            return True
+        return False
+
+
+# -------------------------------------------------------------- simulate ----
+
+def simulate(platform, sync, model, algo, ds_train, ds_val, *,
+             target_loss: float | None = None, max_epochs: int = 10,
+             eval_every: int = 1, data_local: bool = False) -> RunResult:
+    """Run one training scenario: ``platform`` (infrastructure adapter) x
+    ``sync`` (protocol object) x ``algo`` on real data/numerics."""
+    import jax
+
+    w = platform.workers
+    res = RunResult(platform.system_name(), algo.name, w)
+    parts = partition(ds_train, w)
+    params0 = model.init(jax.random.key(platform.seed))
+    mbytes = model_bytes(params0)
+    err = platform.validate(mbytes)
+    if err:
+        res.error = err
+        return res
+    states = [algo.init_worker(model, params0, p) for p in parts]
+
+    comm = platform.make_comm()
+    speeds = platform.worker_speeds()
+    t_start = platform.startup_time(comm)
+    part_bytes = max(p.nbytes for p in parts)
+    t_load = platform.load_time(part_bytes, data_local)
+    res.breakdown = dict(platform.init_breakdown())
+    res.breakdown.update(startup=t_start, load=t_load)
+
+    flops = platform.worker_flops_array(model)
+    rows = algo.rows_per_round(parts[0])
+    c_round = rows * model.flops_per_row / flops
+
+    ctx = SimContext(
+        platform=platform, model=model, algo=algo, states=states, parts=parts,
+        ds_val=ds_val, res=res, comm=comm,
+        ckpt_store=platform.make_ckpt_store(comm),
+        failure=platform.failure_process(),
+        clock=np.full(w, t_start + t_load),
+        invoked_at=np.full(w, t_start + t_load),
+        speeds=speeds, c_round=np.asarray(c_round, float), mbytes=mbytes,
+        lifetime=platform.lifetime_s(),
+        lifetime_margin=platform.lifetime_margin_s(),
+        target_loss=target_loss, max_epochs=max_epochs, eval_every=eval_every,
+        invocations=w)
+
+    try:
+        sync.run(ctx)
+    except ChannelItemTooLarge as e:
+        res.error = str(e)
+        return res
+
+    res.sim_time = float(np.max(ctx.clock))
+    res.cost = platform.finalize_cost(ctx)
+    return res

@@ -1,9 +1,11 @@
 """FaaS runtime (LambdaML) -- named entry point per DESIGN.md §5.
 
-The implementation lives in :mod:`repro.core.runtimes` (FaaS and IaaS share
-the algorithm/partition/metering machinery; keeping them in one module keeps
-the "same algorithm both sides" guarantee structural).  This module is the
-documented import surface:
+The platform adapter lives in :mod:`repro.core.runtimes` (FaaS and IaaS
+share the algorithm/partition/metering machinery; keeping them in one module
+keeps the "same algorithm both sides" guarantee structural), and the shared
+training loops live in the discrete-event engine (:mod:`repro.core.engine`,
+DESIGN.md §4) driven by the sync protocols of :mod:`repro.core.sync`.
+This module is the documented import surface:
 
     from repro.core.faas import FaaSRuntime, LIFETIME
 """

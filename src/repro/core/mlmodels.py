@@ -150,9 +150,9 @@ def _mlp_sizes(d_in: int, n_out: int, target_mb: float):
 
 
 def make_mlp(ds: Dataset, target_mb: float, name: str) -> StudyModel:
-    """MobileNet-12MB / ResNet50-89MB stand-ins (see DESIGN.md: the paper's
-    CNNs are stand-ins sized by parameter bytes, which is what drives the
-    communication study)."""
+    """MobileNet-12MB / ResNet50-89MB stand-ins (see DESIGN.md §3: the
+    paper's CNNs are stand-ins sized by parameter bytes, which is what
+    drives the communication study)."""
     sizes = _mlp_sizes(ds.d, ds.n_classes, target_mb)
 
     def init(key):

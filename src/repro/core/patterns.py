@@ -6,6 +6,11 @@ Both patterns take the workers' flat update vectors, move them through the
 channel (real payloads), and return (merged_vector, per_worker_times) where
 times include the BSP waits -- so AllReduce's leader bottleneck and
 ScatterReduce's balanced reduce show up exactly as in Table 3.
+
+Any store implementing the engine's metering interface (DESIGN.md §4.3:
+``put``/``get`` returning simulated seconds, a ``spec.latency``) works; the
+discrete-event engine plugs these into its BSP rounds via
+:class:`repro.core.engine.ChannelComm`.
 """
 from __future__ import annotations
 

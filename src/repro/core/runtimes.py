@@ -1,33 +1,46 @@
-"""FaaS and IaaS training runtimes (paper §3.3, §5).
+"""FaaS and IaaS training runtimes (paper §3.3, §5; DESIGN.md §5).
 
 Both runtimes execute the REAL optimization math in JAX (identical numerics,
 so FaaS and IaaS converge identically for the same algorithm -- the paper's
 statistical/system efficiency split) while metering simulated wall-clock and
 dollars from the measured constants of Tables 2/6 and the pricing model.
 
-FaaS specifics implemented here:
+Since the engine refactor (DESIGN.md §4) the classes here are *platform
+adapters*: dataclass configs that hand the discrete-event engine
+(:mod:`repro.core.engine`) their startup/load/restart timings, worker fleet
+shape, communication backend, failure process, and cost model.  The training
+loops themselves -- one BSP round loop and one ASP/SSP event loop -- live in
+:mod:`repro.core.sync` and are shared by every platform.
+
+FaaS specifics (LambdaML):
 - starter->worker hierarchical invocation (startup t^F(w)),
 - 15-minute worker lifetime: checkpoint to the channel + re-invocation,
-- BSP via the two-phase merge/update pattern, ASP via SIREN-style global
-  model overwrite (event-driven, stale reads emerge naturally),
+- BSP via the two-phase merge/update pattern, ASP/SSP via SIREN-style global
+  model on the channel (event-driven, stale reads emerge naturally),
 - straggler injection + optional backup-invocation mitigation,
-- pure-FaaS channels (S3/Memcached/Redis/DynamoDB) or hybrid VM-PS.
+- pure-FaaS channels (S3/Memcached/Redis/DynamoDB) or hybrid VM-PS,
+- heterogeneous fleets: per-worker Lambda memory sizes (``lambda_gb`` tuple).
+
+IaaS specifics (distributed-PyTorch-style VM cluster):
+- ring AllReduce over VM NICs; worker 0 hosts the ASP/SSP model store,
+- spot fleets (``spot=True``): preemption events (Poisson or injected) +
+  restart-from-checkpoint via S3, discounted hourly pricing,
+- heterogeneous fleets: per-worker instance types (``instance`` tuple);
+  the collective runs at the slowest NIC.
 """
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import cost as pricing
-from repro.core.algorithms import Algorithm
-from repro.core.channels import (
-    ChannelItemTooLarge, StorageChannel, VMParameterServer, nbytes,
+from repro.core.channels import StorageChannel, VMNetwork, VMParameterServer
+from repro.core.engine import (  # noqa: F401  (RunResult re-exported)
+    ChannelComm, FailureProcess, InjectedPreemptions, MPIComm, PoissonPreemptions,
+    PSComm, RunResult, StragglerProcess, simulate,
 )
-from repro.core.mlmodels import StudyModel, model_bytes
-from repro.core.patterns import PATTERNS
-from repro.data.synthetic import Dataset, partition
 
 # Table 6 startup constants (seconds) -- linear interpolation between points
 _T_FAAS = {1: 1.2, 10: 1.2, 50: 11.0, 100: 18.0, 200: 35.0, 300: 50.0}
@@ -54,272 +67,220 @@ def interp_startup(table: dict, w: int) -> float:
     return table[ks[-1]] * w / ks[-1]
 
 
-@dataclass
-class RunResult:
-    system: str
-    algorithm: str
-    workers: int
-    history: list = field(default_factory=list)   # [(sim_time_s, loss)]
-    rounds: int = 0
-    sim_time: float = 0.0
-    cost: float = 0.0
-    breakdown: dict = field(default_factory=dict)
-    converged: bool = False
-    error: str = ""
-
-    @property
-    def final_loss(self) -> float:
-        return self.history[-1][1] if self.history else float("nan")
-
-    def to_dict(self):
-        return {"system": self.system, "algorithm": self.algorithm,
-                "workers": self.workers, "rounds": self.rounds,
-                "sim_time_s": round(self.sim_time, 2),
-                "cost_usd": round(self.cost, 4),
-                "final_loss": self.final_loss,
-                "converged": self.converged,
-                "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
-                "error": self.error}
+def _per_worker(value, w: int) -> np.ndarray:
+    """Broadcast a scalar or validate a per-worker sequence of length w."""
+    if np.isscalar(value) or isinstance(value, str):
+        return np.asarray([value] * w)
+    arr = np.asarray(value)
+    if len(arr) != w:
+        raise ValueError(f"per-worker config has {len(arr)} entries, "
+                         f"expected {w}")
+    return arr
 
 
-def _speeds(w: int, straggler: float, seed: int = 0) -> np.ndarray:
-    """Per-worker relative compute slowdown (1.0 = nominal)."""
-    rng = np.random.default_rng(seed)
-    s = np.exp(rng.normal(0.0, 0.05, w))
-    if straggler > 1.0:
-        s[rng.integers(0, w)] *= straggler
-    return s
+def _make_failure(rate: float, at: tuple, workers: int,
+                  seed: int) -> FailureProcess:
+    if at:
+        return InjectedPreemptions(tuple(at))
+    if rate > 0.0:
+        return PoissonPreemptions(rate, workers, seed)
+    return FailureProcess()
 
 
 @dataclass
 class FaaSRuntime:
-    """LambdaML."""
+    """LambdaML (platform adapter for the discrete-event engine)."""
     workers: int = 10
     channel: str = "s3"                  # s3|memcached|redis|dynamodb|vmps
     pattern: str = "allreduce"           # allreduce|scatter_reduce
-    sync: str = "bsp"                    # bsp|asp
-    lambda_gb: float = 3.0
+    sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
+    lambda_gb: object = 3.0              # scalar or per-worker sizes (hetero)
     straggler: float = 1.0
     backup_invocations: bool = False     # straggler mitigation (beyond paper)
     lifetime: float = LIFETIME
     seed: int = 0
+    preempt_rate: float = 0.0            # worker crashes per worker-hour
+    preempt_at: tuple = ()               # injected (worker, sim_time) kills
+
+    # ---- user entry point ---------------------------------------------------
+    def train(self, model, algo, ds_train, ds_val, *,
+              target_loss: float | None = None, max_epochs: int = 10,
+              eval_every: int = 1) -> RunResult:
+        from repro.core.sync import make_sync
+        return simulate(self, make_sync(self.sync), model, algo,
+                        ds_train, ds_val, target_loss=target_loss,
+                        max_epochs=max_epochs, eval_every=eval_every)
+
+    # ---- fleet shape --------------------------------------------------------
+    def _gb_array(self) -> np.ndarray:
+        return _per_worker(self.lambda_gb, self.workers).astype(float)
 
     def worker_flops(self) -> float:
-        return (pricing.LAMBDA_3GB_FLOPS if self.lambda_gb >= 3.0
-                else pricing.LAMBDA_1GB_FLOPS)
+        """Slowest worker's FLOP/s (scalar convenience over the array)."""
+        return float(np.min(self.worker_flops_array(None)))
 
-    def train(self, model: StudyModel, algo: Algorithm, ds_train: Dataset,
-              ds_val: Dataset, *, target_loss: float | None = None,
-              max_epochs: int = 10, eval_every: int = 1) -> RunResult:
-        import jax
+    def worker_flops_array(self, model) -> np.ndarray:
+        gb = self._gb_array()
+        return np.where(gb >= 3.0, pricing.LAMBDA_3GB_FLOPS,
+                        pricing.LAMBDA_1GB_FLOPS)
 
-        w = self.workers
-        res = RunResult("faas", algo.name, w)
-        parts = partition(ds_train, w)
-        params0 = model.init(jax.random.key(self.seed))
-        states = [algo.init_worker(model, params0, p) for p in parts]
-        part_bytes = max(p.nbytes for p in parts)
-        mbytes = model_bytes(params0)
-        if 4 * mbytes * self.lambda_gb == 0 or mbytes > self.lambda_gb * 1e9 / 3:
-            res.error = "model exceeds Lambda memory"
-            return res
-        speeds = _speeds(w, self.straggler, self.seed)
-        if self.backup_invocations:
-            # backup lambda races the straggler; effective speed = min(x, p50)
-            speeds = np.minimum(speeds, np.median(speeds))
+    def worker_speeds(self) -> np.ndarray:
+        return StragglerProcess(
+            factor=self.straggler,
+            cap_at_median=self.backup_invocations).speeds(self.workers,
+                                                          self.seed)
 
-        hybrid = self.channel == "vmps"
-        chan = StorageChannel("s3" if hybrid else self.channel)
-        ps = VMParameterServer() if hybrid else None
+    # ---- engine hooks -------------------------------------------------------
+    def system_name(self) -> str:
+        return "faas"
 
-        t_start = interp_startup(_T_FAAS, w)
-        if hybrid:
-            t_start = max(t_start, ps.startup)
-        t_start = max(t_start, chan.spec.startup)
-        t_load = L_S3 + part_bytes / B_S3
-        clock = np.full(w, t_start + t_load)
-        res.breakdown = {"startup": t_start, "load": t_load,
-                         "compute": 0.0, "comm": 0.0, "checkpoint": 0.0}
-        invoked_at = clock.copy()
-        invocations = w
-        flops = self.worker_flops()
-        rows = algo.rows_per_round(parts[0])
-        c_round = rows * model.flops_per_row / flops
+    def validate(self, mbytes: int) -> str:
+        gb_min = float(np.min(self._gb_array()))
+        if 4 * mbytes * gb_min == 0 or mbytes > gb_min * 1e9 / 3:
+            return "model exceeds Lambda memory"
+        return ""
 
-        if self.sync == "asp":
-            return self._train_asp(model, algo, states, parts, ds_val, chan,
-                                   res, clock, c_round, speeds, target_loss,
-                                   max_epochs, invocations)
+    def make_comm(self):
+        if self.channel == "vmps":
+            return PSComm(VMParameterServer(), StorageChannel("s3"))
+        return ChannelComm(StorageChannel(self.channel), self.pattern)
 
-        rpe = algo.rounds_per_epoch(parts[0])
-        epoch_rows = parts[0].n
-        total_rounds = max_epochs * rpe * max(1, algo.rows_per_round(parts[0])
-                                              // max(epoch_rows, 1)) \
-            if algo.name == "ga_sgd" else max_epochs
-        if algo.name == "ga_sgd":
-            total_rounds = max_epochs * rpe
+    def make_ckpt_store(self, comm):
+        return comm.chan          # FaaS comm is always ChannelComm or PSComm
 
-        try:
-            for rnd in range(total_rounds):
-                # lifetime management: checkpoint + re-invoke if needed
-                est = c_round * float(np.max(speeds)) + 5.0
-                for i in range(w):
-                    if clock[i] - invoked_at[i] + est > self.lifetime - LIFETIME_MARGIN:
-                        dt = chan.put(f"ckpt/{i}", np.zeros(mbytes // 4,
-                                                            np.float32))
-                        restart = interp_startup(_T_FAAS, 1)
-                        _, dtg = chan.get(f"ckpt/{i}")
-                        clock[i] += dt + restart + dtg
-                        res.breakdown["checkpoint"] += dt + restart + dtg
-                        invoked_at[i] = clock[i]
-                        invocations += 1
+    def startup_time(self, comm) -> float:
+        t = interp_startup(_T_FAAS, self.workers)
+        if isinstance(comm, PSComm):
+            t = max(t, comm.ps.startup)
+        if isinstance(comm, ChannelComm):
+            t = max(t, comm.chan.spec.startup)
+        return t
 
-                updates = [algo.local_update(model, st, rnd) for st in states]
-                c = c_round * speeds
-                clock += c
-                res.breakdown["compute"] += float(np.mean(c))
-                if hybrid:
-                    size = updates[0].nbytes
-                    dt = ps.push_pull_round(size, w)
-                    merged = np.mean(updates, axis=0)
-                    clock += dt
-                    res.breakdown["comm"] += dt
-                else:
-                    merged, times = PATTERNS[self.pattern](
-                        chan, updates, f"r{rnd}")
-                    base = float(np.max(clock))  # BSP barrier
-                    res.breakdown["comm"] += float(np.mean(times))
-                    clock = base + times
-                for st in states:
-                    algo.apply_merged(model, st, merged, w)
-                res.rounds += 1
-                if rnd % eval_every == 0 or rnd == total_rounds - 1:
-                    loss = model.eval_loss(algo.eval_params(states[0]), ds_val)
-                    res.history.append((float(np.max(clock)), loss))
-                    if target_loss is not None and loss <= target_loss:
-                        res.converged = True
-                        break
-        except ChannelItemTooLarge as e:
-            res.error = str(e)
-            return res
+    def load_time(self, part_bytes: int, data_local: bool = False) -> float:
+        return L_S3 + part_bytes / B_S3
 
-        res.sim_time = float(np.max(clock))
-        res.cost = (pricing.lambda_cost(self.lambda_gb,
-                                        float(np.sum(clock)), invocations)
-                    + chan.service_cost(res.sim_time)
-                    + (pricing.ec2_cost(ps.instance, res.sim_time)
-                       if hybrid else 0.0))
-        return res
+    def restart_time(self) -> float:
+        return interp_startup(_T_FAAS, 1)
 
-    # ---------------------------------------------------------------- ASP ----
-    def _train_asp(self, model, algo, states, parts, ds_val, chan, res,
-                   clock, c_round, speeds, target_loss, max_epochs,
-                   invocations):
-        """SIREN-style: one global model on storage, workers run free."""
-        import jax
-        from jax.flatten_util import ravel_pytree
+    def lifetime_s(self) -> float:
+        return self.lifetime
 
-        w = self.workers
-        flat0, unravel = ravel_pytree(states[0].params)
-        chan.put("global", np.asarray(flat0, np.float32))
-        rpe = algo.rounds_per_epoch(parts[0])
-        total = max_epochs * rpe * w
-        heap = [(clock[i], i) for i in range(w)]
-        heapq.heapify(heap)
-        done = 0
-        while done < total:
-            t, i = heapq.heappop(heap)
-            g_flat, dt1 = chan.get("global")
-            states[i].params = unravel(g_flat)
-            upd = algo.local_update(model, states[i], done)
-            # SGD step on the (possibly stale) global model
-            T = max(done // (rpe * w), 1)
-            lr = algo.lr / np.sqrt(T)  # 1/sqrt(T) decay (paper §4.5)
-            new = g_flat - lr * upd
-            dt2 = chan.put("global", new.astype(np.float32))
-            c = c_round * speeds[i]
-            t += dt1 + c + dt2
-            res.breakdown["comm"] += dt1 + dt2
-            res.breakdown["compute"] += c / w
-            heapq.heappush(heap, (t, i))
-            done += 1
-            res.rounds = done
-            if done % (w * max(rpe // 4, 1)) == 0 or done == total:
-                cur, _ = chan.get("global")
-                loss = model.eval_loss(unravel(cur), ds_val)
-                res.history.append((t, loss))
-                if target_loss is not None and loss <= target_loss:
-                    res.converged = True
-                    break
-        res.sim_time = max(t for t, _ in heap) if heap else 0.0
-        res.cost = (pricing.lambda_cost(self.lambda_gb, res.sim_time * w,
-                                        invocations)
-                    + chan.service_cost(res.sim_time))
-        return res
+    def lifetime_margin_s(self) -> float:
+        return LIFETIME_MARGIN
+
+    def failure_process(self) -> FailureProcess:
+        return _make_failure(self.preempt_rate, self.preempt_at,
+                             self.workers, self.seed)
+
+    def init_breakdown(self) -> dict:
+        return {"startup": 0.0, "load": 0.0, "compute": 0.0, "comm": 0.0,
+                "checkpoint": 0.0}
+
+    def finalize_cost(self, ctx) -> float:
+        gb_seconds = float(np.dot(self._gb_array(), ctx.clock))
+        sim_time = float(np.max(ctx.clock))
+        return (gb_seconds * pricing.LAMBDA_GB_S
+                + ctx.invocations * pricing.LAMBDA_REQUEST
+                + ctx.comm.service_cost(sim_time))
 
 
 @dataclass
 class IaaSRuntime:
     """Distributed-PyTorch-style VM cluster (strong IaaS baseline)."""
     workers: int = 10
-    instance: str = "t2.medium"
+    instance: object = "t2.medium"       # scalar or per-worker types (hetero)
     gpu: bool = False
     straggler: float = 1.0
     seed: int = 0
+    sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
+    spot: bool = False                   # preemptible fleet + discounted $
+    preempt_rate: float = 2.0            # preemptions per worker-hour (spot)
+    preempt_at: tuple = ()               # injected (worker, sim_time) kills
+    ckpt_channel: str = "s3"             # where spot checkpoints live
 
-    def worker_flops(self, model: StudyModel) -> float:
+    # ---- user entry point ---------------------------------------------------
+    def train(self, model, algo, ds_train, ds_val, *,
+              target_loss: float | None = None, max_epochs: int = 10,
+              eval_every: int = 1, data_local: bool = False) -> RunResult:
+        from repro.core.sync import make_sync
+        return simulate(self, make_sync(self.sync), model, algo,
+                        ds_train, ds_val, target_loss=target_loss,
+                        max_epochs=max_epochs, eval_every=eval_every,
+                        data_local=data_local)
+
+    # ---- fleet shape --------------------------------------------------------
+    def _instances(self) -> list[str]:
+        return list(_per_worker(self.instance, self.workers))
+
+    def worker_flops(self, model) -> float:
+        """Slowest worker's FLOP/s (scalar convenience over the array)."""
+        return float(np.min(self.worker_flops_array(model)))
+
+    def worker_flops_array(self, model) -> np.ndarray:
         if self.gpu and not model.convex:
-            return pricing.VM_GPU_FLOPS.get(self.instance, 150e9)
-        return pricing.VM_CPU_FLOPS
+            return np.asarray([pricing.VM_GPU_FLOPS.get(i, 150e9)
+                               for i in self._instances()])
+        return np.full(self.workers, pricing.VM_CPU_FLOPS)
 
-    def train(self, model: StudyModel, algo: Algorithm, ds_train: Dataset,
-              ds_val: Dataset, *, target_loss: float | None = None,
-              max_epochs: int = 10, eval_every: int = 1,
-              data_local: bool = False) -> RunResult:
-        import jax
+    def worker_speeds(self) -> np.ndarray:
+        return StragglerProcess(factor=self.straggler).speeds(self.workers,
+                                                              self.seed)
 
-        w = self.workers
-        res = RunResult("iaas" + ("-gpu" if self.gpu else ""), algo.name, w)
-        parts = partition(ds_train, w)
-        params0 = model.init(jax.random.key(self.seed))
-        states = [algo.init_worker(model, params0, p) for p in parts]
-        mbytes = model_bytes(params0)
-        speeds = _speeds(w, self.straggler, self.seed)
-        bn = B_NET.get(self.instance, 120e6)
-        ln = L_NET.get(self.instance, 5e-4)
+    # ---- engine hooks -------------------------------------------------------
+    def system_name(self) -> str:
+        return ("iaas" + ("-gpu" if self.gpu else "")
+                + ("-spot" if self.spot else ""))
 
-        t_start = interp_startup(_T_IAAS, w)
-        part_bytes = max(p.nbytes for p in parts)
-        t_load = part_bytes / (B_NET[self.instance] if data_local else B_S3)
-        clock = np.full(w, t_start + t_load)
-        res.breakdown = {"startup": t_start, "load": t_load,
-                         "compute": 0.0, "comm": 0.0}
-        flops = self.worker_flops(model)
-        rows = algo.rows_per_round(parts[0])
-        c_round = rows * model.flops_per_row / flops
-        rpe = algo.rounds_per_epoch(parts[0])
-        total_rounds = max_epochs * rpe
+    def validate(self, mbytes: int) -> str:
+        return ""
 
-        for rnd in range(total_rounds):
-            updates = [algo.local_update(model, st, rnd) for st in states]
-            merged = np.mean(updates, axis=0)
-            c = c_round * speeds
-            # MPI AllReduce (paper model): (2w-2) * (m/w/Bn + Ln)
-            t_comm = (2 * w - 2) * (updates[0].nbytes / w / bn + ln) if w > 1 else 0.0
-            clock = float(np.max(clock + c)) + t_comm
-            clock = np.full(w, clock)
-            res.breakdown["compute"] += float(np.mean(c))
-            res.breakdown["comm"] += t_comm
-            for st in states:
-                algo.apply_merged(model, st, merged, w)
-            res.rounds += 1
-            if rnd % eval_every == 0 or rnd == total_rounds - 1:
-                loss = model.eval_loss(algo.eval_params(states[0]), ds_val)
-                res.history.append((float(np.max(clock)), loss))
-                if target_loss is not None and loss <= target_loss:
-                    res.converged = True
-                    break
+    def _net(self) -> VMNetwork:
+        insts = self._instances()
+        bn = min(B_NET.get(i, 120e6) for i in insts)       # slowest NIC
+        ln = max(L_NET.get(i, 5e-4) for i in insts)
+        return VMNetwork(bn, ln)
 
-        res.sim_time = float(np.max(clock))
-        res.cost = pricing.ec2_cost(self.instance, res.sim_time, w)
-        return res
+    def make_comm(self):
+        return MPIComm(self._net())
+
+    def make_ckpt_store(self, comm):
+        return StorageChannel(self.ckpt_channel)
+
+    def startup_time(self, comm) -> float:
+        return interp_startup(_T_IAAS, self.workers)
+
+    def load_time(self, part_bytes: int, data_local: bool = False) -> float:
+        if data_local:
+            return part_bytes / min(B_NET.get(i, 120e6)
+                                    for i in self._instances())
+        return part_bytes / B_S3
+
+    def restart_time(self) -> float:
+        return interp_startup(_T_IAAS, 1)
+
+    def lifetime_s(self) -> float:
+        return math.inf                  # VMs run until the job ends
+
+    def lifetime_margin_s(self) -> float:
+        return 0.0
+
+    def failure_process(self) -> FailureProcess:
+        # explicit injections always apply; the Poisson rate (which has a
+        # nonzero default) only kicks in for spot fleets
+        if self.preempt_at:
+            return InjectedPreemptions(tuple(self.preempt_at))
+        if self.spot and self.preempt_rate > 0.0:
+            return PoissonPreemptions(self.preempt_rate, self.workers,
+                                      self.seed)
+        return FailureProcess()
+
+    def init_breakdown(self) -> dict:
+        return {"startup": 0.0, "load": 0.0, "compute": 0.0, "comm": 0.0}
+
+    def finalize_cost(self, ctx) -> float:
+        sim_time = float(np.max(ctx.clock))
+        hourly = sum(pricing.EC2_HOURLY[i] for i in self._instances())
+        if self.spot:
+            hourly *= pricing.SPOT_DISCOUNT
+        return (hourly / 3600.0 * sim_time
+                + ctx.ckpt_store.service_cost(sim_time))

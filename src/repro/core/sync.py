@@ -1,14 +1,176 @@
-"""Synchronization protocols (paper §3.2.4) -- named entry point.
+"""Synchronization protocols (paper §3.2.4; DESIGN.md §6).
 
-- BSP: the two-phase merge/update protocol is implemented by the pattern
-  functions (:mod:`repro.core.patterns`) -- named files + polling semantics,
-  barrier = the max over per-worker completion times.
-- ASP: SIREN-style global-model overwrite is the event-driven loop in
-  :meth:`repro.core.runtimes.FaaSRuntime._train_asp` (select with
-  ``FaaSRuntime(sync="asp")``).
+Each protocol is a strategy object driving the discrete-event engine's
+:class:`~repro.core.engine.SimContext`; the same three protocols run on every
+infrastructure (FaaS, IaaS, hybrid, spot, heterogeneous fleets):
+
+- :class:`BSP` -- bulk-synchronous rounds; the merge itself is delegated to
+  the platform's :class:`~repro.core.engine.CommBackend` (two-phase
+  merge/update file pattern on FaaS, ring AllReduce on IaaS, push/pull on the
+  hybrid VM-PS), barrier = the max over per-worker completion times.
+- :class:`ASP` -- SIREN-style fully-asynchronous global-model overwrite:
+  workers run free against a metered key-value store; stale reads emerge
+  naturally from the event order.  ASP is SSP with an unbounded staleness.
+- :class:`SSP` -- stale-synchronous parallel with staleness bound ``s``
+  (paper §3.2.1 design axis): a worker that is more than ``s`` rounds ahead
+  of the slowest active worker blocks until the laggard catches up.  ``s=0``
+  degenerates to an event-driven barrier; ``s=inf`` is ASP.
+
+Select a protocol with ``FaaSRuntime(sync="bsp"|"asp"|"ssp")`` (or
+``"ssp:<s>"`` for an explicit bound, or pass a protocol instance).
 """
-from repro.core.patterns import PATTERNS, allreduce, scatter_reduce  # noqa: F401
-from repro.core.runtimes import FaaSRuntime  # noqa: F401
+from __future__ import annotations
 
-BSP = "bsp"
-ASP = "asp"
+import heapq
+import math
+
+import numpy as np
+
+from repro.core.engine import SimContext
+from repro.core.patterns import PATTERNS, allreduce, scatter_reduce  # noqa: F401
+
+BSP_NAME = "bsp"
+ASP_NAME = "asp"
+SSP_NAME = "ssp"
+
+
+class SyncProtocol:
+    """Base class: a protocol runs the whole training loop over a context."""
+    name = "base"
+
+    def run(self, ctx: SimContext) -> None:
+        raise NotImplementedError
+
+
+class BSP(SyncProtocol):
+    """Bulk-synchronous rounds with per-round lifetime/failure handling."""
+    name = BSP_NAME
+
+    def run(self, ctx: SimContext) -> None:
+        algo, states, model = ctx.algo, ctx.states, ctx.model
+        total_rounds = ctx.max_epochs * algo.rounds_per_epoch(ctx.parts[0])
+        est = float(np.max(ctx.c_round * ctx.speeds)) + 5.0
+        for rnd in range(total_rounds):
+            for i in range(ctx.w):
+                ctx.ensure_alive(i, est)
+            updates = [algo.local_update(model, st, rnd) for st in states]
+            ctx.tick_compute()
+            merged = ctx.comm.bsp_reduce(ctx, updates, f"r{rnd}")
+            for st in states:
+                algo.apply_merged(model, st, merged, ctx.w)
+            ctx.res.rounds += 1
+            if ctx.record_eval(rnd, total_rounds, algo.eval_params(states[0])):
+                break
+
+
+class SSP(SyncProtocol):
+    """Stale-synchronous event loop over a metered global-model store.
+
+    Every worker repeatedly: reads the global model (possibly ``<= s`` rounds
+    stale), computes one local update, and writes ``global -= lr * update``
+    with a 1/sqrt(T) learning-rate decay (paper §4.5).  The engine pops
+    workers in virtual-time order; a worker whose completed-round count leads
+    the slowest *active* worker by more than ``s`` parks in a wait set and is
+    released (wait time metered under ``"wait"``) when the laggard's next
+    update lands.
+    """
+    name = SSP_NAME
+
+    def __init__(self, staleness: float = 3):
+        self.staleness = staleness
+
+    def _bound(self) -> float:
+        return self.staleness if self.staleness is not None else math.inf
+
+    def run(self, ctx: SimContext) -> None:
+        from jax.flatten_util import ravel_pytree
+
+        algo, states, model = ctx.algo, ctx.states, ctx.model
+        w = ctx.w
+        store = ctx.comm.kvstore()
+        flat0, unravel = ravel_pytree(states[0].params)
+        store.put("global", np.asarray(flat0, np.float32))
+        rpe = algo.rounds_per_epoch(ctx.parts[0])
+        per_worker = ctx.max_epochs * rpe
+        total = per_worker * w
+        eval_stride = w * max(rpe // 4, 1)
+        bound = self._bound()
+
+        rounds = np.zeros(w, dtype=int)
+        heap = [(float(ctx.clock[i]), i) for i in range(w)]
+        heapq.heapify(heap)
+        waiting: dict[int, float] = {}     # worker -> time it parked
+        done = 0
+        t = float(np.max(ctx.clock))
+
+        def active_min() -> int:
+            live = rounds[rounds < per_worker]
+            return int(live.min()) if live.size else int(rounds.min())
+
+        while heap and done < total:
+            t, i = heapq.heappop(heap)
+            lag = rounds[i] - active_min()
+            if lag > bound:
+                waiting[i] = t
+                continue
+            ctx.res.max_staleness = max(ctx.res.max_staleness, int(lag))
+            ctx.clock[i] = t
+            est = float(ctx.c_round[i] * ctx.speeds[i]) + 5.0
+            ctx.ensure_alive(i, est)
+            t = float(ctx.clock[i])
+
+            g_flat, dt1 = store.get("global")
+            states[i].params = unravel(g_flat)
+            upd = algo.local_update(model, states[i], done)
+            T = max(done // (rpe * w), 1)
+            lr = algo.lr / np.sqrt(T)      # 1/sqrt(T) decay (paper §4.5)
+            dt2 = store.put("global", (g_flat - lr * upd).astype(np.float32))
+            c = ctx.step_compute(i)
+            t += dt1 + c + dt2
+            ctx.clock[i] = t
+            ctx.meter_add("comm", dt1 + dt2)
+            rounds[i] += 1
+            done += 1
+            ctx.res.rounds = done
+            if rounds[i] < per_worker:
+                heapq.heappush(heap, (t, i))
+
+            # this update may have released parked workers
+            if waiting:
+                amin = active_min()
+                for j in [j for j, _ in waiting.items()
+                          if rounds[j] - amin <= bound]:
+                    t_park = waiting.pop(j)
+                    ctx.meter_add("wait", max(0.0, t - t_park))
+                    ctx.clock[j] = max(t, t_park)
+                    heapq.heappush(heap, (float(ctx.clock[j]), j))
+
+            if done % eval_stride == 0 or done == total:
+                cur, _ = store.get("global")
+                if ctx.record_eval_at(t, unravel(cur)):
+                    break
+
+
+class ASP(SSP):
+    """Fully-asynchronous (SIREN-style): SSP with no staleness bound."""
+    name = ASP_NAME
+
+    def __init__(self):
+        super().__init__(staleness=math.inf)
+
+
+def make_sync(spec) -> SyncProtocol:
+    """``"bsp"`` | ``"asp"`` | ``"ssp"`` | ``"ssp:<s>"`` | protocol class or
+    instance (``sync=SSP(5)`` and ``sync=BSP`` both work)."""
+    if isinstance(spec, SyncProtocol):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, SyncProtocol):
+        return spec()
+    name, _, arg = str(spec).partition(":")
+    if name == BSP_NAME:
+        return BSP()
+    if name == ASP_NAME:
+        return ASP()
+    if name == SSP_NAME:
+        return SSP(int(arg) if arg else 3)
+    raise KeyError(f"unknown sync protocol {spec!r}")

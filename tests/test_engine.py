@@ -1,0 +1,223 @@
+"""Discrete-event engine behaviour (DESIGN.md §4, §6, §7): FaaS/IaaS
+numerics parity through the shared loop, SSP staleness-bound enforcement,
+spot-preemption resume correctness, heterogeneous fleets, and the metering
+interface shared by storage channels and VM networks."""
+import numpy as np
+import pytest
+
+from repro.core.algorithms import make_algorithm
+from repro.core.channels import StorageChannel, VMNetwork
+from repro.core.engine import (
+    FailureProcess, InjectedPreemptions, PoissonPreemptions, StragglerProcess,
+)
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+from repro.core.sync import ASP, BSP, SSP, make_sync
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+@pytest.fixture(scope="module")
+def higgs():
+    ds = make_dataset("higgs", rows=20_000)
+    return train_val_split(ds)
+
+
+@pytest.fixture(scope="module")
+def cifar():
+    ds = make_dataset("cifar10", rows=1_500)
+    return train_val_split(ds)
+
+
+def _ga(**kw):
+    return make_algorithm("ga_sgd", **{"lr": 0.2, "batch_size": 2048, **kw})
+
+
+# ------------------------------------------------------------- protocols ----
+
+def test_make_sync_parses_specs():
+    assert isinstance(make_sync("bsp"), BSP)
+    assert isinstance(make_sync("asp"), ASP)
+    ssp = make_sync("ssp:7")
+    assert isinstance(ssp, SSP) and ssp.staleness == 7
+    assert make_sync(ssp) is ssp
+    assert isinstance(make_sync(BSP), BSP)       # class form also accepted
+    assert isinstance(make_sync(ASP), ASP)
+    with pytest.raises(KeyError):
+        make_sync("totally-async")
+
+
+def test_bsp_parity_faas_iaas_through_engine(higgs):
+    """Both platforms run the SAME engine loop: identical loss histories,
+    different clocks/costs."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    f = FaaSRuntime(workers=4).train(model, _ga(), tr, va, max_epochs=3)
+    i = IaaSRuntime(workers=4).train(model, _ga(), tr, va, max_epochs=3)
+    np.testing.assert_allclose([l for _, l in f.history],
+                               [l for _, l in i.history], rtol=1e-6)
+    assert f.sim_time != i.sim_time and f.cost != i.cost
+
+
+def test_asp_and_ssp_run_on_iaas(higgs):
+    """The event-driven protocols are platform-agnostic: IaaS serves the
+    global model from worker 0 over the metered VM network."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    r = IaaSRuntime(workers=4, sync="asp").train(model, _ga(), tr, va,
+                                                 max_epochs=2)
+    assert r.rounds > 0 and not r.error
+    assert np.isfinite(r.final_loss)
+    r = IaaSRuntime(workers=4, sync="ssp:1").train(model, _ga(), tr, va,
+                                                   max_epochs=2)
+    assert r.rounds > 0 and r.max_staleness <= 1
+
+
+def test_ssp_enforces_staleness_bound(cifar):
+    """With a 10x straggler on a compute-heavy model, ASP drifts well past
+    the bound while SSP s=2 clamps every read and meters the waits."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = cifar
+    mn = make_study_model("mobilenet", tr)
+    kw = dict(max_epochs=6)
+    algo = lambda: make_algorithm("ga_sgd", lr=0.05, batch_size=512)  # noqa
+    asp = FaaSRuntime(workers=4, sync="asp", straggler=10.0,
+                      channel="memcached").train(mn, algo(), tr, va, **kw)
+    ssp = FaaSRuntime(workers=4, sync="ssp:2", straggler=10.0,
+                      channel="memcached").train(mn, algo(), tr, va, **kw)
+    assert asp.max_staleness > 2
+    assert ssp.max_staleness <= 2
+    assert ssp.breakdown.get("wait", 0.0) > 0.0
+    assert asp.rounds == ssp.rounds      # same total statistical work
+
+
+# ------------------------------------------------------------------ spot ----
+
+def test_spot_preemption_resume_correctness(higgs):
+    """Injected preemptions: numerics identical to the on-demand run, >= 1
+    preemption metered, wall-clock strictly worse, spot price discounted."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    base = IaaSRuntime(workers=4).train(model, _ga(), tr, va, max_epochs=3)
+    t0 = base.breakdown["startup"]
+    spot = IaaSRuntime(workers=4, spot=True,
+                       preempt_at=((0, t0 + 1.0), (2, t0 + 3.0))).train(
+        model, _ga(), tr, va, max_epochs=3)
+    assert spot.preemptions == 2
+    assert spot.breakdown["restart"] > 0
+    assert spot.sim_time > base.sim_time
+    np.testing.assert_allclose([l for _, l in base.history],
+                               [l for _, l in spot.history], rtol=1e-6)
+    assert "spot" in spot.system
+
+
+def test_spot_faas_crash_resume(higgs):
+    """The same failure machinery drives FaaS worker crashes."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    base = FaaSRuntime(workers=4).train(model, _ga(), tr, va, max_epochs=2)
+    crashed = FaaSRuntime(workers=4, preempt_at=((1, 2.0),)).train(
+        model, _ga(), tr, va, max_epochs=2)
+    assert crashed.preemptions == 1
+    assert crashed.sim_time > base.sim_time
+    np.testing.assert_allclose(base.final_loss, crashed.final_loss, rtol=1e-6)
+
+
+def test_injected_preemptions_apply_without_spot_flag(higgs):
+    """An explicit preempt_at is honored even on an on-demand fleet."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    from repro.core.runtimes import _T_IAAS, interp_startup
+    t0 = interp_startup(_T_IAAS, 4)
+    r = IaaSRuntime(workers=4, preempt_at=((1, t0 + 0.1),)).train(
+        model, _ga(), tr, va, max_epochs=2)
+    assert r.preemptions == 1
+
+
+def test_poisson_preemptions_terminate_under_extreme_rate(higgs):
+    """A preemption rate faster than the restart time must degrade
+    throughput, not deadlock the event loop."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    r = IaaSRuntime(workers=3, spot=True, preempt_rate=120.0, seed=3).train(
+        model, _ga(), tr, va, max_epochs=1)
+    assert not r.error and np.isfinite(r.final_loss)
+
+
+def test_failure_process_windows():
+    none = FailureProcess()
+    assert none.next_preemption(0, 0.0, 1e9) is None
+    inj = InjectedPreemptions(((1, 5.0), (1, 9.0), (0, 2.0)))
+    assert inj.next_preemption(0, 0.0, 10.0) == 2.0
+    assert inj.next_preemption(0, 0.0, 10.0) is None       # consumed
+    assert inj.next_preemption(1, 0.0, 6.0) == 5.0
+    assert inj.next_preemption(1, 0.0, 6.0) is None        # 9.0 not yet due
+    assert inj.next_preemption(1, 0.0, 10.0) == 9.0
+    poi = PoissonPreemptions(60.0, workers=1, seed=0)
+    hits = sum(poi.next_preemption(0, t, t + 30.0) is not None
+               for t in range(0, 36_000, 30))
+    assert 0 < hits < 1200     # ~one per minute of exposure, not degenerate
+
+
+# ---------------------------------------------------------- heterogeneity ---
+
+def test_heterogeneous_lambda_fleet_is_slower(cifar):
+    """Mixing 1 GB Lambdas into a 3 GB fleet slows compute-bound rounds."""
+    from repro.core.mlmodels import make_study_model
+    tr, va = cifar
+    mn = make_study_model("mobilenet", tr)
+    algo = lambda: make_algorithm("ga_sgd", lr=0.05, batch_size=512)  # noqa
+    homo = FaaSRuntime(workers=4).train(mn, algo(), tr, va, max_epochs=2)
+    hetero = FaaSRuntime(workers=4, lambda_gb=(3.0, 3.0, 1.0, 1.0)).train(
+        mn, algo(), tr, va, max_epochs=2)
+    assert hetero.sim_time > homo.sim_time
+    np.testing.assert_allclose(homo.final_loss, hetero.final_loss, rtol=1e-6)
+
+
+def test_heterogeneous_instance_fleet(higgs):
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    mixed = ("c5.large", "t2.medium", "t2.medium", "c5.large")
+    r = IaaSRuntime(workers=4, instance=mixed).train(model, _ga(), tr, va,
+                                                     max_epochs=2)
+    cheap = IaaSRuntime(workers=4).train(model, _ga(), tr, va, max_epochs=2)
+    assert not r.error
+    assert r.cost > cheap.cost        # c5.large bills more per hour
+
+
+def test_per_worker_config_length_mismatch_raises(higgs):
+    from repro.core.mlmodels import make_study_model
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    with pytest.raises(ValueError):
+        FaaSRuntime(workers=4, lambda_gb=(3.0, 1.0)).train(
+            model, _ga(), tr, va, max_epochs=1)
+
+
+# -------------------------------------------------------------- metering ----
+
+def test_vmnetwork_shares_channel_metering_interface():
+    net = VMNetwork(120e6, 5e-4)
+    chan = StorageChannel("s3")
+    payload = np.zeros(1_000_000, np.float32)
+    for store in (net, chan):
+        dt_put = store.put("k", payload)
+        got, dt_get = store.get("k")
+        assert dt_put > 0 and dt_get > 0
+        assert got is payload
+        assert store.service_cost(10.0) >= 0.0
+    assert net.allreduce_time(4_000_000, 1) == 0.0
+    assert net.allreduce_time(4_000_000, 8) > net.allreduce_time(1_000, 8)
+
+
+def test_straggler_process_backup_cap():
+    sp = StragglerProcess(factor=6.0)
+    s = sp.speeds(8, seed=0)
+    capped = StragglerProcess(factor=6.0, cap_at_median=True).speeds(8, seed=0)
+    assert np.max(capped) <= np.median(s) + 1e-12
+    assert np.max(s) > 3.0

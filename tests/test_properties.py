@@ -1,8 +1,17 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test dependency (declared in pyproject.toml
+under ``[project.optional-dependencies] test``); the whole module skips
+cleanly when it is not installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dependency; "
+                    "pip install hypothesis (or `.[test]`) to run these")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.channels import StorageChannel
 from repro.core.patterns import allreduce, scatter_reduce
