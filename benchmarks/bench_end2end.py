@@ -1,87 +1,75 @@
 """Paper Fig 11/12 + §5.1.1 COST check: end-to-end runtime vs cost profiles
-as a function of worker count, FaaS vs IaaS (+GPU for the NN model)."""
+as a function of worker count, FaaS vs IaaS (+GPU for the NN model).
+
+The Fig 11 and heterogeneous-fleet rows come straight from the
+``fig11_end2end`` and ``hetero_fleet`` presets (DESIGN.md §10); the Fig 12
+MobileNet sweep and the COST check are expressed as inline
+:class:`~repro.experiments.ExperimentSpec` grids over the same API.
+"""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.algorithms import make_algorithm
-from repro.core.mlmodels import make_study_model
-from repro.core.runtimes import FaaSRuntime, IaaSRuntime
-from repro.data.synthetic import make_dataset, train_val_split
+from repro.experiments import (
+    ExperimentSpec, FleetSpec, get_preset, run_experiment, sweep,
+)
+
+
+def _row(rec, name=None, **extra):
+    r = rec.result
+    return {"name": name or rec.spec.name, "us_per_call": r["sim_time_s"] * 1e6,
+            "sim_time_s": r["sim_time_s"], "cost_usd": r["cost_usd"],
+            "derived": f"cost=${r['cost_usd']:.4f};loss={r['final_loss']:.4f}",
+            **extra}
 
 
 def run(quick: bool = True):
     rows = []
-    ds = make_dataset("higgs", rows=30_000 if quick else 400_000)
-    tr, va = train_val_split(ds)
-    lr_model = make_study_model("lr", tr)
-    worker_counts = (1, 5, 10) if quick else (1, 5, 10, 25, 50, 100)
 
-    # ---- LR (communication-efficient via ADMM) ------------------------------
-    for w in worker_counts:
-        algo = make_algorithm("admm", lr=0.1, local_epochs=5)
-        f = FaaSRuntime(workers=w).train(lr_model, algo, tr, va, max_epochs=3)
-        algo = make_algorithm("admm", lr=0.1, local_epochs=5)
-        i = IaaSRuntime(workers=w).train(lr_model, algo, tr, va, max_epochs=3)
-        rows.append({"name": f"fig11_lr_faas_w{w}", "us_per_call": f.sim_time * 1e6,
-                     "sim_time_s": f.sim_time, "cost_usd": f.cost,
-                     "derived": f"cost=${f.cost:.4f};loss={f.final_loss:.4f}"})
-        rows.append({"name": f"fig11_lr_iaas_w{w}", "us_per_call": i.sim_time * 1e6,
-                     "sim_time_s": i.sim_time, "cost_usd": i.cost,
-                     "derived": f"cost=${i.cost:.4f};loss={i.final_loss:.4f}"})
+    # ---- LR (communication-efficient via ADMM), Fig 11 ----------------------
+    for rec in (run_experiment(s) for s in
+                get_preset("fig11_end2end").build(quick)):
+        rows.append(_row(rec))
 
-    # ---- MobileNet (communication-heavy GA-SGD) ------------------------------
-    cds = make_dataset("cifar10", rows=4_000 if quick else 50_000)
-    ctr, cva = train_val_split(cds)
-    mn = make_study_model("mobilenet", ctr)
-    for w in ((5, 10) if quick else (5, 10, 25)):
-        algo = make_algorithm("ga_sgd", lr=0.05, batch_size=512)
-        f = FaaSRuntime(workers=w, channel="memcached").train(
-            mn, algo, ctr, cva, max_epochs=1)
-        algo = make_algorithm("ga_sgd", lr=0.05, batch_size=512)
-        i = IaaSRuntime(workers=w, instance="g3s.xlarge", gpu=True).train(
-            mn, algo, ctr, cva, max_epochs=1)
-        rows.append({"name": f"fig12_mn_faas_w{w}", "us_per_call": f.sim_time * 1e6,
-                     "sim_time_s": f.sim_time, "cost_usd": f.cost,
-                     "derived": f"cost=${f.cost:.4f}"})
-        rows.append({"name": f"fig12_mn_iaasgpu_w{w}", "us_per_call": i.sim_time * 1e6,
-                     "sim_time_s": i.sim_time, "cost_usd": i.cost,
-                     "derived": f"cost=${i.cost:.4f}"})
+    # ---- MobileNet (communication-heavy GA-SGD), Fig 12 ---------------------
+    mn = ExperimentSpec(
+        model="mobilenet", dataset="cifar10", rows=4_000 if quick else 50_000,
+        algorithm="ga_sgd", algo_args={"lr": 0.05, "batch_size": 512},
+        max_epochs=1)
+    counts = [5, 10] if quick else [5, 10, 25]
+    faas = sweep(mn.with_(name="fig12_mn_faas", platform="faas",
+                          **{"comm.channel": "memcached"}),
+                 {"fleet.workers": counts})
+    iaas = sweep(mn.with_(name="fig12_mn_iaasgpu", platform="iaas",
+                          **{"fleet.instance": "g3s.xlarge",
+                             "fleet.gpu": True}),
+                 {"fleet.workers": counts})
+    for rec in faas + iaas:
+        w = rec.spec.fleet.workers
+        base = rec.spec.name.split("[")[0]
+        rows.append(_row(rec, name=f"{base}_w{w}"))
 
     # ---- heterogeneous fleets (engine scenario, DESIGN.md §7.2) ------------
-    algo = make_algorithm("ga_sgd", lr=0.05, batch_size=512)
-    het_f = FaaSRuntime(workers=6, lambda_gb=(3.0, 3.0, 3.0, 3.0, 1.0, 1.0),
-                        channel="memcached").train(mn, algo, ctr, cva,
-                                                   max_epochs=1)
-    rows.append({"name": "hetero_faas_mixed_gb",
-                 "us_per_call": het_f.sim_time * 1e6,
-                 "sim_time_s": het_f.sim_time, "cost_usd": het_f.cost,
-                 "derived": f"cost=${het_f.cost:.4f};loss={het_f.final_loss:.4f}"})
-    algo = make_algorithm("admm", lr=0.1, local_epochs=5)
-    het_i = IaaSRuntime(workers=4, instance=("c5.large", "c5.large",
-                                             "t2.medium", "t2.medium")).train(
-        lr_model, algo, tr, va, max_epochs=3)
-    rows.append({"name": "hetero_iaas_mixed_instances",
-                 "us_per_call": het_i.sim_time * 1e6,
-                 "sim_time_s": het_i.sim_time, "cost_usd": het_i.cost,
-                 "derived": f"cost=${het_i.cost:.4f};loss={het_i.final_loss:.4f}"})
+    for rec in (run_experiment(s) for s in
+                get_preset("hetero_fleet").build(quick)):
+        rows.append(_row(rec))
 
     # ---- COST sanity check (§5.1.1): same statistical work (5 EM epochs),
     # compute-heavy k-means, single machine vs 10 workers --------------------
-    kds = make_dataset("higgs", rows=400_000 if quick else 2_000_000)
-    ktr, kva = train_val_split(kds)
-    km = make_study_model("kmeans", ktr, k=250 if quick else 1000)
-    single = IaaSRuntime(workers=1).train(km, make_algorithm("kmeans_em"),
-                                          ktr, kva, max_epochs=5)
-    f10 = FaaSRuntime(workers=10).train(km, make_algorithm("kmeans_em"),
-                                        ktr, kva, max_epochs=5)
-    i10 = IaaSRuntime(workers=10).train(km, make_algorithm("kmeans_em"),
-                                        ktr, kva, max_epochs=5)
+    km = ExperimentSpec(
+        model="kmeans", model_args={"k": 250 if quick else 1000},
+        dataset="higgs", rows=400_000 if quick else 2_000_000,
+        algorithm="kmeans_em", max_epochs=5)
+    single = run_experiment(km.with_(name="cost_single", platform="iaas",
+                                     fleet=FleetSpec(workers=1)))
+    f10 = run_experiment(km.with_(name="cost_faas10", platform="faas"))
+    i10 = run_experiment(km.with_(name="cost_iaas10", platform="iaas"))
+
     # warm-cluster convention (paper §5.1.1 reports IaaS-10 at 98 s, below
     # its own 132 s cluster-start -- i.e. measured from job start)
-    def warm(r):
-        return r.sim_time - r.breakdown["startup"]
+    def warm(rec):
+        return rec.result["sim_time_s"] - rec.result["breakdown"]["startup"]
     rows.append({"name": "cost_check_kmeans",
-                 "us_per_call": single.sim_time * 1e6,
+                 "us_per_call": single.result["sim_time_s"] * 1e6,
                  "single_s": warm(single), "faas10_s": warm(f10),
                  "iaas10_s": warm(i10),
                  "derived": (f"faas10_speedup={warm(single) / warm(f10):.1f}x;"

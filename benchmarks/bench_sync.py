@@ -1,59 +1,49 @@
 """Paper Fig 8 extended: Synchronous (BSP) vs Asynchronous (SIREN-style
-S-ASP) vs Stale-Synchronous (SSP, staleness bound s) -- all three through
-the shared discrete-event engine -- plus a spot-instance IaaS scenario with
-injected preemptions (DESIGN.md §6-§7)."""
+S-ASP) vs Stale-Synchronous (SSP, staleness bound s) -- plus a spot-instance
+IaaS scenario with injected preemptions (DESIGN.md §6-§7).
+
+Since the declarative-API redesign (DESIGN.md §10) this driver is a thin
+view over the ``fig8_sync`` and ``spot_vs_ondemand`` presets: the trial
+definitions live in :mod:`repro.experiments.presets`, shared with
+``python -m repro run fig8_sync``.
+"""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.algorithms import make_algorithm
-from repro.core.mlmodels import make_study_model
-from repro.core.runtimes import IaaSRuntime, FaaSRuntime
-from repro.data.synthetic import make_dataset, train_val_split
+from repro.experiments import get_preset, run_experiment
 
 
 def run(quick: bool = True):
     rows = []
-    for dsname in (("higgs",) if quick else ("higgs", "rcv1")):
-        ds = make_dataset(dsname, rows=30_000 if quick else 200_000)
-        tr, va = train_val_split(ds)
-        model = make_study_model("lr", tr)
-        for sync in ("bsp", "asp", "ssp:2"):
-            # high lr + strong straggler: the regime where stale SIREN-style
-            # overwrites destabilize (paper Fig 8); at low lr ASP's extra
-            # update count wins instead; SSP's bound caps the damage
-            algo = make_algorithm("ga_sgd", lr=1.0, batch_size=2048)
-            r = FaaSRuntime(workers=16, sync=sync, straggler=6.0).train(
-                model, algo, tr, va, max_epochs=4)
-            tag = sync.replace(":", "")
-            rows.append({
-                "name": f"fig8_{dsname}_{tag}",
-                "us_per_call": r.sim_time * 1e6 / max(r.rounds, 1),
-                "sim_time_s": r.sim_time, "rounds": r.rounds,
-                "final_loss": r.final_loss,
-                "max_staleness": r.max_staleness,
-                "derived": (f"loss={r.final_loss:.4f};rounds={r.rounds};"
-                            f"stale={r.max_staleness}"),
-            })
+    for rec in (run_experiment(s) for s in
+                get_preset("fig8_sync").build(quick)):
+        r = rec.result
+        rows.append({
+            "name": rec.spec.name,
+            "us_per_call": r["sim_time_s"] * 1e6 / max(r["rounds"], 1),
+            "sim_time_s": r["sim_time_s"], "rounds": r["rounds"],
+            "final_loss": r["final_loss"],
+            "max_staleness": r["max_staleness"],
+            "derived": (f"loss={r['final_loss']:.4f};rounds={r['rounds']};"
+                        f"stale={r['max_staleness']}"),
+        })
 
     # ---- spot-instance IaaS: preemption + restart-from-checkpoint ----------
-    ds = make_dataset("higgs", rows=30_000 if quick else 200_000)
-    tr, va = train_val_split(ds)
-    model = make_study_model("lr", tr)
-    algo = lambda: make_algorithm("ga_sgd", lr=0.3, batch_size=2048)  # noqa
-    demand = IaaSRuntime(workers=8).train(model, algo(), tr, va, max_epochs=3)
-    t0 = demand.breakdown["startup"]
-    spot = IaaSRuntime(workers=8, spot=True,
-                       preempt_at=((1, t0 + 2.0), (5, t0 + 6.0))).train(
-        model, algo(), tr, va, max_epochs=3)
-    assert spot.preemptions >= 1, "spot scenario must see a preemption"
+    demand, spot = (run_experiment(s) for s in
+                    get_preset("spot_vs_ondemand").build(quick))
+    assert spot.result["preemptions"] >= 1, \
+        "spot scenario must see a preemption"
     rows.append({
         "name": "spot_iaas_vs_ondemand",
-        "us_per_call": spot.sim_time * 1e6,
-        "sim_time_s": spot.sim_time, "cost_usd": spot.cost,
-        "preemptions": spot.preemptions,
-        "derived": (f"preempt={spot.preemptions};"
-                    f"spot=${spot.cost:.4f}@{spot.sim_time:.0f}s;"
-                    f"ondemand=${demand.cost:.4f}@{demand.sim_time:.0f}s"),
+        "us_per_call": spot.result["sim_time_s"] * 1e6,
+        "sim_time_s": spot.result["sim_time_s"],
+        "cost_usd": spot.result["cost_usd"],
+        "preemptions": spot.result["preemptions"],
+        "derived": (f"preempt={spot.result['preemptions']};"
+                    f"spot=${spot.result['cost_usd']:.4f}"
+                    f"@{spot.result['sim_time_s']:.0f}s;"
+                    f"ondemand=${demand.result['cost_usd']:.4f}"
+                    f"@{demand.result['sim_time_s']:.0f}s"),
     })
     return emit(rows, "bench_sync")
 

@@ -29,14 +29,25 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, metavar="MODULE",
+                    help="run exactly one module, e.g. bench_sync "
+                         "(the bench_ prefix may be omitted)")
     args = ap.parse_args()
+
+    if args.only:
+        name = (args.only if args.only.startswith("bench_")
+                else f"bench_{args.only}")
+        if name not in MODULES:
+            print(f"error: unknown benchmark module {args.only!r}; "
+                  f"valid modules: {', '.join(MODULES)}", file=sys.stderr)
+            return 2
+        modules = [name]
+    else:
+        modules = MODULES
 
     print("name,us_per_call,derived")
     failures = 0
-    for mod in MODULES:
-        if args.only and args.only not in mod:
-            continue
+    for mod in modules:
         t0 = time.time()
         try:
             m = __import__(f"benchmarks.{mod}", fromlist=["run"])

@@ -1,15 +1,19 @@
 """Reproduce the paper's end-to-end FaaS-vs-IaaS study (Figs 10-12) and the
-analytical-model what-ifs (Figs 13-15) in one script.
+analytical-model what-ifs (Figs 13-15) through the declarative experiment
+API (DESIGN.md §10) -- every section below is also available directly from
+the CLI, e.g.:
+
+    PYTHONPATH=src python -m repro run fig10_breakdown
+    PYTHONPATH=src python -m repro sweep fig11_end2end --grid fleet.workers=5,10,25
 
     PYTHONPATH=src python examples/faas_vs_iaas.py [--workers 10 25 50]
 """
 import argparse
 
-from repro.core.algorithms import make_algorithm
-from repro.core.analytical import Workload, faas_time, iaas_time, q1_fast_hybrid
-from repro.core.mlmodels import make_study_model
-from repro.core.runtimes import FaaSRuntime, IaaSRuntime
-from repro.data.synthetic import make_dataset, train_val_split
+from repro.core.analytical import Workload, q1_fast_hybrid
+from repro.experiments import (
+    ExperimentSpec, FleetSpec, get_preset, run_experiment, sweep,
+)
 
 
 def main():
@@ -18,53 +22,58 @@ def main():
     ap.add_argument("--rows", type=int, default=50_000)
     args = ap.parse_args()
 
-    ds = make_dataset("higgs", rows=args.rows)
-    tr, va = train_val_split(ds)
-    model = make_study_model("lr", tr)
-
     print("== runtime/cost vs workers (LR+ADMM, the FaaS-friendly regime) ==")
+    base = ExperimentSpec(name="adm", model="lr", dataset="higgs",
+                          rows=args.rows, algorithm="admm",
+                          algo_args={"lr": 0.1, "local_epochs": 5},
+                          max_epochs=3)
+    grid = {"fleet.workers": args.workers}
+    faas = sweep(base.with_(platform="faas"), grid)
+    iaas = sweep(base.with_(platform="iaas"), grid)
     print(f"{'w':>4s} {'faas_t':>9s} {'faas_$':>9s} {'iaas_t':>9s} {'iaas_$':>9s}")
-    for w in args.workers:
-        f = FaaSRuntime(workers=w).train(
-            model, make_algorithm("admm", lr=0.1, local_epochs=5), tr, va,
-            max_epochs=3)
-        i = IaaSRuntime(workers=w).train(
-            model, make_algorithm("admm", lr=0.1, local_epochs=5), tr, va,
-            max_epochs=3)
-        print(f"{w:4d} {f.sim_time:8.1f}s ${f.cost:8.4f} "
-              f"{i.sim_time:8.1f}s ${i.cost:8.4f}")
+    for f, i in zip(faas, iaas):
+        print(f"{f.spec.fleet.workers:4d} "
+              f"{f.result['sim_time_s']:8.1f}s ${f.result['cost_usd']:8.4f} "
+              f"{i.result['sim_time_s']:8.1f}s ${i.result['cost_usd']:8.4f}")
 
     print("\n== breakdown (w=10, GA-SGD, 10 epochs) -- paper Fig 10 ==")
-    for name, rt in [("FaaS/S3", FaaSRuntime(workers=10)),
-                     ("Hybrid VM-PS", FaaSRuntime(workers=10, channel="vmps")),
-                     ("IaaS", IaaSRuntime(workers=10))]:
-        r = rt.train(model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048),
-                     tr, va, max_epochs=10)
-        bd = r.breakdown
-        print(f"{name:14s} startup={bd['startup']:7.1f}s load={bd['load']:5.2f}s"
-              f" compute={bd['compute']:6.2f}s comm={bd['comm']:8.2f}s")
+    labels = {"fig10_faas_s3": "FaaS/S3", "fig10_faas_memcached": "FaaS/Memc",
+              "fig10_hybridps": "Hybrid VM-PS", "fig10_iaas": "IaaS"}
+    for spec in get_preset("fig10_breakdown").build(quick=True):
+        bd = run_experiment(spec).result["breakdown"]
+        print(f"{labels[spec.name]:14s} startup={bd['startup']:7.1f}s "
+              f"load={bd['load']:5.2f}s compute={bd['compute']:6.2f}s "
+              f"comm={bd['comm']:8.2f}s")
 
     print("\n== sync protocols through the engine (BSP / ASP / SSP s=2) ==")
-    for sync in ("bsp", "asp", "ssp:2"):
-        r = FaaSRuntime(workers=10, sync=sync, straggler=6.0).train(
-            model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048), tr, va,
-            max_epochs=3)
-        print(f"{sync:7s} rounds={r.rounds:4d} time={r.sim_time:7.1f}s "
-              f"loss={r.final_loss:.4f} max_staleness={r.max_staleness}")
+    for spec in get_preset("fig8_sync").build(quick=True):
+        r = run_experiment(spec).result
+        print(f"{spec.sync:7s} rounds={r['rounds']:4d} "
+              f"time={r['sim_time_s']:7.1f}s loss={r['final_loss']:.4f} "
+              f"max_staleness={r['max_staleness']}")
 
     print("\n== spot-instance IaaS: preemptions + restart-from-checkpoint ==")
-    demand = IaaSRuntime(workers=10).train(
-        model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048), tr, va,
-        max_epochs=3)
-    t0 = demand.breakdown["startup"]
-    spot = IaaSRuntime(workers=10, spot=True,
-                       preempt_at=((2, t0 + 2.0), (7, t0 + 5.0))).train(
-        model, make_algorithm("ga_sgd", lr=0.3, batch_size=2048), tr, va,
-        max_epochs=3)
-    print(f"on-demand {demand.sim_time:7.1f}s ${demand.cost:.4f}   "
-          f"spot {spot.sim_time:7.1f}s ${spot.cost:.4f} "
-          f"({spot.preemptions} preemptions, identical numerics: "
-          f"{abs(spot.final_loss - demand.final_loss) < 1e-6})")
+    demand, spot = (run_experiment(s) for s in
+                    get_preset("spot_vs_ondemand").build(quick=True))
+    d, s = demand.result, spot.result
+    same = abs(s["final_loss"] - d["final_loss"]) < 1e-6
+    print(f"on-demand {d['sim_time_s']:7.1f}s ${d['cost_usd']:.4f}   "
+          f"spot {s['sim_time_s']:7.1f}s ${s['cost_usd']:.4f} "
+          f"({s['preemptions']} preemptions, identical numerics: {same})")
+
+    print("\n== heterogeneous fleets compose with either platform ==")
+    het = ExperimentSpec(name="hetero4", model="lr", dataset="higgs",
+                         rows=args.rows, algorithm="admm",
+                         algo_args={"lr": 0.1, "local_epochs": 5},
+                         max_epochs=3, platform="iaas",
+                         fleet=FleetSpec(workers=4,
+                                         instance=("c5.large", "c5.large",
+                                                   "t2.medium", "t2.medium"),
+                                         lambda_gb=(3.0, 3.0, 1.0, 1.0)))
+    for plat in ("iaas", "faas"):        # the SAME FleetSpec, both platforms
+        r = run_experiment(het.with_(platform=plat)).result
+        print(f"{plat:5s} {r['sim_time_s']:7.1f}s ${r['cost_usd']:.4f} "
+              f"loss={r['final_loss']:.4f}")
 
     print("\n== what-if: 10 GB/s FaaS<->VM link (paper Fig 14) ==")
     wl = Workload(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)

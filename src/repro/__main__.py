@@ -1,0 +1,189 @@
+"""``python -m repro`` -- the one way to run a study (DESIGN.md §10).
+
+    python -m repro list                    # available presets
+    python -m repro run fig10_breakdown     # run a preset (quick sizes)
+    python -m repro run spec.json --set max_epochs=5
+    python -m repro sweep fig8_sync --grid fleet.workers=4,8 --grid sync=bsp,asp
+
+``run`` executes a preset (or a single-spec JSON file) and ``sweep``
+expands a cartesian ``--grid`` over the preset's base spec; both write
+``repro.experiment/v1`` records (see :mod:`repro.experiments.runner`) into
+the spec-hash cache directory (default ``experiments/runs/``) and print a
+summary table.  ``--set field=value`` tweaks every trial (dotted paths
+reach nested specs), which is how CI keeps the smoke runs small.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.experiments import (
+    PRESETS, ExperimentSpec, RunRecord, get_preset, run_experiment, sweep,
+)
+from repro.experiments.runner import DEFAULT_CACHE
+
+
+def _parse_value(text: str):
+    """JSON if it parses, bare string otherwise (so ``sync=asp`` works)."""
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return text
+
+
+def _parse_set(items: list[str]) -> dict:
+    over = {}
+    for item in items:
+        key, eq, value = item.partition("=")
+        if not eq:
+            raise SystemExit(f"--set expects field=value, got {item!r}")
+        over[key] = _parse_value(value)
+    return over
+
+
+def _parse_grid(items: list[str]) -> dict:
+    grid = {}
+    for item in items:
+        key, eq, values = item.partition("=")
+        if not eq:
+            raise SystemExit(f"--grid expects field=v1,v2,..., got {item!r}")
+        grid[key] = [_parse_value(v) for v in values.split(",")]
+    return grid
+
+
+def _unwrap(d: dict) -> dict:
+    """Accept a bare spec dict OR a full run-record envelope (the
+    ``repro.experiment/v1`` files under experiments/runs/ and ``--out``)."""
+    return d["spec"] if isinstance(d.get("spec"), dict) else d
+
+
+def _load_specs(target: str, quick: bool) -> list[ExperimentSpec]:
+    """A preset name, or a JSON file holding a spec / record / list of
+    either."""
+    if target in PRESETS:
+        return get_preset(target).build(quick)
+    path = Path(target)
+    if path.suffix == ".json" or path.exists():
+        if not path.exists():
+            raise SystemExit(f"spec file not found: {target}")
+        data = json.loads(path.read_text())
+        items = data if isinstance(data, list) else [data]
+        if not items:
+            raise SystemExit(f"no specs in {target}")
+        return [ExperimentSpec.from_dict(_unwrap(d)) for d in items]
+    raise SystemExit(f"unknown preset or spec file {target!r}; "
+                     f"presets: {', '.join(sorted(PRESETS))}")
+
+
+def _print_records(records: list[RunRecord]) -> None:
+    if not records:
+        print("no records")
+        return
+    wname = max(len(r.spec.name) for r in records)
+    print(f"{'name':<{wname}s} {'time_s':>9s} {'cost_$':>9s} {'loss':>9s} "
+          f"{'rounds':>6s}  note")
+    for r in records:
+        res = r.result
+        note = "cached" if r.cached else ""
+        if res.get("error"):
+            note = f"ERROR: {res['error']}"
+        print(f"{r.spec.name:<{wname}s} {res.get('sim_time_s', 0):9.1f} "
+              f"{res.get('cost_usd', 0):9.4f} {res.get('final_loss', 0):9.4f} "
+              f"{res.get('rounds', 0):6d}  {note}")
+
+
+def _finish(records: list[RunRecord], out: str | None) -> None:
+    _print_records(records)
+    if out:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(
+            json.dumps([r.to_dict() for r in records], indent=1))
+        print(f"# {len(records)} record(s) -> {out}", file=sys.stderr)
+
+
+def cmd_list(args) -> int:
+    for name in sorted(PRESETS):
+        p = PRESETS[name]
+        n = len(p.build(True))
+        print(f"{name:<18s} {n:2d} trial(s)  {p.description}")
+    return 0
+
+
+def cmd_run(args) -> int:
+    specs = _load_specs(args.target, quick=not args.full)
+    overrides = _parse_set(args.set or [])
+    if overrides:
+        specs = [s.with_(**overrides) for s in specs]
+    cache = None if args.no_cache else args.cache
+    records = [run_experiment(s, cache_dir=cache, force=args.force)
+               for s in specs]
+    _finish(records, args.out)
+    return 1 if any(r.result.get("error") for r in records) else 0
+
+
+def cmd_sweep(args) -> int:
+    quick = not args.full
+    base = (get_preset(args.target).base(quick) if args.target in PRESETS
+            else _load_specs(args.target, quick)[0])
+    base = base.with_(**_parse_set(args.set or []))
+    grid = _parse_grid(args.grid or [])
+    if not grid:
+        raise SystemExit("sweep needs at least one --grid field=v1,v2,...")
+    cache = None if args.no_cache else args.cache
+    records = sweep(base, grid, cache_dir=cache,
+                    max_workers=args.workers, force=args.force)
+    _finish(records, args.out)
+    return 1 if any(r.result.get("error") for r in records) else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Declarative experiment runner for the LambdaML "
+                    "reproduction (see DESIGN.md §10).")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    sub.add_parser("list", help="list available presets").set_defaults(
+        fn=cmd_list)
+
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument("target",
+                        help="preset name (see `list`) or spec JSON file")
+    size = common.add_mutually_exclusive_group()
+    size.add_argument("--quick", action="store_true",
+                      help="small CI-friendly sizes (the default)")
+    size.add_argument("--full", action="store_true",
+                      help="paper-scale sizes")
+    common.add_argument("--set", action="append", metavar="FIELD=VALUE",
+                        help="override a spec field on every trial "
+                             "(dotted paths reach nested specs)")
+    common.add_argument("--cache", default=str(DEFAULT_CACHE),
+                        help="record cache dir (default experiments/runs/)")
+    common.add_argument("--no-cache", action="store_true",
+                        help="do not read or write the record cache")
+    common.add_argument("--force", action="store_true",
+                        help="re-run even on a cache hit")
+    common.add_argument("--out", default=None,
+                        help="also write all records to this JSON file")
+
+    run_p = sub.add_parser("run", parents=[common],
+                           help="run a preset or spec file")
+    run_p.set_defaults(fn=cmd_run)
+
+    sweep_p = sub.add_parser(
+        "sweep", parents=[common],
+        help="cartesian sweep over a preset's base spec")
+    sweep_p.add_argument("--grid", action="append", metavar="FIELD=V1,V2",
+                         help="one sweep axis (repeatable)")
+    sweep_p.add_argument("--workers", type=int, default=0,
+                         help="thread-pool size for independent trials")
+    sweep_p.set_defaults(fn=cmd_sweep)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,9 +5,14 @@
 - patterns:   AllReduce / ScatterReduce over a storage channel
 - engine:     the discrete-event simulation core (clocks, failures, metering)
 - sync:       BSP / ASP / SSP protocol objects over the engine
+- platform:   the Platform protocol + composable FleetSpec / FailureSpec /
+              CommSpec (the typed engine-hook interface)
 - runtimes:   FaaSRuntime (LambdaML) and IaaSRuntime (distributed-PyTorch)
-              platform adapters, incl. spot and heterogeneous fleets
+              thin builders over the specs, incl. spot and hetero fleets
 - analytical: the §5.3 cost/performance model + what-if studies
+
+The declarative experiment layer (ExperimentSpec / run_experiment / sweep /
+presets / the ``python -m repro`` CLI) lives in :mod:`repro.experiments`.
 """
 from repro.core.algorithms import (  # noqa: F401
     ADMM, Algorithm, EMKMeans, GASGD, MASGD, make_algorithm,
@@ -22,5 +27,10 @@ from repro.core.engine import (  # noqa: F401
 )
 from repro.core.mlmodels import StudyModel, make_study_model, model_bytes  # noqa: F401
 from repro.core.patterns import allreduce, scatter_reduce  # noqa: F401
+from repro.core.platform import (  # noqa: F401
+    BasePlatform, CommSpec, FailureSpec, FleetSpec, Platform,
+)
 from repro.core.runtimes import FaaSRuntime, IaaSRuntime  # noqa: F401
-from repro.core.sync import ASP, BSP, SSP, SyncProtocol, make_sync  # noqa: F401
+from repro.core.sync import (  # noqa: F401
+    ASP, BSP, SSP, SyncProtocol, make_sync, sync_name,
+)

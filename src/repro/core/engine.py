@@ -14,8 +14,10 @@ be duplicated between the FaaS and IaaS training loops:
 
 Sync protocols (:mod:`repro.core.sync`) are strategy objects over a
 :class:`SimContext`; infrastructures (:mod:`repro.core.runtimes`) are
-platform adapters queried through duck-typed hooks.  Neither imports the
-other, so new protocols and new platforms compose for free.
+platform adapters queried through the explicit
+:class:`~repro.core.platform.Platform` protocol (the engine itself stays
+import-free of concrete platforms, so new protocols and new platforms
+compose for free).
 
 All payloads are REAL numpy arrays (numerics are exact; only time and money
 are simulated) -- the paper's statistical/system efficiency split.
@@ -24,9 +26,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any
+from typing import TYPE_CHECKING, Any
 
 import numpy as np
+
+if TYPE_CHECKING:                        # platform.py imports engine at runtime
+    from repro.core.platform import Platform
 
 from repro.core import cost as pricing
 from repro.core.channels import ChannelItemTooLarge, StorageChannel, VMNetwork
@@ -339,11 +344,12 @@ class SimContext:
 
 # -------------------------------------------------------------- simulate ----
 
-def simulate(platform, sync, model, algo, ds_train, ds_val, *,
+def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
              target_loss: float | None = None, max_epochs: int = 10,
              eval_every: int = 1, data_local: bool = False) -> RunResult:
-    """Run one training scenario: ``platform`` (infrastructure adapter) x
-    ``sync`` (protocol object) x ``algo`` on real data/numerics."""
+    """Run one training scenario: ``platform`` (any
+    :class:`~repro.core.platform.Platform` implementation) x ``sync``
+    (protocol object) x ``algo`` on real data/numerics."""
     import jax
 
     w = platform.workers

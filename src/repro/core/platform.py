@@ -1,0 +1,241 @@
+"""The ``Platform`` protocol and its composable configuration specs.
+
+This module formalizes the engine-hook interface that
+:mod:`repro.core.runtimes` used to implement purely by convention, and
+splits the monolithic runtime dataclasses into three orthogonal, reusable
+pieces (DESIGN.md §9):
+
+- :class:`FleetSpec`   -- how many workers and what each one is (per-worker
+  Lambda memory OR per-worker instance type, straggler factor, backup
+  invocations).  The SAME FleetSpec composes with any platform: only the
+  fields the platform understands are consulted.
+- :class:`FailureSpec` -- the failure scenario (Poisson preemption rate,
+  deterministically injected kills, spot pricing + discount).
+- :class:`CommSpec`    -- how updates move (storage channel, reduce pattern,
+  checkpoint channel).
+
+:class:`BasePlatform` implements every spec-derivable engine hook once;
+concrete platforms (``FaaSRuntime``, ``IaaSRuntime``) add only the genuinely
+platform-specific ones (startup/load timings, comm backend construction,
+pricing).  :class:`Platform` is the runtime-checkable protocol the engine
+programs against -- any object satisfying it simulates through
+:func:`repro.core.engine.simulate`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import cost as pricing
+from repro.core.engine import (
+    CommBackend, FailureProcess, InjectedPreemptions, PoissonPreemptions,
+    RunResult, StragglerProcess, simulate,
+)
+
+
+def per_worker(value, w: int) -> np.ndarray:
+    """Broadcast a scalar or validate a per-worker sequence of length w."""
+    if np.isscalar(value) or isinstance(value, str):
+        return np.asarray([value] * w)
+    arr = np.asarray(value)
+    if len(arr) != w:
+        raise ValueError(f"per-worker config has {len(arr)} entries, "
+                         f"expected {w}")
+    return arr
+
+
+def _freeze(obj, name: str, value):
+    object.__setattr__(obj, name, value)
+
+
+# ------------------------------------------------------------------ specs ----
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """Worker fleet shape, independent of the platform that runs it.
+
+    ``lambda_gb`` is consulted by FaaS platforms (scalar or per-worker GB,
+    paper §5 heterogeneity), ``instance``/``gpu`` by IaaS platforms; the
+    straggler knobs apply everywhere.  Per-worker sequences must have
+    exactly ``workers`` entries (validated lazily, when the fleet is used).
+    """
+    workers: int = 10
+    lambda_gb: Any = 3.0                 # FaaS: scalar GB or per-worker tuple
+    instance: Any = "t2.medium"          # IaaS: scalar type or per-worker tuple
+    gpu: bool = False                    # IaaS: GPU instances (NN models only)
+    straggler: float = 1.0               # slowdown of one injected straggler
+    backup_invocations: bool = False     # straggler mitigation (FaaS)
+
+    def __post_init__(self):
+        if isinstance(self.lambda_gb, list):
+            _freeze(self, "lambda_gb", tuple(self.lambda_gb))
+        if isinstance(self.instance, list):
+            _freeze(self, "instance", tuple(self.instance))
+
+    def gb_array(self) -> np.ndarray:
+        return per_worker(self.lambda_gb, self.workers).astype(float)
+
+    def instances(self) -> list[str]:
+        return [str(i) for i in per_worker(self.instance, self.workers)]
+
+    def speeds(self, seed: int) -> np.ndarray:
+        return StragglerProcess(
+            factor=self.straggler,
+            cap_at_median=self.backup_invocations).speeds(self.workers, seed)
+
+
+@dataclass(frozen=True)
+class FailureSpec:
+    """Failure scenario: stochastic rate, scripted kills, spot pricing.
+
+    ``process()`` builds the engine's :class:`FailureProcess`: injected
+    kills always win (they are the reproducible way to script a scenario);
+    the Poisson rate applies only when ``armed`` (FaaS arms it whenever
+    the rate is positive; IaaS arms it only for spot fleets, matching the
+    legacy ``preempt_rate``-only-if-``spot`` semantics).
+
+    ``rate=None`` means "the platform's default": 0 for on-demand/FaaS
+    fleets, 2 preemptions per worker-hour for spot IaaS fleets -- so a
+    bare ``FailureSpec(spot=True)`` buys the discount WITH the
+    preemption risk, exactly like the legacy ``IaaSRuntime(spot=True)``.
+    """
+    rate: float | None = None            # preemptions per worker-hour
+    inject: tuple = ()                   # ((worker, sim_time), ...) kills
+    spot: bool = False                   # preemptible fleet, discounted $
+    spot_discount: float = pricing.SPOT_DISCOUNT   # spot $ / on-demand $
+
+    def __post_init__(self):
+        _freeze(self, "inject",
+                tuple((int(w), float(t)) for w, t in self.inject))
+
+    def resolved_rate(self, default: float = 0.0) -> float:
+        return default if self.rate is None else self.rate
+
+    def process(self, workers: int, seed: int, armed: bool = True,
+                default_rate: float = 0.0) -> FailureProcess:
+        if self.inject:
+            return InjectedPreemptions(self.inject)
+        rate = self.resolved_rate(default_rate)
+        if armed and rate > 0.0:
+            return PoissonPreemptions(rate, workers, seed)
+        return FailureProcess()
+
+
+@dataclass(frozen=True)
+class CommSpec:
+    """How the fleet communicates.  FaaS platforms use ``channel`` +
+    ``pattern`` (Tables 1-3); IaaS fleets reduce over their NICs and use
+    only ``ckpt_channel`` (where spot checkpoints live)."""
+    channel: str = "s3"                  # s3|memcached|redis|dynamodb|vmps
+    pattern: str = "allreduce"           # allreduce|scatter_reduce
+    ckpt_channel: str = "s3"
+
+
+# --------------------------------------------------------------- protocol ----
+
+@runtime_checkable
+class Platform(Protocol):
+    """The engine-hook interface (DESIGN.md §5).  Anything implementing it
+    can be simulated: the engine never imports a concrete platform.
+
+    Implementations must also expose ``workers: int`` and ``seed: int``.
+    """
+
+    def system_name(self) -> str: ...
+
+    def validate(self, mbytes: int) -> str:
+        """Empty string if a model of ``mbytes`` fits; else the error."""
+        ...
+
+    def make_comm(self) -> CommBackend: ...
+
+    def make_ckpt_store(self, comm: CommBackend) -> Any:
+        """Metered store holding lifetime/preemption checkpoints."""
+        ...
+
+    def startup_time(self, comm: CommBackend) -> float: ...
+
+    def load_time(self, part_bytes: int, data_local: bool = False) -> float: ...
+
+    def restart_time(self) -> float:
+        """Cold-start seconds for one replacement worker."""
+        ...
+
+    def lifetime_s(self) -> float:
+        """Planned worker lease (900 s on Lambda, inf on VMs)."""
+        ...
+
+    def lifetime_margin_s(self) -> float: ...
+
+    def failure_process(self) -> FailureProcess: ...
+
+    def worker_flops(self, model=None) -> float:
+        """Slowest worker's FLOP/s; ``model`` optional (used by GPU fleets
+        to decide whether the model can use the accelerator)."""
+        ...
+
+    def worker_flops_array(self, model) -> np.ndarray: ...
+
+    def worker_speeds(self) -> np.ndarray: ...
+
+    def init_breakdown(self) -> dict: ...
+
+    def finalize_cost(self, ctx) -> float: ...
+
+
+# ------------------------------------------------------------ base class ----
+
+@dataclass
+class BasePlatform:
+    """Shared, spec-driven half of a :class:`Platform` implementation.
+
+    Concrete platforms are thin: they add startup/load timing tables, the
+    comm-backend factory, and pricing.  Everything derivable from the specs
+    (fleet speeds, failure processes, the training entry point) lives here
+    exactly once.
+    """
+    fleet: FleetSpec = field(default_factory=FleetSpec)
+    failure: FailureSpec = field(default_factory=FailureSpec)
+    comm: CommSpec = field(default_factory=CommSpec)
+    sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
+    seed: int = 0
+
+    # ---- user entry point ---------------------------------------------------
+    def train(self, model, algo, ds_train, ds_val, *,
+              target_loss: float | None = None, max_epochs: int = 10,
+              eval_every: int = 1, data_local: bool = False) -> RunResult:
+        from repro.core.sync import make_sync
+        return simulate(self, make_sync(self.sync), model, algo,
+                        ds_train, ds_val, target_loss=target_loss,
+                        max_epochs=max_epochs, eval_every=eval_every,
+                        data_local=data_local)
+
+    # ---- spec-derived hooks -------------------------------------------------
+    @property
+    def workers(self) -> int:
+        return self.fleet.workers
+
+    def worker_speeds(self) -> np.ndarray:
+        return self.fleet.speeds(self.seed)
+
+    def worker_flops(self, model=None) -> float:
+        """Slowest worker's FLOP/s (scalar convenience over the array)."""
+        return float(np.min(self.worker_flops_array(model)))
+
+    def failure_process(self) -> FailureProcess:
+        return self.failure.process(self.workers, self.seed)
+
+    def validate(self, mbytes: int) -> str:
+        return ""
+
+    def lifetime_s(self) -> float:
+        return math.inf
+
+    def lifetime_margin_s(self) -> float:
+        return 0.0
+
+    def init_breakdown(self) -> dict:
+        return {"startup": 0.0, "load": 0.0, "compute": 0.0, "comm": 0.0}

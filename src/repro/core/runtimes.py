@@ -5,12 +5,23 @@ so FaaS and IaaS converge identically for the same algorithm -- the paper's
 statistical/system efficiency split) while metering simulated wall-clock and
 dollars from the measured constants of Tables 2/6 and the pricing model.
 
-Since the engine refactor (DESIGN.md §4) the classes here are *platform
-adapters*: dataclass configs that hand the discrete-event engine
-(:mod:`repro.core.engine`) their startup/load/restart timings, worker fleet
-shape, communication backend, failure process, and cost model.  The training
-loops themselves -- one BSP round loop and one ASP/SSP event loop -- live in
-:mod:`repro.core.sync` and are shared by every platform.
+Since the Platform redesign (DESIGN.md §9) the classes here are *thin
+builders* over the composable specs of :mod:`repro.core.platform`:
+:class:`~repro.core.platform.FleetSpec` (workers, per-worker Lambda memory
+or instance types, stragglers), :class:`~repro.core.platform.FailureSpec`
+(Poisson rate / injected kills / spot pricing) and
+:class:`~repro.core.platform.CommSpec` (channel, reduce pattern).  The
+legacy flat keyword constructors (``FaaSRuntime(workers=10, channel="s3")``)
+keep working and simply populate the specs; spec objects can also be passed
+directly (``FaaSRuntime(fleet=FleetSpec(...), failure=FailureSpec(...))``)
+so a hetero/spot/straggler scenario composes with either platform.
+
+Each class implements the platform-specific half of the
+:class:`~repro.core.platform.Platform` protocol; the spec-derivable half
+(training entry point, fleet speeds, failure processes) lives once in
+:class:`~repro.core.platform.BasePlatform`, and the training loops
+themselves -- one BSP round loop and one ASP/SSP event loop -- live in
+:mod:`repro.core.sync`, shared by every platform.
 
 FaaS specifics (LambdaML):
 - starter->worker hierarchical invocation (startup t^F(w)),
@@ -30,9 +41,6 @@ IaaS specifics (distributed-PyTorch-style VM cluster):
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-
 import numpy as np
 
 from repro.core import cost as pricing
@@ -41,8 +49,12 @@ from repro.core.engine import (  # noqa: F401  (RunResult re-exported)
     ChannelComm, FailureProcess, InjectedPreemptions, MPIComm, PoissonPreemptions,
     PSComm, RunResult, StragglerProcess, simulate,
 )
+from repro.core.platform import (  # noqa: F401  (specs re-exported)
+    BasePlatform, CommSpec, FailureSpec, FleetSpec, Platform, per_worker,
+)
 
-# Table 6 startup constants (seconds) -- linear interpolation between points
+# Table 6 startup constants (seconds) -- see interp_startup for how worker
+# counts between and beyond the measured points are handled
 _T_FAAS = {1: 1.2, 10: 1.2, 50: 11.0, 100: 18.0, 200: 35.0, 300: 50.0}
 _T_IAAS = {1: 100.0, 10: 132.0, 50: 160.0, 100: 292.0, 200: 606.0}
 B_S3 = 65e6
@@ -55,8 +67,21 @@ L_NET = {"t2.medium": 5e-4, "c5.large": 1.5e-4}
 LIFETIME = 900.0          # Lambda max duration (s)
 LIFETIME_MARGIN = 20.0
 
+_per_worker = per_worker  # back-compat alias (pre-Platform name)
+
 
 def interp_startup(table: dict, w: int) -> float:
+    """Startup seconds for a ``w``-worker fleet from a Table 6 column.
+
+    Piecewise-linear interpolation between measured worker counts; below
+    the smallest measured count the smallest entry is returned unchanged.
+    ABOVE the largest measured count the curve is extrapolated *linearly
+    through the origin* from the last point (``t = table[k_max] * w /
+    k_max``), i.e. startup is assumed to keep scaling proportionally with
+    fleet size at the last measured per-worker rate -- a deliberately
+    pessimistic tail for what-if studies beyond the paper's 200-300 worker
+    measurements.
+    """
     ks = sorted(table)
     if w <= ks[0]:
         return table[ks[0]]
@@ -67,83 +92,90 @@ def interp_startup(table: dict, w: int) -> float:
     return table[ks[-1]] * w / ks[-1]
 
 
-def _per_worker(value, w: int) -> np.ndarray:
-    """Broadcast a scalar or validate a per-worker sequence of length w."""
-    if np.isscalar(value) or isinstance(value, str):
-        return np.asarray([value] * w)
-    arr = np.asarray(value)
-    if len(arr) != w:
-        raise ValueError(f"per-worker config has {len(arr)} entries, "
-                         f"expected {w}")
-    return arr
+class FaaSRuntime(BasePlatform):
+    """LambdaML platform: thin builder over Fleet/Failure/Comm specs.
 
+    Accepts either the legacy flat keywords (``workers=``, ``channel=``,
+    ``lambda_gb=``, ``preempt_rate=``, ...) or explicit spec objects
+    (``fleet=``, ``failure=``, ``comm=``); a spec object wins over the flat
+    keywords it covers.
+    """
 
-def _make_failure(rate: float, at: tuple, workers: int,
-                  seed: int) -> FailureProcess:
-    if at:
-        return InjectedPreemptions(tuple(at))
-    if rate > 0.0:
-        return PoissonPreemptions(rate, workers, seed)
-    return FailureProcess()
+    def __init__(self, workers: int = 10, channel: str = "s3",
+                 pattern: str = "allreduce", sync: object = "bsp",
+                 lambda_gb: object = 3.0, straggler: float = 1.0,
+                 backup_invocations: bool = False, lifetime: float = LIFETIME,
+                 seed: int = 0, preempt_rate: float = 0.0,
+                 preempt_at: tuple = (), *,
+                 fleet: FleetSpec | None = None,
+                 failure: FailureSpec | None = None,
+                 comm: CommSpec | None = None):
+        super().__init__(
+            fleet=fleet if fleet is not None else FleetSpec(
+                workers=workers, lambda_gb=lambda_gb, straggler=straggler,
+                backup_invocations=backup_invocations),
+            failure=failure if failure is not None else FailureSpec(
+                rate=preempt_rate, inject=tuple(preempt_at)),
+            comm=comm if comm is not None else CommSpec(
+                channel=channel, pattern=pattern),
+            sync=sync, seed=seed)
+        self.lifetime = lifetime
 
+    # ---- legacy flat attributes (read-only views over the specs) ------------
+    @property
+    def channel(self) -> str:
+        return self.comm.channel
 
-@dataclass
-class FaaSRuntime:
-    """LambdaML (platform adapter for the discrete-event engine)."""
-    workers: int = 10
-    channel: str = "s3"                  # s3|memcached|redis|dynamodb|vmps
-    pattern: str = "allreduce"           # allreduce|scatter_reduce
-    sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
-    lambda_gb: object = 3.0              # scalar or per-worker sizes (hetero)
-    straggler: float = 1.0
-    backup_invocations: bool = False     # straggler mitigation (beyond paper)
-    lifetime: float = LIFETIME
-    seed: int = 0
-    preempt_rate: float = 0.0            # worker crashes per worker-hour
-    preempt_at: tuple = ()               # injected (worker, sim_time) kills
+    @property
+    def pattern(self) -> str:
+        return self.comm.pattern
 
-    # ---- user entry point ---------------------------------------------------
-    def train(self, model, algo, ds_train, ds_val, *,
-              target_loss: float | None = None, max_epochs: int = 10,
-              eval_every: int = 1) -> RunResult:
-        from repro.core.sync import make_sync
-        return simulate(self, make_sync(self.sync), model, algo,
-                        ds_train, ds_val, target_loss=target_loss,
-                        max_epochs=max_epochs, eval_every=eval_every)
+    @property
+    def lambda_gb(self):
+        return self.fleet.lambda_gb
+
+    @property
+    def straggler(self) -> float:
+        return self.fleet.straggler
+
+    @property
+    def backup_invocations(self) -> bool:
+        return self.fleet.backup_invocations
+
+    @property
+    def preempt_rate(self) -> float:
+        return self.failure.resolved_rate()
+
+    @property
+    def preempt_at(self) -> tuple:
+        return self.failure.inject
 
     # ---- fleet shape --------------------------------------------------------
-    def _gb_array(self) -> np.ndarray:
-        return _per_worker(self.lambda_gb, self.workers).astype(float)
-
-    def worker_flops(self) -> float:
-        """Slowest worker's FLOP/s (scalar convenience over the array)."""
-        return float(np.min(self.worker_flops_array(None)))
-
     def worker_flops_array(self, model) -> np.ndarray:
-        gb = self._gb_array()
+        gb = self.fleet.gb_array()
         return np.where(gb >= 3.0, pricing.LAMBDA_3GB_FLOPS,
                         pricing.LAMBDA_1GB_FLOPS)
-
-    def worker_speeds(self) -> np.ndarray:
-        return StragglerProcess(
-            factor=self.straggler,
-            cap_at_median=self.backup_invocations).speeds(self.workers,
-                                                          self.seed)
 
     # ---- engine hooks -------------------------------------------------------
     def system_name(self) -> str:
         return "faas"
 
     def validate(self, mbytes: int) -> str:
-        gb_min = float(np.min(self._gb_array()))
-        if 4 * mbytes * gb_min == 0 or mbytes > gb_min * 1e9 / 3:
-            return "model exceeds Lambda memory"
+        """Memory-headroom check: the model (plus the runtime's working
+        copies -- gradients, the merge buffer, serialization) must fit in
+        one third of the *smallest* Lambda in the fleet."""
+        gb_min = float(np.min(self.fleet.gb_array()))
+        headroom_bytes = gb_min * 1e9 / 3.0
+        if mbytes > headroom_bytes:
+            return (f"model ({mbytes / 1e6:.1f} MB) exceeds 1/3 of the "
+                    f"smallest Lambda's memory ({gb_min:.1f} GB)")
         return ""
 
     def make_comm(self):
-        if self.channel == "vmps":
+        if self.comm.channel == "vmps":
             return PSComm(VMParameterServer(), StorageChannel("s3"))
-        return ChannelComm(StorageChannel(self.channel), self.pattern)
+        return ChannelComm(StorageChannel(self.comm.channel),
+                           self.comm.pattern)
 
     def make_ckpt_store(self, comm):
         return comm.chan          # FaaS comm is always ChannelComm or PSComm
@@ -168,74 +200,92 @@ class FaaSRuntime:
     def lifetime_margin_s(self) -> float:
         return LIFETIME_MARGIN
 
-    def failure_process(self) -> FailureProcess:
-        return _make_failure(self.preempt_rate, self.preempt_at,
-                             self.workers, self.seed)
-
     def init_breakdown(self) -> dict:
         return {"startup": 0.0, "load": 0.0, "compute": 0.0, "comm": 0.0,
                 "checkpoint": 0.0}
 
     def finalize_cost(self, ctx) -> float:
-        gb_seconds = float(np.dot(self._gb_array(), ctx.clock))
+        gb_seconds = float(np.dot(self.fleet.gb_array(), ctx.clock))
         sim_time = float(np.max(ctx.clock))
         return (gb_seconds * pricing.LAMBDA_GB_S
                 + ctx.invocations * pricing.LAMBDA_REQUEST
                 + ctx.comm.service_cost(sim_time))
 
 
-@dataclass
-class IaaSRuntime:
-    """Distributed-PyTorch-style VM cluster (strong IaaS baseline)."""
-    workers: int = 10
-    instance: object = "t2.medium"       # scalar or per-worker types (hetero)
-    gpu: bool = False
-    straggler: float = 1.0
-    seed: int = 0
-    sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
-    spot: bool = False                   # preemptible fleet + discounted $
-    preempt_rate: float = 2.0            # preemptions per worker-hour (spot)
-    preempt_at: tuple = ()               # injected (worker, sim_time) kills
-    ckpt_channel: str = "s3"             # where spot checkpoints live
+class IaaSRuntime(BasePlatform):
+    """Distributed-PyTorch-style VM cluster: thin builder over the specs.
 
-    # ---- user entry point ---------------------------------------------------
-    def train(self, model, algo, ds_train, ds_val, *,
-              target_loss: float | None = None, max_epochs: int = 10,
-              eval_every: int = 1, data_local: bool = False) -> RunResult:
-        from repro.core.sync import make_sync
-        return simulate(self, make_sync(self.sync), model, algo,
-                        ds_train, ds_val, target_loss=target_loss,
-                        max_epochs=max_epochs, eval_every=eval_every,
-                        data_local=data_local)
+    Accepts the legacy flat keywords (``workers=``, ``instance=``,
+    ``spot=``, ``preempt_rate=``, ...) or explicit spec objects; a spec
+    object wins over the flat keywords it covers.  The Poisson preemption
+    rate (default 2/worker-hour) only arms on spot fleets; injected kills
+    always apply.
+    """
+
+    def __init__(self, workers: int = 10, instance: object = "t2.medium",
+                 gpu: bool = False, straggler: float = 1.0, seed: int = 0,
+                 sync: object = "bsp", spot: bool = False,
+                 preempt_rate: float = 2.0, preempt_at: tuple = (),
+                 ckpt_channel: str = "s3", *,
+                 fleet: FleetSpec | None = None,
+                 failure: FailureSpec | None = None,
+                 comm: CommSpec | None = None):
+        super().__init__(
+            fleet=fleet if fleet is not None else FleetSpec(
+                workers=workers, instance=instance, gpu=gpu,
+                straggler=straggler),
+            failure=failure if failure is not None else FailureSpec(
+                rate=preempt_rate, inject=tuple(preempt_at), spot=spot),
+            comm=comm if comm is not None else CommSpec(
+                ckpt_channel=ckpt_channel),
+            sync=sync, seed=seed)
+
+    # ---- legacy flat attributes (read-only views over the specs) ------------
+    @property
+    def instance(self):
+        return self.fleet.instance
+
+    @property
+    def gpu(self) -> bool:
+        return self.fleet.gpu
+
+    @property
+    def straggler(self) -> float:
+        return self.fleet.straggler
+
+    @property
+    def spot(self) -> bool:
+        return self.failure.spot
+
+    @property
+    def preempt_rate(self) -> float:
+        return self.failure.resolved_rate(self.SPOT_DEFAULT_RATE)
+
+    @property
+    def preempt_at(self) -> tuple:
+        return self.failure.inject
+
+    @property
+    def ckpt_channel(self) -> str:
+        return self.comm.ckpt_channel
 
     # ---- fleet shape --------------------------------------------------------
-    def _instances(self) -> list[str]:
-        return list(_per_worker(self.instance, self.workers))
-
-    def worker_flops(self, model) -> float:
-        """Slowest worker's FLOP/s (scalar convenience over the array)."""
-        return float(np.min(self.worker_flops_array(model)))
-
     def worker_flops_array(self, model) -> np.ndarray:
-        if self.gpu and not model.convex:
+        # With no model to inspect, a GPU fleet reports GPU FLOP/s (the
+        # capability estimate); with a model, convex workloads fall back to
+        # CPU speed -- the paper's NN-only GPU rule.
+        if self.fleet.gpu and (model is None or not model.convex):
             return np.asarray([pricing.VM_GPU_FLOPS.get(i, 150e9)
-                               for i in self._instances()])
+                               for i in self.fleet.instances()])
         return np.full(self.workers, pricing.VM_CPU_FLOPS)
-
-    def worker_speeds(self) -> np.ndarray:
-        return StragglerProcess(factor=self.straggler).speeds(self.workers,
-                                                              self.seed)
 
     # ---- engine hooks -------------------------------------------------------
     def system_name(self) -> str:
-        return ("iaas" + ("-gpu" if self.gpu else "")
-                + ("-spot" if self.spot else ""))
-
-    def validate(self, mbytes: int) -> str:
-        return ""
+        return ("iaas" + ("-gpu" if self.fleet.gpu else "")
+                + ("-spot" if self.failure.spot else ""))
 
     def _net(self) -> VMNetwork:
-        insts = self._instances()
+        insts = self.fleet.instances()
         bn = min(B_NET.get(i, 120e6) for i in insts)       # slowest NIC
         ln = max(L_NET.get(i, 5e-4) for i in insts)
         return VMNetwork(bn, ln)
@@ -244,7 +294,7 @@ class IaaSRuntime:
         return MPIComm(self._net())
 
     def make_ckpt_store(self, comm):
-        return StorageChannel(self.ckpt_channel)
+        return StorageChannel(self.comm.ckpt_channel)
 
     def startup_time(self, comm) -> float:
         return interp_startup(_T_IAAS, self.workers)
@@ -252,35 +302,27 @@ class IaaSRuntime:
     def load_time(self, part_bytes: int, data_local: bool = False) -> float:
         if data_local:
             return part_bytes / min(B_NET.get(i, 120e6)
-                                    for i in self._instances())
+                                    for i in self.fleet.instances())
         return part_bytes / B_S3
 
     def restart_time(self) -> float:
         return interp_startup(_T_IAAS, 1)
 
-    def lifetime_s(self) -> float:
-        return math.inf                  # VMs run until the job ends
-
-    def lifetime_margin_s(self) -> float:
-        return 0.0
+    #: default spot-market preemption rate (per worker-hour) when the
+    #: FailureSpec leaves ``rate=None``
+    SPOT_DEFAULT_RATE = 2.0
 
     def failure_process(self) -> FailureProcess:
-        # explicit injections always apply; the Poisson rate (which has a
-        # nonzero default) only kicks in for spot fleets
-        if self.preempt_at:
-            return InjectedPreemptions(tuple(self.preempt_at))
-        if self.spot and self.preempt_rate > 0.0:
-            return PoissonPreemptions(self.preempt_rate, self.workers,
-                                      self.seed)
-        return FailureProcess()
-
-    def init_breakdown(self) -> dict:
-        return {"startup": 0.0, "load": 0.0, "compute": 0.0, "comm": 0.0}
+        # injected kills always apply; the Poisson rate (spot-market
+        # default when unset) only arms on spot fleets
+        return self.failure.process(self.workers, self.seed,
+                                    armed=self.failure.spot,
+                                    default_rate=self.SPOT_DEFAULT_RATE)
 
     def finalize_cost(self, ctx) -> float:
         sim_time = float(np.max(ctx.clock))
-        hourly = sum(pricing.EC2_HOURLY[i] for i in self._instances())
-        if self.spot:
-            hourly *= pricing.SPOT_DISCOUNT
+        hourly = sum(pricing.EC2_HOURLY[i] for i in self.fleet.instances())
+        if self.failure.spot:
+            hourly *= self.failure.spot_discount
         return (hourly / 3600.0 * sim_time
                 + ctx.ckpt_store.service_cost(sim_time))

@@ -159,6 +159,20 @@ class ASP(SSP):
         super().__init__(staleness=math.inf)
 
 
+def sync_name(spec) -> str:
+    """Canonical string form of a sync spec (``"bsp"``, ``"asp"``,
+    ``"ssp:<s>"``) -- the serialization used by
+    :class:`repro.experiments.ExperimentSpec`.  Inverse of
+    :func:`make_sync` up to protocol identity."""
+    proto = make_sync(spec)
+    if isinstance(proto, ASP):
+        return ASP_NAME
+    if isinstance(proto, SSP):
+        s = proto.staleness
+        return SSP_NAME if s is None else f"{SSP_NAME}:{s:g}"
+    return proto.name
+
+
 def make_sync(spec) -> SyncProtocol:
     """``"bsp"`` | ``"asp"`` | ``"ssp"`` | ``"ssp:<s>"`` | protocol class or
     instance (``sync=SSP(5)`` and ``sync=BSP`` both work)."""
@@ -172,5 +186,6 @@ def make_sync(spec) -> SyncProtocol:
     if name == ASP_NAME:
         return ASP()
     if name == SSP_NAME:
-        return SSP(int(arg) if arg else 3)
+        s = float(arg) if arg else 3.0
+        return SSP(int(s) if s.is_integer() else s)   # "ssp:inf" works too
     raise KeyError(f"unknown sync protocol {spec!r}")

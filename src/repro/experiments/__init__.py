@@ -1,0 +1,22 @@
+"""Declarative experiment layer (DESIGN.md §10).
+
+One way to run a study, three entry points:
+
+- :class:`ExperimentSpec` -- frozen, JSON-round-trippable description of a
+  single trial (platform x fleet x failure x comm x sync x algorithm x
+  model x dataset x stopping rule), composed from the same
+  FleetSpec/FailureSpec/CommSpec objects the platforms consume.
+- :func:`run_experiment` / :func:`sweep` -- execute a spec (or a cartesian
+  grid of overrides over one) into stable-schema :class:`RunRecord` JSON,
+  with an on-disk cache keyed by spec hash.
+- :data:`PRESETS` -- the paper's figures as named spec bundles
+  (``fig10_breakdown``, ``fig11_end2end``, ``fig8_sync``,
+  ``spot_vs_ondemand``, ``hetero_fleet``), consumed by both the
+  ``python -m repro`` CLI and the benchmark drivers.
+"""
+from repro.core.platform import CommSpec, FailureSpec, FleetSpec  # noqa: F401
+from repro.experiments.presets import PRESETS, Preset, get_preset  # noqa: F401
+from repro.experiments.runner import (  # noqa: F401
+    SCHEMA, RunRecord, expand_grid, run_experiment, sweep,
+)
+from repro.experiments.spec import ExperimentSpec  # noqa: F401

@@ -1,0 +1,140 @@
+"""Declarative experiment specifications (DESIGN.md §10).
+
+An :class:`ExperimentSpec` is a frozen, JSON-round-trippable description of
+one point in the paper's design space: platform x fleet x failure scenario x
+communication x sync protocol x algorithm x model x dataset x stopping rule.
+It is the unit the sweep runner expands, hashes (for the on-disk result
+cache), and records next to every result, so any row in any table can be
+re-run from its JSON alone:
+
+    spec = ExperimentSpec(platform="faas", sync="ssp:2",
+                          fleet=FleetSpec(workers=16, straggler=6.0))
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+``build_runtime()`` / ``build_workload()`` turn a spec into the exact same
+objects a hand-written ``FaaSRuntime(...).train(...)`` call would construct,
+which is what makes ``run_experiment(spec)`` byte-identical to the legacy
+entry points for the same seed.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import asdict, dataclass, field, fields, replace
+
+from repro.core.platform import CommSpec, FailureSpec, FleetSpec
+from repro.core.runtimes import LIFETIME, FaaSRuntime, IaaSRuntime
+from repro.core.sync import sync_name
+
+PLATFORMS = ("faas", "iaas")
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One fully-determined experiment.  Every field is JSON-serializable;
+    ``name`` is a human label and does NOT enter the spec hash."""
+    name: str = ""
+    platform: str = "faas"                 # faas | iaas
+    fleet: FleetSpec = field(default_factory=FleetSpec)
+    failure: FailureSpec = field(default_factory=FailureSpec)
+    comm: CommSpec = field(default_factory=CommSpec)
+    sync: str = "bsp"                      # bsp | asp | ssp:<s>
+    model: str = "lr"                      # make_study_model name
+    model_args: dict = field(default_factory=dict)
+    algorithm: str = "ga_sgd"              # make_algorithm name
+    algo_args: dict = field(default_factory=dict)
+    dataset: str = "higgs"                 # make_dataset name
+    rows: int = 30_000
+    data_seed: int = 0
+    val_frac: float = 0.1
+    seed: int = 0                          # params init + stragglers + failures
+    max_epochs: int = 3
+    eval_every: int = 1
+    target_loss: float | None = None
+    data_local: bool = False               # IaaS: load from peer VMs, not S3
+    lifetime: float | None = None          # FaaS: worker lease override (s)
+
+    def __post_init__(self):
+        if self.platform not in PLATFORMS:
+            raise ValueError(f"platform must be one of {PLATFORMS}, "
+                             f"got {self.platform!r}")
+        object.__setattr__(self, "sync", sync_name(self.sync))
+        for f in ("fleet", "failure", "comm"):
+            v = getattr(self, f)
+            if isinstance(v, dict):
+                cls = {"fleet": FleetSpec, "failure": FailureSpec,
+                       "comm": CommSpec}[f]
+                object.__setattr__(self, f, cls(**v))
+
+    # ---- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise KeyError(f"unknown ExperimentSpec fields {sorted(unknown)}; "
+                           f"valid fields: {sorted(known)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    def spec_hash(self) -> str:
+        """Stable content hash (cache key).  ``name`` is excluded: renaming
+        a trial must still hit the cache."""
+        d = self.to_dict()
+        d.pop("name")
+        canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    def with_(self, **overrides) -> "ExperimentSpec":
+        """`replace` that also reaches into nested specs via dotted keys:
+        ``spec.with_(**{"fleet.workers": 8, "sync": "asp"})``."""
+        out = self
+        for key, value in overrides.items():
+            out = _apply_override(out, key, value)
+        return out
+
+    # ---- builders -----------------------------------------------------------
+    def build_runtime(self):
+        """The platform object a hand-written call would construct."""
+        if self.platform == "faas":
+            return FaaSRuntime(
+                fleet=self.fleet, failure=self.failure, comm=self.comm,
+                sync=self.sync, seed=self.seed,
+                lifetime=LIFETIME if self.lifetime is None else self.lifetime)
+        return IaaSRuntime(fleet=self.fleet, failure=self.failure,
+                           comm=self.comm, sync=self.sync, seed=self.seed)
+
+    def build_workload(self):
+        """(model, algo, ds_train, ds_val) exactly as the legacy scripts
+        build them -- deterministic in (dataset, rows, data_seed, val_frac,
+        model, algorithm)."""
+        from repro.core.algorithms import make_algorithm
+        from repro.core.mlmodels import make_study_model
+        from repro.data.synthetic import make_dataset, train_val_split
+        ds = make_dataset(self.dataset, rows=self.rows, seed=self.data_seed)
+        tr, va = train_val_split(ds, val_frac=self.val_frac)
+        model = make_study_model(self.model, tr, **self.model_args)
+        algo = make_algorithm(self.algorithm, **self.algo_args)
+        return model, algo, tr, va
+
+
+def _apply_override(spec, path: str, value):
+    head, _, rest = path.partition(".")
+    valid = {f.name for f in fields(spec)}
+    if head not in valid:
+        raise KeyError(f"unknown spec field {head!r} in override {path!r}; "
+                       f"valid fields: {sorted(valid)}")
+    if rest:
+        return replace(spec, **{head: _apply_override(getattr(spec, head),
+                                                      rest, value)})
+    return replace(spec, **{head: value})

@@ -199,6 +199,52 @@ def test_per_worker_config_length_mismatch_raises(higgs):
             model, _ga(), tr, va, max_epochs=1)
 
 
+# ----------------------------------------------------- platform protocol ----
+
+def test_runtimes_satisfy_platform_protocol():
+    from repro.core.platform import CommSpec, FailureSpec, FleetSpec, Platform
+    faas, iaas = FaaSRuntime(workers=2), IaaSRuntime(workers=2)
+    assert isinstance(faas, Platform) and isinstance(iaas, Platform)
+    # spec objects compose directly (and win over the flat keywords)
+    rt = FaaSRuntime(workers=99, fleet=FleetSpec(workers=3, straggler=2.0),
+                     failure=FailureSpec(inject=((0, 5.0),)),
+                     comm=CommSpec(channel="redis"))
+    assert rt.workers == 3 and rt.channel == "redis"
+    assert rt.preempt_at == ((0, 5.0),)
+    # legacy flat attributes remain readable views over the specs
+    assert IaaSRuntime(workers=2, spot=True).spot is True
+    assert IaaSRuntime(workers=2, instance="c5.large").instance == "c5.large"
+
+
+def test_worker_flops_signature_is_unified(higgs):
+    """Satellite: FaaS used to take no model, IaaS required one; both now
+    accept an optional model (None = capability estimate)."""
+    from repro.core.mlmodels import make_study_model
+    tr, _ = higgs
+    lr = make_study_model("lr", tr)
+    faas, iaas = FaaSRuntime(workers=2), IaaSRuntime(workers=2)
+    assert faas.worker_flops() == faas.worker_flops(lr) > 0
+    assert iaas.worker_flops() == iaas.worker_flops(lr) > 0
+    gpu = IaaSRuntime(workers=2, instance="g3s.xlarge", gpu=True)
+    # capability estimate without a model reports the GPU; a convex model
+    # falls back to CPU speed (the paper's NN-only GPU rule)
+    assert gpu.worker_flops() > gpu.worker_flops(lr)
+
+
+def test_faas_validate_memory_headroom_boundary():
+    """Satellite: the opaque `4 * mbytes * gb_min == 0` clause is gone --
+    the rule is now: model fits in 1/3 of the smallest Lambda's memory."""
+    rt = FaaSRuntime(workers=2, lambda_gb=1.0)
+    headroom = int(1.0 * 1e9 / 3)
+    assert rt.validate(0) == ""                    # zero-byte model is fine
+    assert rt.validate(headroom) == ""             # exactly at the boundary
+    assert "exceeds" in rt.validate(headroom + 1)  # one byte over
+    # the SMALLEST worker in a hetero fleet bounds the whole fleet
+    hetero = FaaSRuntime(workers=3, lambda_gb=(3.0, 3.0, 1.0))
+    assert "exceeds" in hetero.validate(headroom + 1)
+    assert FaaSRuntime(workers=3, lambda_gb=3.0).validate(headroom + 1) == ""
+
+
 # -------------------------------------------------------------- metering ----
 
 def test_vmnetwork_shares_channel_metering_interface():

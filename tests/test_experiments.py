@@ -1,0 +1,257 @@
+"""Declarative experiment API (DESIGN.md §10): spec round-trips, the
+spec-hash result cache, parity between ``run_experiment`` and the legacy
+runtime entry points, the sweep grid, and the ``python -m repro`` CLI."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.platform import CommSpec, FailureSpec, FleetSpec
+from repro.experiments import (
+    PRESETS, ExperimentSpec, get_preset, run_experiment, sweep,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+
+QUICK = dict(rows=3_000, max_epochs=1)
+
+
+def _spec(**kw):
+    return ExperimentSpec(**{**QUICK, "fleet": FleetSpec(workers=2), **kw})
+
+
+# ---------------------------------------------------------- serialization ---
+
+def test_spec_json_round_trip_equality():
+    spec = ExperimentSpec(
+        name="rt", platform="iaas", sync="ssp:2",
+        fleet=FleetSpec(workers=4, instance=("c5.large", "c5.large",
+                                             "t2.medium", "t2.medium"),
+                        straggler=3.0),
+        failure=FailureSpec(spot=True, inject=((1, 140.0), (2, 150.0))),
+        comm=CommSpec(ckpt_channel="s3"),
+        algorithm="admm", algo_args={"lr": 0.1, "local_epochs": 5},
+        target_loss=0.4)
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # lists (the JSON form of tuples) normalize back to tuples
+    d = json.loads(spec.to_json())
+    assert isinstance(d["fleet"]["instance"], list)
+    back = ExperimentSpec.from_dict(d)
+    assert back.fleet.instance == spec.fleet.instance
+    assert back.failure.inject == spec.failure.inject
+
+
+def test_spec_hash_ignores_name_but_not_content():
+    a = _spec(name="a")
+    assert a.spec_hash() == _spec(name="b").spec_hash()
+    assert a.spec_hash() != a.with_(seed=1).spec_hash()
+    assert a.spec_hash() != a.with_(**{"fleet.straggler": 2.0}).spec_hash()
+
+
+def test_spec_rejects_unknown_fields_and_platforms():
+    with pytest.raises(KeyError):
+        ExperimentSpec.from_dict({"platfrom": "faas"})
+    with pytest.raises(ValueError):
+        ExperimentSpec(platform="paas")
+    with pytest.raises(KeyError):
+        _spec().with_(**{"fleet.wrokers": 3})
+
+
+def test_sync_spec_canonicalizes():
+    assert _spec(sync="ssp").sync == "ssp:3"
+    assert _spec(sync="asp").sync == "asp"
+
+
+# ------------------------------------------------------------------ cache ---
+
+def test_run_experiment_cache_hit_miss_and_force(tmp_path):
+    spec = _spec(name="c1")
+    r1 = run_experiment(spec, cache_dir=tmp_path)
+    assert not r1.cached and Path(r1.path).exists()
+    r2 = run_experiment(spec, cache_dir=tmp_path)
+    assert r2.cached and r2.result == r1.result
+    # different content -> miss; renamed spec -> still a hit
+    r3 = run_experiment(spec.with_(seed=5), cache_dir=tmp_path)
+    assert not r3.cached
+    r4 = run_experiment(spec.with_(name="renamed"), cache_dir=tmp_path)
+    assert r4.cached and r4.spec.name == "renamed"
+    r5 = run_experiment(spec, cache_dir=tmp_path, force=True)
+    assert not r5.cached and r5.result == r1.result
+
+
+def test_record_schema_is_stable(tmp_path):
+    rec = run_experiment(_spec(name="s"), cache_dir=tmp_path)
+    d = json.loads(Path(rec.path).read_text())
+    assert d["schema"] == "repro.experiment/v1"
+    assert set(d) == {"schema", "name", "spec_hash", "spec", "result"}
+    for key in ("system", "algorithm", "workers", "rounds", "sim_time_s",
+                "cost_usd", "final_loss", "converged", "preemptions",
+                "max_staleness", "breakdown", "error", "history"):
+        assert key in d["result"], key
+    # the record alone is enough to re-run the trial
+    again = run_experiment(ExperimentSpec.from_dict(d["spec"]))
+    assert again.result["history"] == d["result"]["history"]
+
+
+# ----------------------------------------------------------------- parity ---
+
+def test_run_experiment_parity_with_legacy_faas_train():
+    """Identical loss history and cost to a hand-written
+    FaaSRuntime(...).train(...) call for the same seed (byte-identical)."""
+    from repro.core.algorithms import make_algorithm
+    from repro.core.mlmodels import make_study_model
+    from repro.core.runtimes import FaaSRuntime
+    from repro.data.synthetic import make_dataset, train_val_split
+
+    spec = ExperimentSpec(platform="faas", sync="ssp:2", rows=4_000,
+                          max_epochs=2, seed=3,
+                          fleet=FleetSpec(workers=3, straggler=4.0),
+                          algo_args={"lr": 0.2, "batch_size": 1024})
+    rec = run_experiment(spec)
+
+    ds = make_dataset("higgs", rows=4_000, seed=0)
+    tr, va = train_val_split(ds)
+    model = make_study_model("lr", tr)
+    algo = make_algorithm("ga_sgd", lr=0.2, batch_size=1024)
+    legacy = FaaSRuntime(workers=3, straggler=4.0, sync="ssp:2",
+                         seed=3).train(model, algo, tr, va, max_epochs=2)
+
+    assert [l for _, l in rec.history] == [float(l) for _, l in legacy.history]
+    assert [t for t, _ in rec.history] == [float(t) for t, _ in legacy.history]
+    assert rec.result["cost_usd"] == round(legacy.cost, 4)
+    assert rec.result["rounds"] == legacy.rounds
+
+
+def test_run_experiment_parity_iaas_spot():
+    from repro.core.runtimes import IaaSRuntime, _T_IAAS, interp_startup
+    t0 = interp_startup(_T_IAAS, 2)
+    spec = _spec(platform="iaas",
+                 failure=FailureSpec(spot=True, inject=((0, t0 + 1.0),)))
+    rec = run_experiment(spec)
+    model, algo, tr, va = spec.build_workload()
+    legacy = IaaSRuntime(workers=2, spot=True,
+                         preempt_at=((0, t0 + 1.0),)).train(
+        model, algo, tr, va, max_epochs=1)
+    assert rec.result["preemptions"] == legacy.preemptions == 1
+    assert [l for _, l in rec.history] == [float(l) for _, l in legacy.history]
+    assert rec.result["system"] == "iaas-spot"
+
+
+# ------------------------------------------------------------------ sweep ---
+
+def test_sweep_2x2_grid_dedupes_through_cache(tmp_path):
+    base = _spec(name="grid")
+    grid = {"fleet.workers": [2, 3], "sync": ["bsp", "asp"]}
+    recs = sweep(base, grid, cache_dir=tmp_path)
+    assert len(recs) == 4
+    assert sorted(r.spec.name for r in recs) == [
+        "grid[workers=2,sync=asp]", "grid[workers=2,sync=bsp]",
+        "grid[workers=3,sync=asp]", "grid[workers=3,sync=bsp]"]
+    assert len({r.spec_hash for r in recs}) == 4
+    assert not any(r.cached for r in recs)
+    # identical sweep -> pure cache hits, identical results
+    again = sweep(base, grid, cache_dir=tmp_path, max_workers=4)
+    assert all(r.cached for r in again)
+    assert [r.result for r in again] == [r.result for r in recs]
+
+
+def test_sweep_duplicate_points_run_once(tmp_path):
+    recs = sweep(_spec(name="dup"), {"seed": [0, 0]}, cache_dir=tmp_path)
+    assert len(recs) == 2
+    assert recs[0].result == recs[1].result
+    assert len(list(tmp_path.glob("*.json"))) == 1
+
+
+# ---------------------------------------------------------------- presets ---
+
+def test_presets_build_valid_specs():
+    assert set(PRESETS) == {"fig10_breakdown", "fig11_end2end", "fig8_sync",
+                            "spot_vs_ondemand", "hetero_fleet"}
+    for name, preset in PRESETS.items():
+        specs = preset.build(True)
+        assert specs, name
+        for s in specs:
+            assert ExperimentSpec.from_json(s.to_json()) == s
+    with pytest.raises(KeyError):
+        get_preset("fig99")
+
+
+# -------------------------------------------------------------------- CLI ---
+
+def _cli(*args, timeout=600):
+    return subprocess.run([sys.executable, "-m", "repro", *args],
+                          env=ENV, cwd=ROOT, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def test_cli_list_smoke():
+    r = _cli("list")
+    assert r.returncode == 0, r.stderr
+    for name in PRESETS:
+        assert name in r.stdout
+
+
+def test_cli_run_fig8_sync_quick(tmp_path):
+    out = tmp_path / "records.json"
+    r = _cli("run", "fig8_sync", "--quick", "--set", "rows=3000",
+             "--set", "max_epochs=1", "--cache", str(tmp_path / "cache"),
+             "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "fig8_higgs_bsp" in r.stdout
+    records = json.loads(out.read_text())
+    assert len(records) == 3
+    assert all(rec["schema"] == "repro.experiment/v1" for rec in records)
+
+
+def test_cli_sweep_2x2(tmp_path):
+    r = _cli("sweep", "fig8_sync", "--grid", "fleet.workers=2,3",
+             "--grid", "sync=bsp,asp", "--set", "rows=3000",
+             "--set", "max_epochs=1", "--cache", str(tmp_path),
+             "--out", str(tmp_path / "sweep.json"))
+    assert r.returncode == 0, r.stdout + r.stderr
+    records = json.loads((tmp_path / "sweep.json").read_text())
+    assert len(records) == 4
+    workers = {rec["spec"]["fleet"]["workers"] for rec in records}
+    syncs = {rec["spec"]["sync"] for rec in records}
+    assert workers == {2, 3} and syncs == {"bsp", "asp"}
+
+
+def test_cli_unknown_preset_errors():
+    r = _cli("run", "fig99_nope")
+    assert r.returncode != 0
+    assert "fig10_breakdown" in r.stderr   # helpful listing
+
+
+def test_cli_rerun_from_record_file(tmp_path):
+    """README promise: any cached record (or --out file) re-runs as-is."""
+    cache = tmp_path / "cache"
+    rec = run_experiment(_spec(name="replay"), cache_dir=cache)
+    r = _cli("run", rec.path, "--no-cache")
+    assert r.returncode == 0, r.stdout + r.stderr
+    out = tmp_path / "records.json"         # --out list-of-records form
+    (tmp_path / "list.json").write_text(json.dumps([rec.to_dict()]))
+    r = _cli("run", str(tmp_path / "list.json"), "--no-cache",
+             "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert json.loads(out.read_text())[0]["spec_hash"] == rec.spec_hash
+
+
+def test_spot_spec_defaults_to_preemption_risk():
+    """FailureSpec(spot=True) must arm the 2/worker-hour spot rate, like
+    the legacy IaaSRuntime(spot=True) path; on-demand specs stay safe."""
+    from repro.core.engine import PoissonPreemptions
+    from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+
+    spot = ExperimentSpec(platform="iaas", failure=FailureSpec(spot=True))
+    assert isinstance(spot.build_runtime().failure_process(),
+                      PoissonPreemptions)
+    assert spot.build_runtime().preempt_rate == 2.0
+    ondemand = ExperimentSpec(platform="iaas")
+    assert type(ondemand.build_runtime().failure_process()).__name__ == \
+        "FailureProcess"
+    assert FaaSRuntime(workers=2).preempt_rate == 0.0
