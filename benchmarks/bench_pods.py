@@ -1,0 +1,50 @@
+"""The three-infrastructure study (DESIGN.md §11): a real smollm-360m-config
+workload (genuine JAX fwd/bwd) on FaaS vs IaaS vs accelerator pods, plus the
+pod-platform communication-interval sweep (BSP GA-SGD vs LocalSGD(H) vs
+DiLoCo vs int8-compressed deltas).
+
+Thin view over the ``faas_vs_pod`` and ``pod_local_sgd`` presets, shared
+with ``python -m repro run faas_vs_pod``.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.experiments import get_preset, run_experiment
+
+
+def _row(rec):
+    r = rec.result
+    return {
+        "name": rec.spec.name,
+        "us_per_call": r["sim_time_s"] * 1e6 / max(r["rounds"], 1),
+        "sim_time_s": r["sim_time_s"], "cost_usd": r["cost_usd"],
+        "rounds": r["rounds"], "final_loss": r["final_loss"],
+        "comm_s": r["breakdown"].get("comm", 0.0),
+        "comm_bytes": r.get("comm_bytes", 0.0),
+        "derived": (f"loss={r['final_loss']:.4f};"
+                    f"comm={r['breakdown'].get('comm', 0.0):.4f}s;"
+                    f"bytes={r.get('comm_bytes', 0.0):.0f};"
+                    f"cost=${r['cost_usd']:.4f}"),
+    }
+
+
+def run(quick: bool = True):
+    rows = [_row(run_experiment(s))
+            for s in get_preset("faas_vs_pod").build(quick)]
+
+    by_name = {r["name"]: r for r in rows}
+    bsp, loc8 = by_name["pods_pod_bsp"], by_name["pods_pod_local8"]
+    assert loc8["comm_s"] * 4 <= bsp["comm_s"], \
+        "LocalSGD(H=8) must cut metered pod comm seconds >= 4x vs BSP"
+
+    sweep_rows = [_row(run_experiment(s))
+                  for s in get_preset("pod_local_sgd").build(quick)]
+    sweep = {r["name"]: r for r in sweep_rows}
+    assert sweep["podsgd_local8_c8"]["comm_bytes"] < \
+        sweep["podsgd_local8"]["comm_bytes"] / 3.9, \
+        "int8 deltas must cut metered bytes ~4x on top of the H x"
+    return emit(rows + sweep_rows, "bench_pods")
+
+
+if __name__ == "__main__":
+    run()

@@ -19,6 +19,7 @@ MODULES = [
     "bench_end2end",       # Fig 11/12 + COST check
     "bench_pipeline",      # Table 5
     "bench_analytical",    # Fig 13/14/15
+    "bench_pods",          # §11 three-infrastructure study + LocalSGD sweep
     "bench_roofline",      # §Roofline (dry-run derived)
     "bench_crosspod",      # §Perf paper-technique headline
     "bench_kernels",       # kernel microbench

@@ -108,6 +108,10 @@ def cmd_list(args) -> int:
         p = PRESETS[name]
         n = len(p.build(True))
         print(f"{name:<18s} {n:2d} trial(s)  {p.description}")
+    from repro.core.workloads import list_workloads
+    from repro.experiments.spec import PLATFORMS
+    print(f"\nplatforms: {', '.join(PLATFORMS)}")
+    print(f"models:    {', '.join(list_workloads())}")
     return 0
 
 

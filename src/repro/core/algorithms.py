@@ -39,6 +39,11 @@ class WorkerState:
 class Algorithm:
     name = "base"
     convex_only = False
+    #: True when local_update returns an additive update vector (a gradient)
+    #: that can be accumulated across rounds and applied to older params --
+    #: the contract repro.core.sync.LocalSGD builds on.  MA/ADMM/EM ship
+    #: full params / statistics instead.
+    additive_update = False
 
     def __init__(self, lr: float = 0.1, batch_size: int = 4096):
         self.lr = lr
@@ -66,6 +71,7 @@ class Algorithm:
 class GASGD(Algorithm):
     """Gradient averaging: sync every mini-batch."""
     name = "ga_sgd"
+    additive_update = True
 
     def rounds_per_epoch(self, part):
         return max(1, -(-part.n // self.batch_size))
@@ -96,7 +102,16 @@ class GASGD(Algorithm):
 
 
 class MASGD(Algorithm):
-    """Model averaging: local SGD for `local_epochs`, then average params."""
+    """Model averaging: local SGD for `local_epochs`, then average params
+    every round (the merge pattern does the averaging).
+
+    The generalized form -- sync every H mini-batch rounds, optional DiLoCo
+    outer optimizer / int8 delta compression -- is the
+    :class:`repro.core.sync.LocalSGD` protocol, which shares its outer-step
+    math (`DiLoCoOuter`, `quantize_int8_ef`) with the real pod stack in
+    :mod:`repro.distributed.local_sgd`; prefer ``sync="local:<H>"`` over
+    stacking `local_epochs` when the sweep axis is communication interval.
+    """
     name = "ma_sgd"
 
     def __init__(self, lr=0.1, batch_size=4096, local_epochs: int = 1):

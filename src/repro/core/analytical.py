@@ -11,6 +11,12 @@ convergence scaling factor, C = single-worker epoch compute seconds.)
 Includes the Table 6 constants, a sampling-based epoch estimator (Kaoudi et
 al. [54], 10% sample), and the Q1/Q2 what-if studies (faster FaaS-IaaS
 link / GPU-FaaS pricing; hot data).
+
+The ``(s, m, R, C)`` constants are ONE derivation away from the simulator:
+:meth:`CostInputs.from_workload` computes them from any
+:class:`repro.core.workloads.Workload`, so the analytic curves and the
+discrete-event sweeps describe the same workload by construction
+(cross-checked in ``tests/test_workloads.py``).
 """
 from __future__ import annotations
 
@@ -34,12 +40,56 @@ TABLE6 = {
 
 
 @dataclass
-class Workload:
+class CostInputs:
+    """The analytic model's ``(s, m, R, C)`` constants for one workload.
+
+    Historically this class was also called ``Workload``, colliding with
+    the engine-facing :class:`repro.core.workloads.Workload` protocol; that
+    protocol is now the one source of truth and :meth:`from_workload`
+    derives these constants from it (``Workload`` remains as a
+    backwards-compatible alias here).
+    """
     s_bytes: float          # dataset size
     m_bytes: float          # model size
     R: float                # single-worker epochs to target loss
     C: float                # single-worker seconds per epoch
     f: callable = field(default=lambda w: 1.0)  # convergence scaling
+
+    @classmethod
+    def from_workload(cls, workload, ds_train, *, R: float | None = None,
+                      algo=None, target_loss: float | None = None,
+                      worker_flops: float | None = None, params=None,
+                      f=None) -> "CostInputs":
+        """Derive the constants from an engine workload (study stand-in or
+        real architecture): ``s`` = the training partition's bytes, ``m`` =
+        the fp32 update-vector bytes
+        (:func:`repro.core.workloads.update_vector_bytes`), ``C`` = dataset
+        rows x ``flops_per_row`` over one worker's FLOP/s (default: the
+        t2.medium CPU model, matching the paper's C^F ~= C^I calibration),
+        and ``R`` either given explicitly or measured with the sampling
+        estimator [54] (needs ``algo`` + ``target_loss``)."""
+        from repro.core import cost as pricing
+        from repro.core.workloads import update_vector_bytes
+
+        if worker_flops is None:
+            worker_flops = pricing.VM_CPU_FLOPS
+        if R is None:
+            if algo is None or target_loss is None:
+                raise ValueError("pass R= explicitly, or algo= and "
+                                 "target_loss= for the sampling estimator")
+            R = estimate_epochs(workload, algo, ds_train, target_loss)
+        kw = {} if f is None else {"f": f}
+        return cls(s_bytes=float(ds_train.nbytes),
+                   m_bytes=float(update_vector_bytes(workload, params)),
+                   R=float(R),
+                   C=ds_train.n * workload.flops_per_row / worker_flops,
+                   **kw)
+
+
+#: backwards-compatible alias (pre-§11 name); new code should use
+#: CostInputs -- `Workload` now names the engine-facing protocol in
+#: repro.core.workloads
+Workload = CostInputs
 
 
 def faas_time(wl: Workload, w: int, *, channel: str = "s3") -> float:

@@ -38,6 +38,9 @@ LAMBDA_1GB_FLOPS = 1.7e9          # 0.6 vCPU
 VM_CPU_FLOPS = 5.5e9              # t2.medium (2 vCPU, one training proc)
 VM_GPU_FLOPS = {"g3s.xlarge": 150e9, "g4dn.xlarge": 300e9}  # NN models only
 
+# ---- accelerator pods (the third infrastructure, DESIGN.md §11) --------------
+TPU_CHIP_HOURLY = 1.2             # $ per v5e chip-hour, on-demand list price
+
 
 def lambda_cost(gb: float, seconds: float, invocations: int = 1) -> float:
     return gb * seconds * LAMBDA_GB_S + invocations * LAMBDA_REQUEST

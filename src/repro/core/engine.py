@@ -55,6 +55,8 @@ class RunResult:
     error: str = ""
     preemptions: int = 0          # involuntary restarts (spot / crash)
     max_staleness: int = 0        # max observed round lag at a model read
+    comm_bytes: float = 0.0       # per-worker update bytes moved on the
+                                  # metered (slow) substrate, whole run
 
     @property
     def final_loss(self) -> float:
@@ -69,6 +71,7 @@ class RunResult:
                 "converged": self.converged,
                 "preemptions": self.preemptions,
                 "max_staleness": self.max_staleness,
+                "comm_bytes": self.comm_bytes,
                 "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
                 "error": self.error}
 
@@ -192,6 +195,7 @@ class ChannelComm(CommBackend):
         merged, times = PATTERNS[self.pattern](self.chan, updates, tag)
         base = float(np.max(ctx.clock))      # BSP barrier
         ctx.meter_add("comm", float(np.mean(times)))
+        ctx.meter_bytes(float(updates[0].nbytes))
         ctx.clock[:] = base + times
         return merged
 
@@ -214,6 +218,7 @@ class PSComm(CommBackend):
         dt = self.ps.push_pull_round(updates[0].nbytes, ctx.w)
         ctx.clock += dt
         ctx.meter_add("comm", dt)
+        ctx.meter_bytes(float(updates[0].nbytes))
         return np.mean(updates, axis=0)
 
     def kvstore(self):
@@ -236,6 +241,7 @@ class MPIComm(CommBackend):
         t_comm = self.net.allreduce_time(updates[0].nbytes, ctx.w)
         ctx.clock[:] = float(np.max(ctx.clock)) + t_comm   # full barrier
         ctx.meter_add("comm", t_comm)
+        ctx.meter_bytes(float(updates[0].nbytes))
         return merged
 
     def kvstore(self):
@@ -278,6 +284,12 @@ class SimContext:
 
     def meter_add(self, key: str, dt: float):
         self.res.breakdown[key] = self.res.breakdown.get(key, 0.0) + dt
+
+    def meter_bytes(self, n: float):
+        """Count per-worker update bytes crossing the metered substrate
+        (the storage channel, the PS link, VM NICs, or the cross-pod DCN
+        -- never the free intra-pod ICI)."""
+        self.res.comm_bytes += n
 
     # ---- compute ----
     def tick_compute(self):

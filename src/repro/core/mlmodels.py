@@ -193,6 +193,11 @@ def model_bytes(params) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
 
 
+#: the paper's study stand-ins (the "model" axis values this module serves;
+#: real architectures are served by repro.core.workloads)
+STUDY_MODELS = ("lr", "svm", "kmeans", "mobilenet", "resnet50")
+
+
 def make_study_model(name: str, ds: Dataset, **kw) -> StudyModel:
     if name == "lr":
         return make_lr(ds)

@@ -38,6 +38,11 @@ IaaS specifics (distributed-PyTorch-style VM cluster):
   restart-from-checkpoint via S3, discounted hourly pricing,
 - heterogeneous fleets: per-worker instance types (``instance`` tuple);
   the collective runs at the slowest NIC.
+
+Pod specifics (accelerator pods, DESIGN.md §11): one engine worker = one
+pod slice; compute from the roofline model applied to the actual workload
+config; intra-pod collectives free (inside the MFU), cross-pod DCN as the
+metered comm substrate -- see :class:`PodPlatform`.
 """
 from __future__ import annotations
 
@@ -163,7 +168,14 @@ class FaaSRuntime(BasePlatform):
     def validate(self, mbytes: int) -> str:
         """Memory-headroom check: the model (plus the runtime's working
         copies -- gradients, the merge buffer, serialization) must fit in
-        one third of the *smallest* Lambda in the fleet."""
+        one third of the *smallest* Lambda in the fleet.  GPU fleets are
+        rejected outright: AWS Lambda has no GPU offering, so ``gpu=True``
+        can only mean a FleetSpec written for IaaS was reused unchanged."""
+        if self.fleet.gpu:
+            return ("FleetSpec.gpu=True is meaningless on FaaS: AWS Lambda "
+                    "has no GPUs (the paper's GPU-FaaS what-if lives in the "
+                    "analytical model, core/analytical.py Q2).  Drop gpu "
+                    "from the fleet or use platform='iaas'/'pod'")
         gb_min = float(np.min(self.fleet.gb_array()))
         headroom_bytes = gb_min * 1e9 / 3.0
         if mbytes > headroom_bytes:
@@ -322,6 +334,142 @@ class IaaSRuntime(BasePlatform):
     def finalize_cost(self, ctx) -> float:
         sim_time = float(np.max(ctx.clock))
         hourly = sum(pricing.EC2_HOURLY[i] for i in self.fleet.instances())
+        if self.failure.spot:
+            hourly *= self.failure.spot_discount
+        return (hourly / 3600.0 * sim_time
+                + ctx.ckpt_store.service_cost(sim_time))
+
+
+# --------------------------------------------------------------- pods -------
+
+#: pod-slice provisioning seconds by slice count (queue + topology bring-up;
+#: same interp_startup convention as the Table 6 columns)
+_T_POD = {1: 45.0, 4: 75.0, 16: 120.0, 64: 240.0}
+
+#: cross-pod data-center network: per-pod egress bandwidth and latency.
+#: Intra-pod ICI is NOT metered here -- collectives inside a pod ride the
+#: compute term (they are part of the MFU discount), which is exactly the
+#: slow-channel/fast-compute split the paper studies on FaaS.
+POD_DCN_BANDWIDTH = 25e9          # bytes/s per pod
+POD_DCN_LATENCY = 1e-3            # s per collective phase
+
+
+class PodPlatform(BasePlatform):
+    """Accelerator pods: the third infrastructure (DESIGN.md §11).
+
+    Each engine "worker" is one pod slice of ``chips_per_pod`` chips.  The
+    per-round compute time comes from the roofline model of
+    :mod:`repro.distributed.roofline` applied to the actual workload config:
+    the engine divides ``rows x workload.flops_per_row`` (``6 N D`` for a
+    real :class:`~repro.core.workloads.ArchWorkload`) by this platform's
+    FLOP/s hook, ``chips_per_pod * PEAK_FLOPS * mfu`` -- i.e. useful model
+    FLOPs over roofline-discounted hardware peak.  ``mfu`` defaults to 0.4
+    (a typical ``roofline_fraction`` for the train shapes measured by
+    ``bench_roofline``); pass the measured fraction of a
+    :class:`~repro.distributed.roofline.RooflineReport` to calibrate.
+
+    Intra-pod collectives are free (folded into ``mfu``); CROSS-pod traffic
+    is the metered substrate: a ring all-reduce over the DCN, reusing the
+    IaaS :class:`~repro.core.engine.MPIComm`/``VMNetwork`` machinery with
+    DCN constants.  This is the regime where ``sync="local:<H>"`` /
+    ``"diloco:<H>"`` pays off -- the pod-mesh mirror of the paper's MA-SGD
+    result, implemented for real meshes in
+    :mod:`repro.distributed.local_sgd`.
+
+    The composable specs are reused unchanged: ``FleetSpec.workers`` is the
+    pod count (stragglers model slow hosts/interference), ``FailureSpec``
+    with ``spot=True`` models preemptible capacity at the spot discount,
+    ``CommSpec.ckpt_channel`` is where checkpoints live.
+    """
+
+    #: constructor knobs an ExperimentSpec may pass via ``platform_args``
+    #: (everything else is spec-derived and would collide or be ignored)
+    SPEC_TUNABLES = frozenset({"chips_per_pod", "mfu", "dcn_bandwidth",
+                               "dcn_latency", "chip_hourly"})
+
+    def __init__(self, pods: int = 4, chips_per_pod: int = 4,
+                 mfu: float = 0.4, sync: object = "bsp", seed: int = 0,
+                 dcn_bandwidth: float = POD_DCN_BANDWIDTH,
+                 dcn_latency: float = POD_DCN_LATENCY,
+                 chip_hourly: float = pricing.TPU_CHIP_HOURLY,
+                 straggler: float = 1.0, preempt_at: tuple = (), *,
+                 fleet: FleetSpec | None = None,
+                 failure: FailureSpec | None = None,
+                 comm: CommSpec | None = None):
+        super().__init__(
+            fleet=fleet if fleet is not None else FleetSpec(
+                workers=pods, straggler=straggler),
+            failure=failure if failure is not None else FailureSpec(
+                inject=tuple(preempt_at)),
+            comm=comm if comm is not None else CommSpec(),
+            sync=sync, seed=seed)
+        if chips_per_pod < 1:
+            raise ValueError(f"chips_per_pod must be >= 1, got {chips_per_pod}")
+        if not 0.0 < mfu <= 1.0:
+            raise ValueError(f"mfu must be in (0, 1], got {mfu}")
+        self.chips_per_pod = int(chips_per_pod)
+        self.mfu = float(mfu)
+        self.dcn_bandwidth = float(dcn_bandwidth)
+        self.dcn_latency = float(dcn_latency)
+        self.chip_hourly = float(chip_hourly)
+
+    @property
+    def pods(self) -> int:
+        return self.workers
+
+    # ---- fleet shape --------------------------------------------------------
+    def worker_flops_array(self, model) -> np.ndarray:
+        from repro.distributed.roofline import PEAK_FLOPS
+        return np.full(self.workers,
+                       self.chips_per_pod * PEAK_FLOPS * self.mfu)
+
+    # ---- engine hooks -------------------------------------------------------
+    def system_name(self) -> str:
+        return "pod" + ("-spot" if self.failure.spot else "")
+
+    def validate(self, mbytes: int) -> str:
+        """Pods are accelerator slices already: a ``gpu=True`` fleet can
+        only mean an IaaS FleetSpec was reused unchanged, so reject it
+        (same policy as FaaS) rather than silently billing TPU hours for a
+        requested GPU.  (``instance``/``lambda_gb`` carry non-None defaults
+        and cannot be distinguished from intent; they are documented as
+        not consulted here.)"""
+        if self.fleet.gpu:
+            return ("FleetSpec.gpu=True is meaningless on the pod platform "
+                    "(a pod IS the accelerator -- size it with "
+                    "chips_per_pod/mfu).  GPU fleets are "
+                    "platform='iaas' with gpu instance types")
+        return ""
+
+    def make_comm(self):
+        return MPIComm(VMNetwork(self.dcn_bandwidth, self.dcn_latency))
+
+    def make_ckpt_store(self, comm):
+        return StorageChannel(self.comm.ckpt_channel)
+
+    def startup_time(self, comm) -> float:
+        return interp_startup(_T_POD, self.workers)
+
+    def load_time(self, part_bytes: int, data_local: bool = False) -> float:
+        if data_local:
+            return self.dcn_latency + part_bytes / self.dcn_bandwidth
+        return L_S3 + part_bytes / B_S3
+
+    def restart_time(self) -> float:
+        return interp_startup(_T_POD, 1)
+
+    SPOT_DEFAULT_RATE = IaaSRuntime.SPOT_DEFAULT_RATE
+
+    def failure_process(self) -> FailureProcess:
+        # preemptible (spot) pod capacity behaves like spot VMs: the rate
+        # only arms on spot fleets, scripted kills always fire
+        return self.failure.process(self.workers, self.seed,
+                                    armed=self.failure.spot,
+                                    default_rate=self.SPOT_DEFAULT_RATE)
+
+    def finalize_cost(self, ctx) -> float:
+        sim_time = float(np.max(ctx.clock))
+        hourly = self.workers * self.chips_per_pod * self.chip_hourly
         if self.failure.spot:
             hourly *= self.failure.spot_discount
         return (hourly / 3600.0 * sim_time

@@ -15,14 +15,30 @@ infrastructure (FaaS, IaaS, hybrid, spot, heterogeneous fleets):
   (paper §3.2.1 design axis): a worker that is more than ``s`` rounds ahead
   of the slowest active worker blocks until the laggard catches up.  ``s=0``
   degenerates to an event-driven barrier; ``s=inf`` is ASP.
+- :class:`LocalSGD` -- reduced communication (paper §4.2's MA-SGD insight,
+  DESIGN.md §11): workers apply their own updates locally for ``H`` rounds,
+  then merge the *accumulated* update once -- cross-fleet bytes per round
+  drop by exactly ``H``.  The outer merge is plain averaging (``outer="ma"``,
+  mathematically MA-SGD) or a DiLoCo Nesterov outer step
+  (``outer="diloco"``), optionally with int8 + error-feedback delta
+  compression (``compress=True``, wire bytes /4 on top of the ``H`` x).
+  ``LocalSGD(h=1)`` IS BSP (bit-identical histories, asserted in tests).
+
+The DiLoCo outer-step math (:class:`DiLoCoOuter`) and the int8
+error-feedback quantizer (:func:`quantize_int8_ef`) live here as the single
+implementation shared with the real multi-pod training stack
+(:mod:`repro.distributed.local_sgd` applies the same functions per
+parameter leaf inside ``shard_map``).
 
 Select a protocol with ``FaaSRuntime(sync="bsp"|"asp"|"ssp")`` (or
-``"ssp:<s>"`` for an explicit bound, or pass a protocol instance).
+``"ssp:<s>"``, ``"local:<H>"``, ``"diloco:<H>"``, with an optional
+``":c8"`` compression suffix -- or pass a protocol instance).
 """
 from __future__ import annotations
 
 import heapq
 import math
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -32,6 +48,55 @@ from repro.core.patterns import PATTERNS, allreduce, scatter_reduce  # noqa: F40
 BSP_NAME = "bsp"
 ASP_NAME = "asp"
 SSP_NAME = "ssp"
+LOCAL_NAME = "local"
+DILOCO_NAME = "diloco"
+COMPRESS_SUFFIX = "c8"
+
+
+# ------------------------------------------------ shared local-SGD math -----
+# One implementation for both halves of the codebase: the discrete-event
+# LocalSGD protocol below operates on flat numpy vectors; the real pod
+# training stack (distributed/local_sgd.py) applies the same functions per
+# parameter leaf inside shard_map.  jnp ops accept numpy inputs, so the
+# helpers are array-library agnostic at the call site.
+
+@dataclass(frozen=True)
+class DiLoCoOuter:
+    """DiLoCo's outer optimizer: Nesterov momentum on the average inner
+    delta (delta = outer_params - inner_params, so the step SUBTRACTS)."""
+    lr: float = 0.7
+    momentum: float = 0.9
+
+    def step(self, outer, mom, mean_delta):
+        """-> (new_outer_params, new_momentum); works on any array type."""
+        new_mom = self.momentum * mom + mean_delta
+        new_outer = outer - self.lr * (self.momentum * new_mom + mean_delta)
+        return new_outer, new_mom
+
+
+def quantize_int8_ef(xe):
+    """Symmetric per-channel (last-axis) int8 quantization with the error
+    returned for feedback: ``xe`` should already include the carried
+    residual.  -> ``(codes int8, scales f32, error f32)`` with
+    ``dequantize_int8(codes, scales) + error == xe``."""
+    import jax.numpy as jnp
+
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xe), axis=-1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
+    return q, scale, xe - q.astype(jnp.float32) * scale
+
+
+def dequantize_int8(q, scale):
+    import jax.numpy as jnp
+
+    return q.astype(jnp.float32) * scale
+
+
+def int8_wire_floats(n: int) -> int:
+    """f32 slots occupied by an int8-compressed n-element vector on the
+    wire: packed codes (4 per float) + one per-vector scale."""
+    return -(-n // 4) + 1
 
 
 class SyncProtocol:
@@ -129,6 +194,11 @@ class SSP(SyncProtocol):
             t += dt1 + c + dt2
             ctx.clock[i] = t
             ctx.meter_add("comm", dt1 + dt2)
+            # same accounting convention as the BSP backends: one update
+            # vector per per-worker round (BSP meters nbytes once per fleet
+            # round of w worker-rounds), so protocol comparisons see the
+            # protocol, not the bookkeeping
+            ctx.meter_bytes(float(g_flat.nbytes) / ctx.w)
             rounds[i] += 1
             done += 1
             ctx.res.rounds = done
@@ -159,23 +229,158 @@ class ASP(SSP):
         super().__init__(staleness=math.inf)
 
 
+class LocalSGD(SyncProtocol):
+    """Local SGD / DiLoCo: sync the fleet every ``h`` rounds, not every
+    round (the paper's MA-SGD-beats-GA-SGD regime, §4.2, generalized).
+
+    Between sync rounds every worker applies its OWN update locally
+    (``algo.apply_merged(st, own_update, 1)``) while the raw updates
+    accumulate; at a sync boundary the workers merge the accumulated
+    update vectors through the platform's comm backend and apply the mean
+    to the block's base parameters.  Applying the mean accumulated update
+    at the base is mathematically identical to averaging the workers'
+    parameters (MA-SGD) -- and for ``h=1`` the code path degenerates to
+    exactly one ``bsp_reduce`` + ``apply_merged`` per round, making the
+    loss history BIT-IDENTICAL to :class:`BSP` on every platform (asserted
+    in ``tests/test_localsgd.py``).
+
+    ``outer="diloco"`` instead treats the per-worker parameter displacement
+    as a pseudo-gradient and applies :class:`DiLoCoOuter` Nesterov momentum
+    to it.  ``compress=True`` ships int8 + error-feedback quantized vectors
+    (:func:`quantize_int8_ef`): metered wire bytes drop ~4x on top of the
+    ``h`` x; the quantization error is carried per worker into the next
+    sync round.
+
+    Requires an algorithm with additive updates (``ga_sgd``): MA/ADMM/EM
+    updates are not gradients and already amortize communication their own
+    way.
+    """
+    name = LOCAL_NAME
+
+    def __init__(self, h: int = 8, outer: str = "ma", compress: bool = False,
+                 outer_lr: float = 0.7, outer_momentum: float = 0.9):
+        if outer not in ("ma", "diloco"):
+            raise ValueError(f"outer must be 'ma' or 'diloco', got {outer!r}")
+        if int(h) < 1:
+            raise ValueError(f"sync period H must be >= 1, got {h}")
+        self.h = int(h)
+        self.outer = outer
+        self.compress = bool(compress)
+        self.outer_opt = DiLoCoOuter(outer_lr, outer_momentum)
+
+    def _merge(self, ctx: SimContext, vecs: list, residual, tag: str):
+        """Merge per-worker fp32 vectors through the metered backend;
+        with compression the wire payload is the packed int8 form (codes
+        + scale stand-in of identical byte count) and the mean is computed
+        from the dequantized vectors (error feedback updates ``residual``
+        in place)."""
+        if not self.compress:
+            return np.asarray(ctx.comm.bsp_reduce(ctx, vecs, tag),
+                              np.float32)
+        deq = []
+        for i, v in enumerate(vecs):
+            q, scale, err = quantize_int8_ef(v + residual[i])
+            residual[i] = np.asarray(err, np.float32)
+            deq.append(np.asarray(dequantize_int8(q, scale), np.float32))
+        wire = [np.zeros(int8_wire_floats(v.size), np.float32) for v in vecs]
+        ctx.comm.bsp_reduce(ctx, wire, tag + ".q8")   # meters time+bytes only
+        return np.mean(np.stack(deq), axis=0)
+
+    def run(self, ctx: SimContext) -> None:
+        from jax.flatten_util import ravel_pytree
+
+        algo, states, model = ctx.algo, ctx.states, ctx.model
+        if not getattr(algo, "additive_update", False):
+            raise ValueError(
+                f"LocalSGD needs an additive-update algorithm (ga_sgd); "
+                f"{algo.name!r} ships non-additive updates -- use bsp/asp/ssp")
+        total_rounds = ctx.max_epochs * algo.rounds_per_epoch(ctx.parts[0])
+        est = float(np.max(ctx.c_round * ctx.speeds)) + 5.0
+        diloco = self.outer == "diloco"
+
+        flat0, unravel = ravel_pytree(states[0].params)
+        base = np.asarray(flat0, np.float32)      # params at last sync
+        momentum = np.zeros_like(base) if diloco else None
+        residual = ([np.zeros_like(base) for _ in range(ctx.w)]
+                    if self.compress else None)
+        accs = [np.zeros_like(base) for _ in range(ctx.w)]
+
+        for rnd in range(total_rounds):
+            for i in range(ctx.w):
+                ctx.ensure_alive(i, est)
+            updates = [algo.local_update(model, st, rnd) for st in states]
+            ctx.tick_compute()
+            for i, u in enumerate(updates):
+                accs[i] += u
+            ctx.res.rounds += 1
+            if not ((rnd + 1) % self.h == 0 or rnd == total_rounds - 1):
+                for st, u in zip(states, updates):
+                    algo.apply_merged(model, st, u, 1)   # local-only round
+                continue
+
+            # ---- sync boundary: one metered merge for the whole block ----
+            if not diloco:
+                merged = self._merge(ctx, accs, residual, f"l{rnd}")
+                for st in states:
+                    st.params = unravel(base)
+                    algo.apply_merged(model, st, merged, ctx.w)
+            else:
+                deltas = []
+                for st, acc in zip(states, accs):
+                    st.params = unravel(base)
+                    algo.apply_merged(model, st, acc, 1)
+                    inner = np.asarray(ravel_pytree(st.params)[0], np.float32)
+                    deltas.append(base - inner)   # DiLoCo pseudo-gradient
+                mean_delta = self._merge(ctx, deltas, residual, f"l{rnd}")
+                base, momentum = self.outer_opt.step(base, momentum,
+                                                     mean_delta)
+                base = np.asarray(base, np.float32)
+                for st in states:
+                    st.params = unravel(base)
+            if not diloco:
+                base = np.asarray(ravel_pytree(states[0].params)[0],
+                                  np.float32)
+            for acc in accs:
+                acc[:] = 0.0
+            # h == 1 keeps BSP's exact eval cadence (eval_every respected --
+            # part of the bit-parity contract); h > 1 evaluates at EVERY
+            # averaging boundary (already 1/h of the rounds), so eval_every
+            # phase mismatches can never silently disable the target_loss
+            # convergence check
+            params = algo.eval_params(states[0])
+            done = (ctx.record_eval(rnd, total_rounds, params) if self.h == 1
+                    else ctx.record_eval_at(float(np.max(ctx.clock)), params))
+            if done:
+                break
+
+
 def sync_name(spec) -> str:
     """Canonical string form of a sync spec (``"bsp"``, ``"asp"``,
-    ``"ssp:<s>"``) -- the serialization used by
-    :class:`repro.experiments.ExperimentSpec`.  Inverse of
-    :func:`make_sync` up to protocol identity."""
+    ``"ssp:<s>"``, ``"local:<H>"``, ``"diloco:<H>[:c8]"``) -- the
+    serialization used by :class:`repro.experiments.ExperimentSpec`.
+    Inverse of :func:`make_sync` up to protocol identity."""
     proto = make_sync(spec)
     if isinstance(proto, ASP):
         return ASP_NAME
     if isinstance(proto, SSP):
         s = proto.staleness
         return SSP_NAME if s is None else f"{SSP_NAME}:{s:g}"
+    if isinstance(proto, LocalSGD):
+        if proto.outer == "diloco" and proto.outer_opt != DiLoCoOuter():
+            raise ValueError(
+                "custom DiLoCo outer_lr/outer_momentum are not expressible "
+                "as a sync string (specs serialize the defaults only); pass "
+                "the LocalSGD instance directly to the platform instead")
+        head = DILOCO_NAME if proto.outer == "diloco" else LOCAL_NAME
+        return (f"{head}:{proto.h}"
+                + (f":{COMPRESS_SUFFIX}" if proto.compress else ""))
     return proto.name
 
 
 def make_sync(spec) -> SyncProtocol:
-    """``"bsp"`` | ``"asp"`` | ``"ssp"`` | ``"ssp:<s>"`` | protocol class or
-    instance (``sync=SSP(5)`` and ``sync=BSP`` both work)."""
+    """``"bsp"`` | ``"asp"`` | ``"ssp[:<s>]"`` | ``"local[:<H>][:c8]"`` |
+    ``"diloco[:<H>][:c8]"`` | protocol class or instance (``sync=SSP(5)``
+    and ``sync=BSP`` both work)."""
     if isinstance(spec, SyncProtocol):
         return spec
     if isinstance(spec, type) and issubclass(spec, SyncProtocol):
@@ -188,4 +393,14 @@ def make_sync(spec) -> SyncProtocol:
     if name == SSP_NAME:
         s = float(arg) if arg else 3.0
         return SSP(int(s) if s.is_integer() else s)   # "ssp:inf" works too
+    if name in (LOCAL_NAME, DILOCO_NAME):
+        h_part, _, c_part = arg.partition(":")
+        if h_part == COMPRESS_SUFFIX and not c_part:    # "local:c8"
+            h_part, c_part = "", COMPRESS_SUFFIX
+        if c_part not in ("", COMPRESS_SUFFIX):
+            raise KeyError(f"unknown sync protocol suffix {c_part!r} in "
+                           f"{spec!r} (only {COMPRESS_SUFFIX!r})")
+        return LocalSGD(h=int(h_part) if h_part else 8,
+                        outer="diloco" if name == DILOCO_NAME else "ma",
+                        compress=c_part == COMPRESS_SUFFIX)
     raise KeyError(f"unknown sync protocol {spec!r}")

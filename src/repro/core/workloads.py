@@ -1,0 +1,208 @@
+"""The ``Workload`` layer: one model interface for the whole design space
+(DESIGN.md §11).
+
+The engine (:mod:`repro.core.engine`) and the algorithms
+(:mod:`repro.core.algorithms`) program against a small duck-typed model
+surface -- ``init``/``grad``/``eval_loss`` plus the ``convex`` and
+``flops_per_row`` metadata.  Historically only the paper's study stand-ins
+(:class:`repro.core.mlmodels.StudyModel`: LR/SVM/k-means/MLP) satisfied it;
+this module formalizes that surface as the runtime-checkable
+:class:`Workload` protocol and adds a second family of implementations:
+
+- :func:`make_workload` with a study-model name (``"lr"``, ``"svm"``,
+  ``"kmeans"``, ``"mobilenet"``, ``"resnet50"``) returns the exact
+  ``StudyModel`` the legacy path built -- byte-identical numerics
+  (``tests/test_experiments.py`` parity tests still hold);
+- with a ``repro.configs`` architecture name (``"smollm_360m"``,
+  ``"mamba2_370m"``, ... -- any of the ten assigned archs, underscores for
+  dashes/dots) it returns an :class:`ArchWorkload`: the REAL transformer/SSM
+  model from :mod:`repro.models`, a REAL jitted fwd/bwd train step, and a
+  deterministic token corpus (:class:`repro.data.tokens.TokenStream`).  The
+  same GA-SGD/LocalSGD algorithms then run genuine JAX numerics through the
+  discrete-event engine on any platform (FaaS, IaaS, pod).
+
+A ``Workload`` also exposes the two analytic quantities the §5.3 cost model
+needs -- ``flops_per_row`` (compute per data row) and the update-vector size
+(:func:`update_vector_bytes`) -- making this module the single source of
+truth that :mod:`repro.core.analytical` derives its ``(s, m, R, C)``
+constants from.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+from repro.core.mlmodels import STUDY_MODELS, make_study_model
+from repro.data.synthetic import Dataset, make_dataset, train_val_split
+
+#: architecture workloads train on the synthetic LM corpus, not on the
+#: paper's feature datasets
+TOKEN_DATASET = "tokens"
+
+#: default sequence length for arch workloads -- one data "row" is one
+#: training sequence of this many tokens
+DEFAULT_SEQ_LEN = 64
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """The engine-facing model surface (what ``simulate`` consumes).
+
+    Implementations: :class:`repro.core.mlmodels.StudyModel` (the paper's
+    stand-ins) and :class:`ArchWorkload` (real ``repro.configs``
+    architectures).  ``grad`` returns ``(loss, grads_pytree)``; k-means-style
+    workloads may expose ``local_stats``/``apply_stats`` instead of ``grad``.
+    """
+
+    name: str
+    convex: bool
+    flops_per_row: float
+
+    def init(self, key) -> Any: ...
+
+    def eval_loss(self, params, ds) -> float: ...
+
+
+def update_vector_bytes(workload: Workload, params=None) -> int:
+    """Bytes of the flat fp32 parameter-shaped update vector one worker
+    ships per round -- the ``m`` of the analytical model.  The algorithms
+    serialize updates as float32 regardless of the model dtype (see
+    ``core/algorithms.py``), so this is 4 bytes per parameter.  Matches
+    the engine's per-round ``comm_bytes`` for the SGD-family algorithms
+    (gradients / parameters / deltas); EM k-means ships sums+counts, ``k``
+    floats more than the centroid parameters."""
+    import jax
+    from jax.flatten_util import ravel_pytree
+
+    if params is None:
+        params = workload.init(jax.random.key(0))
+    return int(ravel_pytree(params)[0].size) * 4
+
+
+# ---------------------------------------------------------- arch workloads --
+
+def _arch_key(name: str) -> str | None:
+    """Map a spec-friendly name (``smollm_360m``) to an arch id
+    (``smollm-360m``); None if it is not an architecture name."""
+    from repro.configs import ARCH_IDS
+    norm = {a.replace("-", "_").replace(".", "_"): a for a in ARCH_IDS}
+    return norm.get(name)
+
+
+def is_arch_workload(name: str) -> bool:
+    return _arch_key(name) is not None
+
+
+class ArchWorkload:
+    """A real ``repro.configs`` architecture as an engine workload.
+
+    Wraps :func:`repro.models.build_model` (transformer / SSM / MoE /
+    hybrid) behind the :class:`Workload` protocol: ``grad`` is a single
+    jitted ``value_and_grad`` of the model's next-token loss, so every
+    simulated round runs genuine fwd/bwd numerics.  Batches arrive in the
+    engine's ``{"x", "y"}`` convention (int32 token / label matrices, one
+    row = one sequence) and are translated to the model's
+    ``{"tokens", "labels"}``.
+
+    ``reduced=True`` (default) uses the arch's CPU-sized ``reduced()``
+    variant so the whole design space sweeps on a laptop; ``reduced=False``
+    builds the full published config (same code path -- only the shapes
+    change).  ``flops_per_row`` is the standard ``6 * n_params * seq_len``
+    training-FLOPs estimate for whichever config was built, which is what
+    the platforms' FLOP/s hooks divide (Lambda vCPUs vs a TPU pod differ by
+    ~5 orders of magnitude, exactly the regime the paper's §6 conclusions
+    are about).
+    """
+
+    convex = False
+
+    def __init__(self, name: str, *, reduced: bool = True,
+                 seq_len: int = DEFAULT_SEQ_LEN):
+        import jax
+        from repro.configs import get_arch, get_reduced
+        from repro.models import build_model
+
+        arch_id = _arch_key(name)
+        if arch_id is None:
+            raise KeyError(f"unknown architecture workload {name!r}")
+        self.name = name
+        self.seq_len = int(seq_len)
+        self.arch = get_reduced(arch_id) if reduced else get_arch(arch_id)
+        if self.arch.model.is_encoder or self.arch.model.family == "vlm":
+            raise ValueError(
+                f"arch workload {name!r}: encoder/VLM batches need "
+                "frames/images; only LM-style archs run through the engine")
+        self._model = build_model(self.arch)
+        self.n_params = self._model.param_count()
+        self.flops_per_row = 6.0 * self.n_params * self.seq_len
+        scan = self.arch.train.scan_layers
+
+        def loss_fn(params, batch):
+            total, _metrics = self._model.loss(
+                params, {"tokens": batch["x"], "labels": batch["y"]},
+                remat="none", scan_layers=scan)
+            return total
+
+        self.grad = jax.jit(jax.value_and_grad(loss_fn))
+        self._loss = jax.jit(loss_fn)
+
+    def init(self, key):
+        return self._model.init(key)
+
+    def eval_loss(self, params, ds: Dataset, max_rows: int = 512) -> float:
+        import jax.numpy as jnp
+
+        n = min(ds.n, max_rows)
+        b = {"x": jnp.asarray(ds.x[:n]), "y": jnp.asarray(ds.y[:n])}
+        return float(self._loss(params, b))
+
+    def make_data(self, rows: int, seed: int = 0) -> Dataset:
+        """Deterministic LM corpus: ``rows`` sequences of ``seq_len`` tokens
+        (x) with next-token labels (y), from the Zipf+bigram TokenStream."""
+        from repro.data.tokens import TokenStream
+
+        b = TokenStream(self.arch.model.vocab_size, seed).batch(
+            rows, self.seq_len)
+        return Dataset(TOKEN_DATASET, b["tokens"], b["labels"],
+                       n_classes=self.arch.model.vocab_size)
+
+
+# ---------------------------------------------------------------- factory ---
+
+def make_workload(name: str, *, dataset: str = "higgs", rows: int = 30_000,
+                  data_seed: int = 0, val_frac: float = 0.1,
+                  **model_args) -> tuple[Workload, Dataset, Dataset]:
+    """Build ``(workload, ds_train, ds_val)`` for any point of the model
+    axis -- study stand-in or real architecture.
+
+    Study names reproduce the legacy construction order exactly
+    (dataset -> split -> model-on-train), so existing specs keep their
+    byte-identical histories and cache hashes' results.  Architecture names
+    require ``dataset="tokens"`` (their corpus is generated from the arch's
+    own vocab/sequence shape) and accept ``reduced``/``seq_len`` in
+    ``model_args``.
+    """
+    if is_arch_workload(name):
+        if dataset != TOKEN_DATASET:
+            raise ValueError(
+                f"architecture workload {name!r} trains on the synthetic "
+                f"LM corpus; set dataset={TOKEN_DATASET!r} "
+                f"(got {dataset!r})")
+        wl = ArchWorkload(name, **model_args)
+        ds = wl.make_data(rows, seed=data_seed)
+        tr, va = train_val_split(ds, val_frac=val_frac)
+        return wl, tr, va
+    ds = make_dataset(dataset, rows=rows, seed=data_seed)
+    tr, va = train_val_split(ds, val_frac=val_frac)
+    return make_study_model(name, tr, **model_args), tr, va
+
+
+def list_workloads() -> list[str]:
+    """Every valid ``ExperimentSpec.model`` value (study stand-ins + the
+    LM-style architectures; encoder/VLM archs need non-token inputs and are
+    excluded)."""
+    from repro.configs import ARCH_IDS, get_arch
+
+    archs = sorted(a.replace("-", "_").replace(".", "_") for a in ARCH_IDS
+                   if get_arch(a).model.family not in ("encoder", "vlm")
+                   and not get_arch(a).model.is_encoder)
+    return list(STUDY_MODELS) + archs

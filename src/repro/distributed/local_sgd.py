@@ -30,10 +30,28 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.core.sync import DiLoCoOuter, dequantize_int8, quantize_int8_ef
 from repro.distributed.sharding import ShardingCtx, use_sharding
 from repro.distributed.step import batch_shardings, resolve_shardings, _is_axes
 from repro.models import build_model
 from repro.optim import make_optimizer
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma=False):
+    """shard_map across jax API generations: ``jax.shard_map`` (>= 0.5,
+    ``axis_names`` = manual axes) when available, else the legacy
+    ``jax.experimental.shard_map`` (``auto`` = complement, ``check_rep``).
+    NOTE: on the legacy API, *partial*-manual mode (axis_names a strict
+    subset) is known to abort in the XLA SPMD partitioner for this model --
+    tests gate on ``hasattr(jax, "shard_map")`` for those paths."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, auto=auto)
 
 
 def _inner_ctx(arch: ArchConfig, mesh: Mesh) -> ShardingCtx:
@@ -125,7 +143,7 @@ def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
         return add_pod(new_p), add_pod(new_s), metrics
 
     pod_leading = lambda t: jax.tree.map(lambda _: P("pod"), t)  # noqa: E731
-    inner_sm = jax.shard_map(
+    inner_sm = _shard_map(
         inner_body, mesh=mesh,
         in_specs=(pod_leading(params_st_abs), pod_leading(opt_st_abs),
                   jax.tree.map(lambda _: P(("pod",)), batch_specs)),
@@ -174,17 +192,15 @@ def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
         full_in = P(*(("pod",) + tuple(pspec)))
 
         def body(xl, rl):
-            xe = xl[0].astype(jnp.float32) + rl[0]
-            scale = jnp.max(jnp.abs(xe), axis=-1, keepdims=True) / 127.0
-            scale = jnp.maximum(scale, 1e-12)
-            q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
+            # one quantizer implementation for the whole repo: the same
+            # core.sync helpers drive the discrete-event LocalSGD protocol
+            q, scale, new_res = quantize_int8_ef(
+                xl[0].astype(jnp.float32) + rl[0])
             qs = jax.lax.all_gather(q, "pod")          # int8 over the wire
             ss = jax.lax.all_gather(scale, "pod")
-            deq = qs.astype(jnp.float32) * ss
-            new_res = xe - q.astype(jnp.float32) * scale
-            return jnp.mean(deq, axis=0), new_res[None]
+            return jnp.mean(dequantize_int8(qs, ss), axis=0), new_res[None]
 
-        mean, new_res = jax.shard_map(
+        mean, new_res = _shard_map(
             body, mesh=mesh, in_specs=(full_in, full_in),
             out_specs=(P(*pspec), full_in),
             axis_names=set(mesh.axis_names), check_vma=False)(x, res)
@@ -217,8 +233,9 @@ def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
                     tdef, [o[1] for o in outs])
             return new_p, new_state
 
-        # DiLoCo: delta = outer - mean(inner); Nesterov on outer params
-        mu, lr = tc.outer_momentum, tc.outer_lr
+        # DiLoCo: delta = outer - mean(inner); Nesterov on outer params --
+        # the same DiLoCoOuter math the simulator's LocalSGD protocol uses
+        outer_opt = DiLoCoOuter(tc.outer_lr, tc.outer_momentum)
         res_st = state.get("residual")
         leaves, tdef = jax.tree.flatten(params_st)
         o_leaves = tdef.flatten_up_to(state["outer_params"])
@@ -230,8 +247,7 @@ def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
                                   leaf_pspecs):
             delta_pods = o[None] - x.astype(jnp.float32)     # (P, ...)
             mean_delta, nr = mean_pods(delta_pods, r, sp)
-            nm = mu * m + mean_delta
-            no = o - lr * (mu * nm + mean_delta)             # Nesterov
+            no, nm = outer_opt.step(o, m, mean_delta)
             new_p.append(jnp.broadcast_to(no.astype(x.dtype)[None], x.shape))
             new_o.append(no)
             new_m.append(nm)

@@ -23,10 +23,18 @@ import json
 from dataclasses import asdict, dataclass, field, fields, replace
 
 from repro.core.platform import CommSpec, FailureSpec, FleetSpec
-from repro.core.runtimes import LIFETIME, FaaSRuntime, IaaSRuntime
+from repro.core.runtimes import (
+    LIFETIME, FaaSRuntime, IaaSRuntime, PodPlatform,
+)
 from repro.core.sync import sync_name
 
-PLATFORMS = ("faas", "iaas")
+PLATFORMS = ("faas", "iaas", "pod")
+
+#: salt for :meth:`ExperimentSpec.spec_hash`.  Bump whenever a spec field's
+#: DEFAULT VALUE changes (defaults are elided from the hash, so an old
+#: record would otherwise alias the new semantics); adding fields needs no
+#: bump.
+HASH_SCHEMA = "h2"
 
 
 @dataclass(frozen=True)
@@ -34,12 +42,15 @@ class ExperimentSpec:
     """One fully-determined experiment.  Every field is JSON-serializable;
     ``name`` is a human label and does NOT enter the spec hash."""
     name: str = ""
-    platform: str = "faas"                 # faas | iaas
+    platform: str = "faas"                 # faas | iaas | pod
     fleet: FleetSpec = field(default_factory=FleetSpec)
     failure: FailureSpec = field(default_factory=FailureSpec)
     comm: CommSpec = field(default_factory=CommSpec)
     sync: str = "bsp"                      # bsp | asp | ssp:<s>
-    model: str = "lr"                      # make_study_model name
+                                           #   | local:<H>[:c8] | diloco:<H>[:c8]
+    model: str = "lr"                      # any core.workloads name: a study
+                                           # stand-in (lr/svm/...) or a real
+                                           # arch (smollm_360m, mamba2_370m...)
     model_args: dict = field(default_factory=dict)
     algorithm: str = "ga_sgd"              # make_algorithm name
     algo_args: dict = field(default_factory=dict)
@@ -51,13 +62,41 @@ class ExperimentSpec:
     max_epochs: int = 3
     eval_every: int = 1
     target_loss: float | None = None
-    data_local: bool = False               # IaaS: load from peer VMs, not S3
+    data_local: bool = False               # IaaS/pod: peer-to-peer data load
     lifetime: float | None = None          # FaaS: worker lease override (s)
+    platform_args: dict = field(default_factory=dict)
+                                           # pod: chips_per_pod, mfu,
+                                           # dcn_bandwidth, chip_hourly, ...
 
     def __post_init__(self):
         if self.platform not in PLATFORMS:
             raise ValueError(f"platform must be one of {PLATFORMS}, "
                              f"got {self.platform!r}")
+        if self.platform_args and self.platform != "pod":
+            raise ValueError(
+                f"platform_args only apply to platform='pod' "
+                f"(got {sorted(self.platform_args)} on {self.platform!r}); "
+                f"faas/iaas knobs live in fleet/failure/comm/lifetime")
+        bad = set(self.platform_args) - PodPlatform.SPEC_TUNABLES
+        if bad:
+            raise KeyError(
+                f"unknown platform_args {sorted(bad)}; tunable via spec: "
+                f"{sorted(PodPlatform.SPEC_TUNABLES)} (worker/pod count and "
+                f"failure scenario come from fleet/failure)")
+        # fail the workload/dataset pairing eagerly (a sweep should reject
+        # at expansion, not crash mid-batch inside build_workload)
+        from repro.core.workloads import TOKEN_DATASET, is_arch_workload
+        if is_arch_workload(self.model):
+            if self.dataset != TOKEN_DATASET:
+                raise ValueError(
+                    f"architecture workload {self.model!r} trains on the "
+                    f"synthetic LM corpus; set dataset={TOKEN_DATASET!r} "
+                    f"(got {self.dataset!r})")
+        elif self.dataset == TOKEN_DATASET:
+            raise ValueError(
+                f"dataset={TOKEN_DATASET!r} is the architecture workloads' "
+                f"corpus; model {self.model!r} is a study stand-in -- pick "
+                f"one of the feature datasets (higgs, rcv1, ...)")
         object.__setattr__(self, "sync", sync_name(self.sync))
         for f in ("fleet", "failure", "comm"):
             v = getattr(self, f)
@@ -88,12 +127,22 @@ class ExperimentSpec:
         return cls.from_dict(json.loads(s))
 
     def spec_hash(self) -> str:
-        """Stable content hash (cache key).  ``name`` is excluded: renaming
-        a trial must still hit the cache."""
+        """Stable content hash (cache key).  ``name`` is excluded (renaming
+        a trial must still hit the cache), and so is every field still at
+        its default value -- so ADDING a spec field in a future schema
+        revision does not orphan the whole on-disk record cache (only specs
+        that actually use the new field hash differently).  The flip side:
+        because defaults are elided, CHANGING a field's default changes
+        what an elided field means -- whoever changes a default MUST bump
+        ``HASH_SCHEMA`` (and may re-key ``experiments/runs/``), otherwise
+        old records alias the new semantics."""
         d = self.to_dict()
         d.pop("name")
-        canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
-        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+        defaults = _spec_defaults()
+        canon = {k: v for k, v in d.items() if v != defaults[k]}
+        payload = HASH_SCHEMA + json.dumps(canon, sort_keys=True,
+                                           separators=(",", ":"))
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
     def with_(self, **overrides) -> "ExperimentSpec":
         """`replace` that also reaches into nested specs via dotted keys:
@@ -111,21 +160,39 @@ class ExperimentSpec:
                 fleet=self.fleet, failure=self.failure, comm=self.comm,
                 sync=self.sync, seed=self.seed,
                 lifetime=LIFETIME if self.lifetime is None else self.lifetime)
+        if self.platform == "pod":
+            return PodPlatform(fleet=self.fleet, failure=self.failure,
+                               comm=self.comm, sync=self.sync,
+                               seed=self.seed, **self.platform_args)
         return IaaSRuntime(fleet=self.fleet, failure=self.failure,
                            comm=self.comm, sync=self.sync, seed=self.seed)
 
     def build_workload(self):
-        """(model, algo, ds_train, ds_val) exactly as the legacy scripts
-        build them -- deterministic in (dataset, rows, data_seed, val_frac,
-        model, algorithm)."""
+        """(workload, algo, ds_train, ds_val) via the unified
+        :func:`repro.core.workloads.make_workload` -- study stand-ins keep
+        the exact legacy construction (byte-identical histories),
+        architecture names build the real JAX model.  Deterministic in
+        (dataset, rows, data_seed, val_frac, model, algorithm)."""
         from repro.core.algorithms import make_algorithm
-        from repro.core.mlmodels import make_study_model
-        from repro.data.synthetic import make_dataset, train_val_split
-        ds = make_dataset(self.dataset, rows=self.rows, seed=self.data_seed)
-        tr, va = train_val_split(ds, val_frac=self.val_frac)
-        model = make_study_model(self.model, tr, **self.model_args)
+        from repro.core.workloads import make_workload
+        wl, tr, va = make_workload(
+            self.model, dataset=self.dataset, rows=self.rows,
+            data_seed=self.data_seed, val_frac=self.val_frac,
+            **self.model_args)
         algo = make_algorithm(self.algorithm, **self.algo_args)
-        return model, algo, tr, va
+        return wl, algo, tr, va
+
+
+_DEFAULTS: dict | None = None
+
+
+def _spec_defaults() -> dict:
+    """asdict of a default ExperimentSpec (computed once) -- the reference
+    ``spec_hash`` diffs against."""
+    global _DEFAULTS
+    if _DEFAULTS is None:
+        _DEFAULTS = ExperimentSpec().to_dict()
+    return _DEFAULTS
 
 
 def _apply_override(spec, path: str, value):

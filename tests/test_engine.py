@@ -203,8 +203,10 @@ def test_per_worker_config_length_mismatch_raises(higgs):
 
 def test_runtimes_satisfy_platform_protocol():
     from repro.core.platform import CommSpec, FailureSpec, FleetSpec, Platform
+    from repro.core.runtimes import PodPlatform
     faas, iaas = FaaSRuntime(workers=2), IaaSRuntime(workers=2)
     assert isinstance(faas, Platform) and isinstance(iaas, Platform)
+    assert isinstance(PodPlatform(pods=2), Platform)
     # spec objects compose directly (and win over the flat keywords)
     rt = FaaSRuntime(workers=99, fleet=FleetSpec(workers=3, straggler=2.0),
                      failure=FailureSpec(inject=((0, 5.0),)),
@@ -243,6 +245,28 @@ def test_faas_validate_memory_headroom_boundary():
     hetero = FaaSRuntime(workers=3, lambda_gb=(3.0, 3.0, 1.0))
     assert "exceeds" in hetero.validate(headroom + 1)
     assert FaaSRuntime(workers=3, lambda_gb=3.0).validate(headroom + 1) == ""
+
+
+def test_faas_rejects_gpu_fleets(higgs):
+    """Satellite: FleetSpec.gpu used to be silently ignored on FaaS;
+    validate() now rejects it with an actionable message (Lambda has no
+    GPUs -- the GPU-FaaS what-if is analytical-only)."""
+    from repro.core.mlmodels import make_study_model
+    from repro.core.platform import FleetSpec
+    rt = FaaSRuntime(fleet=FleetSpec(workers=2, gpu=True))
+    msg = rt.validate(1_000)
+    assert "no GPU" in msg and "analytical" in msg
+    tr, va = higgs
+    res = rt.train(make_study_model("lr", tr), _ga(), tr, va, max_epochs=1)
+    assert res.error == msg and not res.history
+    # the same fleet composes fine with platforms that do have accelerators
+    assert IaaSRuntime(fleet=FleetSpec(workers=2, gpu=True)).validate(0) == ""
+    # pods are accelerators already: gpu=True there is the same reuse
+    # mistake and is rejected the same way
+    from repro.core.runtimes import PodPlatform
+    assert "gpu" in PodPlatform(fleet=FleetSpec(workers=2, gpu=True)
+                                ).validate(0)
+    assert PodPlatform(pods=2).validate(10**9) == ""
 
 
 # -------------------------------------------------------------- metering ----

@@ -62,6 +62,24 @@ def test_spec_rejects_unknown_fields_and_platforms():
         _spec().with_(**{"fleet.wrokers": 3})
 
 
+def test_spec_hash_survives_schema_growth():
+    """The cache key diffs against the field defaults, so adding a spec
+    field in a later PR must not orphan the record cache: an all-default
+    spec canonicalizes to the empty dict, and only specs that USE a new
+    field hash differently."""
+    import hashlib
+    from repro.experiments.spec import HASH_SCHEMA
+    assert ExperimentSpec().spec_hash() == \
+        hashlib.sha256(f"{HASH_SCHEMA}{{}}".encode()).hexdigest()[:16]
+    d = ExperimentSpec(name="x", platform="iaas").to_dict()
+    d.pop("platform_args")       # a record written before the field existed
+    assert ExperimentSpec.from_dict(d).spec_hash() == \
+        ExperimentSpec(name="x", platform="iaas").spec_hash()
+    pod = ExperimentSpec(platform="pod")
+    assert pod.spec_hash() != \
+        pod.with_(platform_args={"mfu": 0.5}).spec_hash()
+
+
 def test_sync_spec_canonicalizes():
     assert _spec(sync="ssp").sync == "ssp:3"
     assert _spec(sync="asp").sync == "asp"
@@ -171,7 +189,8 @@ def test_sweep_duplicate_points_run_once(tmp_path):
 
 def test_presets_build_valid_specs():
     assert set(PRESETS) == {"fig10_breakdown", "fig11_end2end", "fig8_sync",
-                            "spot_vs_ondemand", "hetero_fleet"}
+                            "spot_vs_ondemand", "hetero_fleet",
+                            "faas_vs_pod", "pod_local_sgd"}
     for name, preset in PRESETS.items():
         specs = preset.build(True)
         assert specs, name
@@ -179,6 +198,46 @@ def test_presets_build_valid_specs():
             assert ExperimentSpec.from_json(s.to_json()) == s
     with pytest.raises(KeyError):
         get_preset("fig99")
+
+
+# ------------------------------------------------------------ pod platform --
+
+def test_pod_spec_round_trips_and_builds():
+    from repro.core.runtimes import PodPlatform
+    spec = ExperimentSpec(platform="pod", sync="local:8",
+                          model="smollm_360m", dataset="tokens",
+                          platform_args={"chips_per_pod": 8, "mfu": 0.5},
+                          fleet=FleetSpec(workers=2))
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    rt = spec.build_runtime()
+    assert isinstance(rt, PodPlatform)
+    assert rt.pods == 2 and rt.chips_per_pod == 8 and rt.mfu == 0.5
+    assert spec.sync == "local:8"
+    assert spec.spec_hash() != spec.with_(
+        **{"platform_args": {"chips_per_pod": 4}}).spec_hash()
+
+
+def test_platform_args_rejected_off_pod():
+    with pytest.raises(ValueError, match="platform_args"):
+        ExperimentSpec(platform="faas", platform_args={"mfu": 0.5})
+
+
+def test_platform_args_unknown_keys_rejected_at_spec_time():
+    # keys that would collide with spec-derived constructor args (or be
+    # silently ignored, like pods=) must fail at construction, not build
+    for bad in ({"pods": 16}, {"seed": 1}, {"sync": "bsp"}, {"mfuu": 0.5}):
+        with pytest.raises(KeyError, match="platform_args"):
+            ExperimentSpec(platform="pod", platform_args=bad)
+    ExperimentSpec(platform="pod", platform_args={"mfu": 0.5})  # fine
+
+
+def test_workload_dataset_pairing_rejected_at_spec_time():
+    # sweeps must reject bad points at expansion, not crash mid-batch
+    with pytest.raises(ValueError, match="tokens"):
+        ExperimentSpec(model="smollm_360m")            # dataset left "higgs"
+    with pytest.raises(ValueError, match="stand-in"):
+        ExperimentSpec(model="lr", dataset="tokens")
+    ExperimentSpec(model="smollm_360m", dataset="tokens")  # fine
 
 
 # -------------------------------------------------------------------- CLI ---

@@ -102,3 +102,28 @@ def test_faas_analytical_dominates_startup_for_small_work(w):
     from repro.core.analytical import TABLE6
     from repro.core.runtimes import interp_startup
     assert interp_startup(TABLE6["t_F"], w) < interp_startup(TABLE6["t_I"], w)
+
+
+@given(st.integers(1, 7), st.integers(2, 5), st.booleans(), st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_local_sgd_bytes_per_inner_step_shrink_by_h(h, w, compress, epochs):
+    """Protocol-parity property (DESIGN.md §11): for ANY (H, fleet size,
+    epochs), LocalSGD meters exactly one merge of the update vector per H
+    inner rounds (int8 deltas shrink the wire payload to ~1/4 more)."""
+    from repro.core.algorithms import make_algorithm
+    from repro.core.mlmodels import make_study_model
+    from repro.core.runtimes import PodPlatform
+    from repro.core.sync import int8_wire_floats
+    from repro.data.synthetic import make_dataset, train_val_split
+
+    tr, va = train_val_split(make_dataset("higgs", rows=900))
+    model = make_study_model("lr", tr)
+    algo = make_algorithm("ga_sgd", lr=0.2, batch_size=256)
+    sync = f"local:{h}" + (":c8" if compress else "")
+    res = PodPlatform(pods=w, sync=sync).train(model, algo, tr, va,
+                                               max_epochs=epochs)
+    assert not res.error
+    syncs = sum(1 for rnd in range(res.rounds)
+                if (rnd + 1) % h == 0 or rnd == res.rounds - 1)
+    wire = (int8_wire_floats(tr.d) * 4) if compress else tr.d * 4
+    assert res.comm_bytes == syncs * wire

@@ -1,0 +1,168 @@
+"""The Workload layer (DESIGN.md §11): study stand-ins and real
+architectures behind one protocol, real JAX numerics through the engine on
+all three infrastructures, and the analytical model derived from the same
+source of truth."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.algorithms import make_algorithm
+from repro.core.analytical import CostInputs, faas_time, iaas_time
+from repro.core.analytical import Workload as AnalyticAlias
+from repro.core.mlmodels import STUDY_MODELS, StudyModel, make_study_model
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime, PodPlatform
+from repro.core.workloads import (
+    ArchWorkload, Workload, is_arch_workload, list_workloads, make_workload,
+    update_vector_bytes,
+)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    wl, tr, va = make_workload("smollm_360m", dataset="tokens", rows=128,
+                               data_seed=0)
+    return wl, tr, va
+
+
+def _ga(**kw):
+    return make_algorithm("ga_sgd", **{"lr": 0.05, "batch_size": 8, **kw})
+
+
+# ---------------------------------------------------------------- protocol --
+
+def test_both_families_satisfy_the_protocol(smollm):
+    from repro.data.synthetic import make_dataset, train_val_split
+    tr, _ = train_val_split(make_dataset("higgs", rows=2_000))
+    assert isinstance(make_study_model("lr", tr), Workload)
+    wl, _, _ = smollm
+    assert isinstance(wl, Workload)
+    assert wl.convex is False and wl.flops_per_row > 0
+
+
+def test_registry_names_and_guards():
+    names = list_workloads()
+    for s in STUDY_MODELS:
+        assert s in names
+    assert "smollm_360m" in names and "mamba2_370m" in names
+    # encoder / VLM archs need non-token inputs: excluded and rejected
+    assert "hubert_xlarge" not in names
+    assert "llama_3_2_vision_90b" not in names
+    assert is_arch_workload("smollm_360m")
+    assert not is_arch_workload("lr")
+    with pytest.raises(ValueError):
+        ArchWorkload("hubert_xlarge")
+    with pytest.raises(KeyError):
+        ArchWorkload("gpt17_800t")
+    with pytest.raises(ValueError, match="tokens"):
+        make_workload("smollm_360m", dataset="higgs")   # arch needs tokens
+    with pytest.raises(KeyError):
+        make_workload("not_a_model")
+
+
+def test_study_path_is_the_legacy_construction():
+    """make_workload with a study name must build the exact objects the
+    legacy path built (dataset -> split -> model-on-train)."""
+    from repro.data.synthetic import make_dataset, train_val_split
+    wl, tr, va = make_workload("lr", dataset="higgs", rows=2_000,
+                               data_seed=3, val_frac=0.2)
+    ds = make_dataset("higgs", rows=2_000, seed=3)
+    tr2, va2 = train_val_split(ds, val_frac=0.2)
+    assert isinstance(wl, StudyModel)
+    np.testing.assert_array_equal(tr.x, tr2.x)
+    np.testing.assert_array_equal(va.y, va2.y)
+    p = wl.init(jax.random.key(0))
+    assert wl.eval_loss(p, va) == make_study_model("lr", tr2).eval_loss(p, va2)
+
+
+# ---------------------------------------------------------- real numerics ---
+
+def test_arch_workload_runs_genuine_fwd_bwd(smollm):
+    wl, tr, va = smollm
+    assert tr.x.dtype == np.int32 and tr.x.shape[1] == wl.seq_len
+    params = wl.init(jax.random.key(0))
+    b = {"x": tr.x[:8], "y": tr.y[:8]}
+    loss, grads = wl.grad(params, b)
+    gnorm = sum(float(jax.numpy.sum(jax.numpy.abs(g.astype(jax.numpy.float32))))
+                for g in jax.tree.leaves(grads))
+    assert float(loss) > 0 and gnorm > 0
+    assert wl.flops_per_row == 6.0 * wl.n_params * wl.seq_len
+    assert update_vector_bytes(wl, params) == wl.n_params * 4
+
+
+def test_real_workload_identical_numerics_on_all_three_platforms(smollm):
+    """The acceptance run, tier-1 sized: a real smollm-360m-config workload
+    through the engine on FaaS, IaaS and pods -- the loss history is
+    platform-independent (statistical vs system efficiency split), and
+    LocalSGD(H=4) on pods cuts metered comm seconds >= 4x vs BSP while
+    tracking the H=1 history at the averaging boundaries."""
+    wl, tr, va = smollm
+    algo = _ga()
+    runs = {
+        "faas": FaaSRuntime(workers=4, sync="bsp", channel="memcached"),
+        "iaas": IaaSRuntime(workers=4, sync="bsp"),
+        "pod": PodPlatform(pods=4, sync="bsp"),
+    }
+    hist = {}
+    for name, plat in runs.items():
+        res = plat.train(wl, algo, tr, va, max_epochs=2)
+        assert not res.error, (name, res.error)
+        hist[name] = [l for _, l in res.history]
+    assert hist["faas"] == hist["iaas"] == hist["pod"]
+
+    r1 = PodPlatform(pods=4, sync="local:1").train(wl, algo, tr, va,
+                                                   max_epochs=2)
+    r4 = PodPlatform(pods=4, sync="local:4").train(wl, algo, tr, va,
+                                                   max_epochs=2)
+    assert r1.breakdown["comm"] / r4.breakdown["comm"] >= 4.0 * (1 - 1e-9)
+    assert r4.comm_bytes * 4 == r1.comm_bytes
+    losses1 = [l for _, l in r1.history]
+    # H=4 evals only at averaging boundaries (rounds 4, 8, ... of H=1)
+    boundaries = [(i + 1) * 4 - 1 for i in range(len(r4.history))]
+    for (t4, l4), rnd in zip(r4.history, boundaries):
+        assert abs(l4 - losses1[rnd]) / losses1[rnd] < 0.05
+
+
+# -------------------------------------------------- analytical derivation ---
+
+def test_workload_name_collision_resolved():
+    assert AnalyticAlias is CostInputs
+    assert not isinstance(CostInputs(1.0, 1.0, 1.0, 1.0), Workload)
+
+
+def test_cost_inputs_derive_from_workload(smollm):
+    from repro.data.synthetic import make_dataset, train_val_split
+    tr, _ = train_val_split(make_dataset("higgs", rows=2_000))
+    lr = make_study_model("lr", tr)
+    ci = CostInputs.from_workload(lr, tr, R=5)
+    assert ci.s_bytes == tr.nbytes
+    assert ci.m_bytes == update_vector_bytes(lr) == tr.d * 4
+    assert ci.R == 5 and ci.C > 0
+    wl, wtr, _ = smollm
+    ci2 = CostInputs.from_workload(wl, wtr, R=2)
+    assert ci2.m_bytes == wl.n_params * 4
+    assert ci2.C == wtr.n * wl.flops_per_row / 5.5e9
+    with pytest.raises(ValueError):
+        CostInputs.from_workload(lr, tr)           # no R, no estimator args
+
+
+def test_analytic_crossover_ordering_agrees_with_simulation():
+    """Satellite cross-check: for the same workload constants, the analytic
+    FaaS/IaaS comparison must order the platforms the same way a simulated
+    sweep does at each worker count."""
+    from repro.experiments import ExperimentSpec, run_experiment
+    base = ExperimentSpec(model="lr", dataset="higgs", rows=3_000,
+                          algorithm="ga_sgd",
+                          algo_args={"lr": 0.2, "batch_size": 512},
+                          max_epochs=2)
+    wl, tr, _ = make_workload("lr", dataset="higgs", rows=3_000)
+    ci = CostInputs.from_workload(wl, tr, R=base.max_epochs)
+    for w in (2, 8):
+        sim = {}
+        for plat in ("faas", "iaas"):
+            rec = run_experiment(base.with_(platform=plat,
+                                            **{"fleet.workers": w}))
+            assert not rec.result["error"]
+            sim[plat] = rec.result["sim_time_s"]
+        analytic_faas_wins = faas_time(ci, w) < iaas_time(ci, w)
+        sim_faas_wins = sim["faas"] < sim["iaas"]
+        assert analytic_faas_wins == sim_faas_wins, (w, ci, sim)
