@@ -1,0 +1,75 @@
+"""DESIGN.md §12: the composable comm axis -- Transport x Collective x
+Codec grid on a CNN-sized (12 MB) update.
+
+Covers Table 3 (allreduce vs scatter-reduce), the FSD-Inference-style
+hierarchical two-level tree, the MLLess-style reduced-communication codecs
+(int8 + error feedback, top-k sparsification), the DynamoDB 400 KB rule
+(spec-time "N/A" exactly like Table 1 -- note how scatter-reduce or a
+sparsifying codec flips cells back to feasible), and the same codecs on
+the IaaS NIC ring / pod DCN ring / hybrid VM-PS push-pull.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.comm import ChannelItemTooLarge
+from repro.experiments import ExperimentSpec, run_experiment
+from repro.experiments.spec import FleetSpec
+
+
+def _base(quick: bool, platform: str = "faas") -> ExperimentSpec:
+    return ExperimentSpec(
+        platform=platform, model="mobilenet", dataset="cifar10",
+        rows=2_000 if quick else 20_000, algorithm="ga_sgd",
+        algo_args={"lr": 0.05, "batch_size": 512}, max_epochs=1,
+        fleet=FleetSpec(workers=8))
+
+
+def run(quick: bool = True):
+    rows = []
+    channels = ("s3", "dynamodb") if quick else (
+        "s3", "memcached", "redis", "dynamodb")
+    collectives = ("allreduce", "scatter_reduce", "hierarchical")
+    codecs = ("fp32", "int8", "topk:0.01")
+    grid = [("faas", f"{ch}/{co}/{cd}")
+            for ch in channels for co in collectives for cd in codecs]
+    # one row per non-store collective: NIC ring (IaaS), DCN ring (pod),
+    # hybrid VM-PS push-pull -- same codecs, same metering
+    grid += [("iaas", "nic/ring/fp32"), ("iaas", "nic/ring/int8"),
+             ("pod", "dcn/ring/fp32"), ("pod", "dcn/ring/topk:0.01"),
+             ("faas", "vmps/pushpull/fp32")]
+
+    fp32_bytes: dict[tuple, float] = {}
+    for platform, stack in grid:
+        name = "comm_" + platform + "_" + stack.replace("/", "_").replace(
+            ":", "")
+        try:
+            spec = _base(quick, platform).with_(name=name, comm=stack)
+        except ChannelItemTooLarge as e:
+            # the spec-time Table 1 "N/A" cell (DynamoDB 400 KB limit)
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": "N/A:" + str(e).split(";")[0]})
+            continue
+        r = run_experiment(spec, cache_dir=None).result
+        if r.get("error"):
+            rows.append({"name": name, "us_per_call": 0.0,
+                         "derived": "N/A:" + r["error"]})
+            continue
+        key = (platform, stack.rsplit("/", 1)[0])
+        if stack.endswith("/fp32"):
+            fp32_bytes[key] = r["comm_bytes"]
+        base = fp32_bytes.get(key)
+        ratio = (r["comm_bytes"] / base) if base else float("nan")
+        rows.append({
+            "name": name,
+            "us_per_call": r["sim_time_s"] * 1e6 / max(r["rounds"], 1),
+            "sim_time_s": r["sim_time_s"], "cost_usd": r["cost_usd"],
+            "comm_bytes": r["comm_bytes"],
+            "comm_time_s": r.get("comm_time_s", 0.0),
+            "derived": (f"bytes={r['comm_bytes']:.0f};"
+                        f"ratio_vs_fp32={ratio:.4f}"),
+        })
+    return emit(rows, "bench_comm")
+
+
+if __name__ == "__main__":
+    run()

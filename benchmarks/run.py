@@ -14,6 +14,7 @@ MODULES = [
     "bench_patterns",      # Table 3
     "bench_algorithms",    # Fig 7
     "bench_channels",      # Tables 1-2
+    "bench_comm",          # §12 Transport x Collective x Codec grid
     "bench_sync",          # Fig 8
     "bench_breakdown",     # Fig 10
     "bench_end2end",       # Fig 11/12 + COST check

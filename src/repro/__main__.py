@@ -108,10 +108,16 @@ def cmd_list(args) -> int:
         p = PRESETS[name]
         n = len(p.build(True))
         print(f"{name:<18s} {n:2d} trial(s)  {p.description}")
+    from repro.core.comm import list_codecs, list_collectives, list_transports
     from repro.core.workloads import list_workloads
     from repro.experiments.spec import PLATFORMS
     print(f"\nplatforms: {', '.join(PLATFORMS)}")
     print(f"models:    {', '.join(list_workloads())}")
+    print(f"\ncomm stacks (--set comm=transport/collective/codec, "
+          f"DESIGN.md §12):")
+    print(f"  transports:  {', '.join(list_transports())}")
+    print(f"  collectives: {', '.join(list_collectives())}")
+    print(f"  codecs:      {', '.join(list_codecs())}")
     return 0
 
 

@@ -1,8 +1,12 @@
 """LambdaML core: the paper's design space as composable pieces.
 
 - algorithms: GA-SGD / MA-SGD / ADMM / EM-kmeans (shared FaaS+IaaS impls)
-- channels:   S3 / Memcached / Redis / DynamoDB / hybrid VM-PS / VM NICs
-- patterns:   AllReduce / ScatterReduce over a storage channel
+- comm:       the communication design space as Transport x Collective x
+              Codec (storage channels, NIC/DCN rings, hybrid VM-PS;
+              allreduce / scatter-reduce / hierarchical / ring / push-pull;
+              fp32 / int8+EF / top-k), composed by CommStack and selected
+              with the "transport/collective/codec" string grammar
+              (channels.py / patterns.py remain as compat shims)
 - engine:     the discrete-event simulation core (clocks, failures, metering)
 - sync:       BSP / ASP / SSP protocol objects over the engine
 - platform:   the Platform protocol + composable FleetSpec / FailureSpec /
@@ -20,6 +24,11 @@ from repro.core.algorithms import (  # noqa: F401
 from repro.core.channels import (  # noqa: F401
     CHANNEL_SPECS, ChannelItemTooLarge, StorageChannel, VMNetwork,
     VMParameterServer,
+)
+from repro.core.comm import (  # noqa: F401
+    Codec, Collective, CommStack, Transport, build_comm_stack, list_codecs,
+    list_collectives, list_transports, make_codec, make_collective,
+    make_transport,
 )
 from repro.core.engine import (  # noqa: F401
     FailureProcess, InjectedPreemptions, PoissonPreemptions, RunResult,

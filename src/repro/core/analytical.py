@@ -24,18 +24,25 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.runtimes import _T_FAAS, _T_IAAS, interp_startup
+from repro.core.comm.codecs import make_codec
+from repro.core.comm.transports import CHANNEL_SPECS, transport_constants
+from repro.core.runtimes import _T_FAAS, _T_IAAS, B_NET, L_NET, interp_startup
 
 # ------------------------------- Table 6 -------------------------------------
+# Derived from the SAME Transport constants the simulator meters with
+# (repro.core.comm.transports.CHANNEL_SPECS and the runtimes' NIC tables):
+# the analytic curves and the discrete-event sweeps read one source of
+# truth by construction -- Table 6 is a *view*, not a second copy.
 TABLE6 = {
     "t_F": dict(_T_FAAS),
     "t_I": dict(_T_IAAS),
-    "B_S3": 65e6, "B_EBS": 1950e6,
-    "B_n": {"t2.medium": 120e6, "c5.large": 225e6},
-    "B_EC": {"cache.t3.medium": 630e6, "cache.m5.large": 1260e6},
-    "L_S3": 8e-2, "L_EBS": 3e-5,
-    "L_n": {"t2.medium": 5e-4, "c5.large": 1.5e-4},
-    "L_EC": {"cache.t3.medium": 1e-2},
+    "B_S3": CHANNEL_SPECS["s3"].bandwidth, "B_EBS": 1950e6,
+    "B_n": {k: B_NET[k] for k in ("t2.medium", "c5.large")},
+    "B_EC": {"cache.t3.medium": CHANNEL_SPECS["memcached"].bandwidth,
+             "cache.m5.large": CHANNEL_SPECS["memcached_large"].bandwidth},
+    "L_S3": CHANNEL_SPECS["s3"].latency, "L_EBS": 3e-5,
+    "L_n": {k: L_NET[k] for k in ("t2.medium", "c5.large")},
+    "L_EC": {"cache.t3.medium": CHANNEL_SPECS["memcached"].latency},
 }
 
 
@@ -92,13 +99,30 @@ class CostInputs:
 Workload = CostInputs
 
 
-def faas_time(wl: Workload, w: int, *, channel: str = "s3") -> float:
-    if channel == "s3":
-        b, lat = TABLE6["B_S3"], TABLE6["L_S3"]
-    else:
-        b, lat = TABLE6["B_EC"]["cache.t3.medium"], TABLE6["L_EC"]["cache.t3.medium"]
+def wire_bytes(m_bytes: float, codec: str = "fp32") -> float:
+    """Per-round wire bytes after a :mod:`repro.core.comm.codecs` codec --
+    the same ``wire_floats`` the simulator meters ``comm_bytes`` with, so
+    the analytic what-ifs (sparsified updates flipping the FaaS verdict,
+    MLLess-style) use the exact simulator ratios."""
+    c = make_codec(codec)
+    if c.is_identity:
+        return float(m_bytes)
+    n = max(int(m_bytes) // 4, 1)
+    return float(c.wire_floats(n) * 4)
+
+
+def faas_time(wl: Workload, w: int, *, channel: str = "s3",
+              codec: str = "fp32") -> float:
+    """§5.3 FaaS(w), over ANY storage transport's Table 6 constants
+    (``channel`` accepts every :mod:`repro.core.comm` storage transport
+    name; the legacy ``"elasticache"`` alias maps to memcached) and any
+    codec's wire ratio."""
+    spec = transport_constants(
+        "memcached" if channel == "elasticache" else channel)
+    b, lat = spec.bandwidth, spec.latency
+    m = wire_bytes(wl.m_bytes, codec)
     t = interp_startup(TABLE6["t_F"], w) + wl.s_bytes / w / TABLE6["B_S3"]
-    per_round = (3 * w - 2) * (wl.m_bytes / w / b + lat) + wl.C / w
+    per_round = (3 * w - 2) * (m / w / b + lat) + wl.C / w
     return t + wl.R * wl.f(w) * per_round
 
 

@@ -1,203 +1,15 @@
-"""Storage-mediated communication channels (the FaaS design axis of §3.2.2).
+"""Storage-mediated communication channels -- COMPAT SHIM.
 
-Each channel moves *real* numpy payloads (so convergence is exact) while
-charging *simulated* time/cost from the paper's measured constants (Table 6)
--- the same methodology as the paper's analytical model, but applied per
-operation so AllReduce/ScatterReduce/BSP/ASP schedules emerge naturally.
-
-Channels: S3, ElastiCache-Memcached, ElastiCache-Redis, DynamoDB (400 KB item
-limit -> DynamoDB "N/A" for models > 400 KB, reproducing Table 1), and the
-hybrid VM parameter server (Table 2 serialization/update costs).
+The implementations moved to :mod:`repro.core.comm.transports` when the
+communication subsystem became the composable Transport x Collective x
+Codec API (DESIGN.md §12).  This module re-exports the seed-era surface so
+existing imports keep working; new code should import from
+:mod:`repro.core.comm`.
 """
-from __future__ import annotations
+from repro.core.comm.transports import (  # noqa: F401
+    CHANNEL_SPECS, ChannelItemTooLarge, ChannelSpec, StorageChannel,
+    VMNetwork, VMParameterServer, nbytes,
+)
 
-from dataclasses import dataclass, field
-from typing import Optional
-
-import numpy as np
-
-from repro.core import cost as pricing
-
-
-class ChannelItemTooLarge(Exception):
-    pass
-
-
-@dataclass(frozen=True)
-class ChannelSpec:
-    """Measured constants for one storage service (Table 6 methodology,
-    DESIGN.md §3): per-op time = ``latency + size / bandwidth``.
-
-    ``large_item_slowdown`` models a single-threaded value server: for items
-    over 10 MB the effective bandwidth is divided by this factor.  The paper
-    observes this for Redis (§4.3) -- one event-loop thread serializes big
-    GET/SET payloads, so Redis falls behind the otherwise identically-priced
-    Memcached once update vectors reach CNN sizes, while staying on par for
-    the small linear models of Table 1.
-    """
-    name: str
-    bandwidth: float                 # bytes/s per worker stream
-    latency: float                   # s per op
-    startup: float                   # s to provision the service
-    max_item: Optional[int] = None   # bytes; None = unlimited
-    hourly_cost: float = 0.0
-    put_cost: float = 0.0            # $ per op
-    get_cost: float = 0.0
-    large_item_slowdown: float = 1.0  # >1: single-threaded server (Redis)
-
-
-# Table 6 (+ §4.3 observations), row by row:
-CHANNEL_SPECS = {
-    # Table 6 "S3" row: B_S3 = 65 MB/s per stream, L_S3 = 80 ms per request;
-    # no provisioning (always-on service), request-priced (no hourly $).
-    "s3": ChannelSpec("s3", 65e6, 8e-2, 0.0, None, 0.0,
-                      pricing.S3_PUT, pricing.S3_GET),
-    # Table 6 "ElastiCache" row, cache.t3.medium: B_EC = 630 MB/s,
-    # L_EC = 10 ms; ~2-minute cluster provisioning; hourly-priced.
-    "memcached": ChannelSpec("memcached", 630e6, 1e-2, 130.0, None,
-                             pricing.ELASTICACHE_HOURLY["cache.t3.medium"]),
-    # Table 6 "ElastiCache" row, cache.m5.large: 2x the t3.medium bandwidth
-    # (1260 MB/s) at ~2.3x the hourly price.
-    "memcached_large": ChannelSpec("memcached_large", 1260e6, 1e-2, 130.0,
-                                   None,
-                                   pricing.ELASTICACHE_HOURLY["cache.m5.large"]),
-    # Same ElastiCache constants as memcached (same service class), plus the
-    # §4.3 single-threaded-server penalty on > 10 MB items (see ChannelSpec).
-    "redis": ChannelSpec("redis", 630e6, 1e-2, 130.0, None,
-                         pricing.ELASTICACHE_HOURLY["cache.t3.medium"],
-                         large_item_slowdown=2.0),
-    # Table 1 + §4.3: bandwidth/latency calibrated so small-model rounds run
-    # ~20% faster than S3 (Table 1 slowdown 0.81-0.93 vs S3); the 400 KB
-    # item limit makes models > 400 KB infeasible exactly as the paper
-    # reports ("N/A" cells of Table 1); on-demand request pricing.
-    "dynamodb": ChannelSpec("dynamodb", 81e6, 6.2e-2, 0.0, 400_000, 0.0,
-                            put_cost=pricing.DYNAMODB_PER_MREQ / 1e6,
-                            get_cost=pricing.DYNAMODB_PER_MREQ / 4e6),
-}
-
-
-def nbytes(payload) -> int:
-    if isinstance(payload, np.ndarray):
-        return payload.nbytes
-    return sum(p.nbytes for p in payload)
-
-
-class StorageChannel:
-    """In-memory store with a simulated (time, $) meter."""
-
-    def __init__(self, spec: ChannelSpec | str):
-        self.spec = CHANNEL_SPECS[spec] if isinstance(spec, str) else spec
-        self.store: dict[str, np.ndarray] = {}
-        self.op_cost = 0.0            # accumulated $ for requests
-        self.ops = {"put": 0, "get": 0, "list": 0}
-
-    # each op returns simulated seconds
-    def _xfer(self, size: int) -> float:
-        bw = self.spec.bandwidth
-        if size > 10e6 and self.spec.large_item_slowdown > 1:
-            bw /= self.spec.large_item_slowdown
-        return self.spec.latency + size / bw
-
-    def put(self, key: str, payload: np.ndarray) -> float:
-        size = nbytes(payload)
-        if self.spec.max_item and size > self.spec.max_item:
-            raise ChannelItemTooLarge(
-                f"{self.spec.name}: item {size}B > limit {self.spec.max_item}B")
-        self.store[key] = payload
-        self.ops["put"] += 1
-        self.op_cost += self.spec.put_cost
-        return self._xfer(size)
-
-    def get(self, key: str) -> tuple[np.ndarray, float]:
-        payload = self.store[key]
-        self.ops["get"] += 1
-        self.op_cost += self.spec.get_cost
-        return payload, self._xfer(nbytes(payload))
-
-    def list(self, prefix: str) -> tuple[list[str], float]:
-        self.ops["list"] += 1
-        self.op_cost += self.spec.get_cost
-        return [k for k in self.store if k.startswith(prefix)], self.spec.latency
-
-    def delete(self, key: str) -> float:
-        self.store.pop(key, None)
-        return 0.0
-
-    def service_cost(self, seconds: float) -> float:
-        return self.spec.hourly_cost / 3600.0 * seconds + self.op_cost
-
-
-class VMNetwork:
-    """Metered point-to-point VM network + in-memory key-value host.
-
-    Implements the same metering interface as :class:`StorageChannel`
-    (``put``/``get`` return simulated seconds, op counters accumulate) so the
-    discrete-event engine can treat "files on S3" and "tensors over a NIC"
-    uniformly (DESIGN.md §4.3).  ``put``/``get`` model a worker exchanging a
-    payload with the key-value host (worker 0) over one NIC stream;
-    ``allreduce_time`` is the paper's ring model for the BSP collective.
-    The network itself bills nothing -- NICs come with the instances.
-    """
-
-    def __init__(self, bandwidth: float, latency: float):
-        self.bandwidth = bandwidth
-        self.latency = latency
-        self.store: dict[str, np.ndarray] = {}
-        self.ops = {"put": 0, "get": 0}
-
-    def _xfer(self, size: int) -> float:
-        return self.latency + size / self.bandwidth
-
-    def put(self, key: str, payload: np.ndarray) -> float:
-        self.store[key] = payload
-        self.ops["put"] += 1
-        return self._xfer(nbytes(payload))
-
-    def get(self, key: str) -> tuple[np.ndarray, float]:
-        payload = self.store[key]
-        self.ops["get"] += 1
-        return payload, self._xfer(nbytes(payload))
-
-    def allreduce_time(self, size: int, workers: int) -> float:
-        """MPI ring AllReduce (paper model): ``(2w-2) * (m/w/Bn + Ln)``."""
-        if workers <= 1:
-            return 0.0
-        return (2 * workers - 2) * (size / workers / self.bandwidth
-                                    + self.latency)
-
-    def service_cost(self, seconds: float) -> float:
-        return 0.0
-
-
-@dataclass
-class VMParameterServer:
-    """Hybrid design (Cirrus): a VM-hosted PS reached from Lambda via gRPC.
-
-    Table 2 model: a 3GB Lambda moves 75 MB in ~1.85 s to c5.4xlarge (~40.5
-    MB/s effective incl. serialization), with ~2x contention at 10 workers;
-    the server-side model update costs ~2.7 s per worker per 75 MB (lock +
-    apply), which is what bounds the hybrid design (§4.3).
-    """
-    instance: str = "c5.4xlarge"
-    n_servers: int = 1
-    startup: float = 40.0              # VM boot (no job dispatch needed)
-    base_bw: float = 40.5e6
-    update_unit: float = 2.7 / 75e6    # s per byte per worker
-
-    store: dict = field(default_factory=dict)
-
-    def transfer_time(self, size: int, workers: int) -> float:
-        contention = 1.0 + (workers - 1) / 9.0
-        return size / self.base_bw * contention / self.n_servers
-
-    def update_time(self, size: int, workers: int) -> float:
-        # serialization/locking on the PS, scales with workers (Table 2)
-        return self.update_unit * size * workers / self.n_servers
-
-    def push_pull_round(self, size: int, workers: int) -> float:
-        """push grads + server update + pull model (per worker wall time)."""
-        return (2 * self.transfer_time(size, workers)
-                + self.update_time(size, workers))
-
-    def hourly_cost(self) -> float:
-        return pricing.EC2_HOURLY[self.instance] * self.n_servers
+__all__ = ["CHANNEL_SPECS", "ChannelItemTooLarge", "ChannelSpec",
+           "StorageChannel", "VMNetwork", "VMParameterServer", "nbytes"]

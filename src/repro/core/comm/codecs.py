@@ -1,0 +1,190 @@
+"""The **Codec** axis of the communication design space (DESIGN.md §12).
+
+A codec is *what an update vector looks like on the wire*.  The paper's
+core finding -- FaaS pays off only for models with *reduced* communication
+-- makes payload encoding a first-class axis: MLLess (PAPERS.md) shows
+significance-filtered/sparsified updates change the FaaS verdict, and
+int8 + error-feedback deltas are what make DiLoCo-style outer steps cheap
+across slow links.
+
+Codecs here follow the *simulate-time, exact-numerics* contract of the
+whole engine: the *merged value* is computed from the dequantized/densified
+vectors (so convergence reflects the real lossy math, error feedback
+included), while the *metered wire payload* is the packed form --
+``wire_floats(n)`` f32 slots for an ``n``-element vector.  Metered
+``comm_bytes`` therefore shrink by exactly ``wire_floats(n) / n``.
+
+The int8 quantizer trio (:func:`quantize_int8_ef` /
+:func:`dequantize_int8` / :func:`int8_wire_floats`) is the ONE
+implementation shared by the whole repo: the discrete-event stack here,
+the LocalSGD/DiLoCo sync protocols (:mod:`repro.core.sync`), and the real
+multi-pod training stack (:mod:`repro.distributed.local_sgd`, which applies
+the same functions per parameter leaf inside ``shard_map``).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+# --------------------------------------------------- shared quantizer math --
+
+def quantize_int8_ef(xe):
+    """Symmetric per-channel (last-axis) int8 quantization with the error
+    returned for feedback: ``xe`` should already include the carried
+    residual.  -> ``(codes int8, scales f32, error f32)`` with
+    ``dequantize_int8(codes, scales) + error == xe``."""
+    import jax.numpy as jnp
+
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(xe), axis=-1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
+    return q, scale, xe - q.astype(jnp.float32) * scale
+
+
+def dequantize_int8(q, scale):
+    import jax.numpy as jnp
+
+    return q.astype(jnp.float32) * scale
+
+
+def int8_wire_floats(n: int) -> int:
+    """f32 slots occupied by an int8-compressed n-element vector on the
+    wire: packed codes (4 per float) + one per-vector scale."""
+    return -(-n // 4) + 1
+
+
+# ----------------------------------------------------------------- protocol --
+
+@runtime_checkable
+class Codec(Protocol):
+    """Payload encoding for one fleet's update vectors (DESIGN.md §12).
+
+    Codecs are STATEFUL per run (error-feedback residuals are carried per
+    worker across rounds), so factories hand out fresh instances.
+    """
+
+    name: str
+    #: identity codecs skip the encode/decode round trip entirely, keeping
+    #: the fp32 path byte-identical to the seed-era backends
+    is_identity: bool
+
+    def wire_floats(self, n: int) -> int:
+        """f32 slots the encoded form of an n-element vector occupies."""
+        ...
+
+    def encode_decode(self, worker: int, vec: np.ndarray) -> np.ndarray:
+        """One worker's lossy wire round trip (residual carried inside)."""
+        ...
+
+    def ratio(self, n: int) -> float:
+        """Wire bytes / fp32 bytes for an n-element vector."""
+        ...
+
+
+class _CodecBase:
+    is_identity = False
+
+    def ratio(self, n: int) -> float:
+        return self.wire_floats(n) / n
+
+
+class Fp32Codec(_CodecBase):
+    """Identity: fp32 vectors go on the wire untouched."""
+    name = "fp32"
+    is_identity = True
+
+    def wire_floats(self, n: int) -> int:
+        return n
+
+    def encode_decode(self, worker: int, vec: np.ndarray) -> np.ndarray:
+        return vec
+
+
+class Int8EFCodec(_CodecBase):
+    """int8 + error feedback: ~4x fewer wire bytes; the quantization error
+    is carried per worker into the next round (:func:`quantize_int8_ef`)."""
+    name = "int8"
+
+    def __init__(self):
+        self._residual: dict[int, np.ndarray] = {}
+
+    def wire_floats(self, n: int) -> int:
+        return int8_wire_floats(n)
+
+    def encode_decode(self, worker: int, vec: np.ndarray) -> np.ndarray:
+        res = self._residual.get(worker)
+        if res is None:
+            res = np.zeros_like(vec, dtype=np.float32)
+        q, scale, err = quantize_int8_ef(np.asarray(vec, np.float32) + res)
+        self._residual[worker] = np.asarray(err, np.float32)
+        return np.asarray(dequantize_int8(q, scale), np.float32)
+
+
+class TopKCodec(_CodecBase):
+    """Top-k sparsification with error feedback (MLLess-style significance
+    filtering): only the ``k = max(1, round(fraction * n))`` largest-|.|
+    coordinates ship each round as (value, index) pairs -- ``2k`` f32 slots
+    on the wire; everything filtered is carried as residual into the next
+    round, so no signal is lost, only deferred."""
+
+    def __init__(self, fraction: float = 0.01):
+        fraction = float(fraction)
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(
+                f"topk fraction must be in (0, 1], got {fraction}")
+        self.fraction = fraction
+        self._residual: dict[int, np.ndarray] = {}
+
+    @property
+    def name(self) -> str:
+        return f"topk:{self.fraction:g}"
+
+    def _k(self, n: int) -> int:
+        return max(1, int(round(self.fraction * n)))
+
+    def wire_floats(self, n: int) -> int:
+        return 2 * self._k(n)            # values + int32 indices
+
+    def encode_decode(self, worker: int, vec: np.ndarray) -> np.ndarray:
+        x = np.asarray(vec, np.float32)
+        res = self._residual.get(worker)
+        if res is not None:
+            x = x + res
+        k = self._k(x.size)
+        if k >= x.size:
+            self._residual[worker] = np.zeros_like(x)
+            return x
+        idx = np.argpartition(np.abs(x), -k)[-k:]
+        out = np.zeros_like(x)
+        out[idx] = x[idx]
+        self._residual[worker] = x - out
+        return out
+
+
+#: every selectable codec: name -> factory(arg_str or None)
+CODECS = {
+    "fp32": lambda arg=None: Fp32Codec(),
+    "int8": lambda arg=None: Int8EFCodec(),
+    "topk": lambda arg=None: TopKCodec(float(arg) if arg else 0.01),
+}
+
+
+def make_codec(spec) -> Codec:
+    """``"fp32"`` | ``"int8"`` | ``"topk[:<fraction>]"`` | a
+    :class:`Codec` instance.  Returns a FRESH instance (codecs carry
+    per-run error-feedback state)."""
+    if not isinstance(spec, str):
+        return spec
+    name, _, arg = spec.partition(":")
+    try:
+        factory = CODECS[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {spec!r}; available: "
+                       f"{', '.join(sorted(CODECS))}") from None
+    return factory(arg or None)
+
+
+def list_codecs() -> list[str]:
+    return sorted(CODECS)

@@ -8,9 +8,10 @@ be duplicated between the FaaS and IaaS training loops:
 - the checkpoint/restart machinery (Lambda 15-minute lifetime rotation and
   spot-instance preemption share one code path, DESIGN.md §7.1),
 - pluggable straggler and failure processes,
-- the ``CommBackend`` seam: a metering interface shared by storage channels
-  (:class:`repro.core.channels.StorageChannel`), the hybrid VM parameter
-  server, and VM NIC networks (:class:`repro.core.channels.VMNetwork`).
+- the ``CommBackend`` seam: one metering interface implemented by the
+  composable :class:`repro.core.comm.CommStack` (Transport x Collective x
+  Codec, DESIGN.md §12) -- storage channels, the hybrid VM parameter
+  server, VM NICs and the cross-pod DCN all plug in through it.
 
 Sync protocols (:mod:`repro.core.sync`) are strategy objects over a
 :class:`SimContext`; infrastructures (:mod:`repro.core.runtimes`) are
@@ -33,10 +34,11 @@ import numpy as np
 if TYPE_CHECKING:                        # platform.py imports engine at runtime
     from repro.core.platform import Platform
 
-from repro.core import cost as pricing
-from repro.core.channels import ChannelItemTooLarge, StorageChannel, VMNetwork
+from repro.core.comm import (  # noqa: F401  (adapters re-exported)
+    ChannelComm, ChannelItemTooLarge, CommStack, MPIComm, PSComm,
+    StorageChannel, VMNetwork,
+)
 from repro.core.mlmodels import model_bytes
-from repro.core.patterns import PATTERNS
 from repro.data.synthetic import partition
 
 
@@ -57,10 +59,18 @@ class RunResult:
     max_staleness: int = 0        # max observed round lag at a model read
     comm_bytes: float = 0.0       # per-worker update bytes moved on the
                                   # metered (slow) substrate, whole run
+                                  # (WIRE bytes: codecs shrink this exactly)
+    comm_cost: float = 0.0        # $ billed by the comm substrate itself
 
     @property
     def final_loss(self) -> float:
         return self.history[-1][1] if self.history else float("nan")
+
+    @property
+    def comm_time(self) -> float:
+        """Simulated seconds spent in metered communication (the
+        ``breakdown["comm"]`` meter every backend feeds uniformly)."""
+        return self.breakdown.get("comm", 0.0)
 
     def to_dict(self):
         return {"system": self.system, "algorithm": self.algorithm,
@@ -72,6 +82,8 @@ class RunResult:
                 "preemptions": self.preemptions,
                 "max_staleness": self.max_staleness,
                 "comm_bytes": self.comm_bytes,
+                "comm_time_s": round(self.comm_time, 2),
+                "comm_cost_usd": round(self.comm_cost, 6),
                 "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
                 "error": self.error}
 
@@ -172,6 +184,11 @@ class CommBackend:
     - ``kvstore()``: a metered key-value store (``put``/``get`` returning
       simulated seconds) holding the global model for ASP/SSP.
     - ``service_cost(seconds)``: $ for the communication substrate itself.
+
+    The one real implementation is the composable
+    :class:`repro.core.comm.CommStack` (Transport x Collective x Codec,
+    DESIGN.md §12); ``ChannelComm``/``PSComm``/``MPIComm`` are its thin
+    legacy adapters, re-exported here for the seed-era import paths.
     """
 
     def bsp_reduce(self, ctx: "SimContext", updates: list, tag: str):
@@ -180,75 +197,12 @@ class CommBackend:
     def kvstore(self):
         raise NotImplementedError
 
-    def service_cost(self, seconds: float) -> float:
+    def startup(self) -> float:
+        """Seconds to provision the substrate (0 = always-on)."""
         return 0.0
 
-
-class ChannelComm(CommBackend):
-    """Pure-FaaS: AllReduce/ScatterReduce files on a storage channel."""
-
-    def __init__(self, chan: StorageChannel, pattern: str):
-        self.chan = chan
-        self.pattern = pattern
-
-    def bsp_reduce(self, ctx, updates, tag):
-        merged, times = PATTERNS[self.pattern](self.chan, updates, tag)
-        base = float(np.max(ctx.clock))      # BSP barrier
-        ctx.meter_add("comm", float(np.mean(times)))
-        ctx.meter_bytes(float(updates[0].nbytes))
-        ctx.clock[:] = base + times
-        return merged
-
-    def kvstore(self):
-        return self.chan
-
-    def service_cost(self, seconds):
-        return self.chan.service_cost(seconds)
-
-
-class PSComm(CommBackend):
-    """Hybrid (Cirrus): VM-hosted parameter server; S3 keeps checkpoints and
-    the ASP/SSP global model (Table 2 costs bound the PS itself)."""
-
-    def __init__(self, ps, chan: StorageChannel):
-        self.ps = ps
-        self.chan = chan
-
-    def bsp_reduce(self, ctx, updates, tag):
-        dt = self.ps.push_pull_round(updates[0].nbytes, ctx.w)
-        ctx.clock += dt
-        ctx.meter_add("comm", dt)
-        ctx.meter_bytes(float(updates[0].nbytes))
-        return np.mean(updates, axis=0)
-
-    def kvstore(self):
-        return self.chan
-
-    def service_cost(self, seconds):
-        return (self.chan.service_cost(seconds)
-                + pricing.ec2_cost(self.ps.instance, seconds, self.ps.n_servers))
-
-
-class MPIComm(CommBackend):
-    """IaaS: ring AllReduce over VM NICs; worker 0 doubles as the in-memory
-    key-value host for ASP/SSP (reached through the same metered network)."""
-
-    def __init__(self, net: VMNetwork):
-        self.net = net
-
-    def bsp_reduce(self, ctx, updates, tag):
-        merged = np.mean(updates, axis=0)
-        t_comm = self.net.allreduce_time(updates[0].nbytes, ctx.w)
-        ctx.clock[:] = float(np.max(ctx.clock)) + t_comm   # full barrier
-        ctx.meter_add("comm", t_comm)
-        ctx.meter_bytes(float(updates[0].nbytes))
-        return merged
-
-    def kvstore(self):
-        return self.net
-
-    def service_cost(self, seconds):
-        return 0.0   # NICs come with the instances; billed by the platform
+    def service_cost(self, seconds: float) -> float:
+        return 0.0
 
 
 # -------------------------------------------------------------- context -----
@@ -407,5 +361,6 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
         return res
 
     res.sim_time = float(np.max(ctx.clock))
+    res.comm_cost = comm.service_cost(res.sim_time)
     res.cost = platform.finalize_cost(ctx)
     return res

@@ -1,102 +1,15 @@
-"""Communication patterns over a storage channel (paper §3.2.3, Fig 4) with
-the two-phase synchronous protocol of §3.2.4 (merge phase + update phase,
-file-name polling).
+"""Communication patterns over a storage channel -- COMPAT SHIM.
 
-Both patterns take the workers' flat update vectors, move them through the
-channel (real payloads), and return (merged_vector, per_worker_times) where
-times include the BSP waits -- so AllReduce's leader bottleneck and
-ScatterReduce's balanced reduce show up exactly as in Table 3.
-
-Any store implementing the engine's metering interface (DESIGN.md §4.3:
-``put``/``get`` returning simulated seconds, a ``spec.latency``) works; the
-discrete-event engine plugs these into its BSP rounds via
-:class:`repro.core.engine.ChannelComm`.
+The implementations moved to :mod:`repro.core.comm.collectives` when the
+communication subsystem became the composable Transport x Collective x
+Codec API (DESIGN.md §12): the seed-era free functions are unchanged
+(`allreduce`/`scatter_reduce` drive the byte-identical legacy paths), and
+the new hierarchical two-level reduce lives alongside them.  New code
+should import from :mod:`repro.core.comm`.
 """
-from __future__ import annotations
+from repro.core.comm.collectives import (  # noqa: F401
+    PATTERNS, POLL, allreduce, scatter_reduce, two_level_reduce,
+)
 
-import numpy as np
-
-from repro.core.channels import StorageChannel
-
-POLL = 0.01  # s between list() polls (merge-phase waiting)
-
-
-def _poll_until(t_now: float, t_ready: float, latency: float) -> float:
-    """Poll (list) until t_ready; each poll costs one latency."""
-    if t_now >= t_ready:
-        return t_now + latency
-    n_polls = int((t_ready - t_now) / max(POLL, latency)) + 1
-    return t_ready + latency  # arrives at ready + one confirming list
-
-
-def allreduce(channel: StorageChannel, updates: list[np.ndarray], tag: str):
-    """Fig 4 left: all write; leader (worker 0) merges; all read merged."""
-    w = len(updates)
-    lat = channel.spec.latency
-    t_put = np.zeros(w)
-    for i, u in enumerate(updates):
-        t_put[i] = channel.put(f"{tag}/part{i}", u)
-    # merge phase: leader polls until all parts visible
-    t_all_put = float(np.max(t_put))
-    t_leader = _poll_until(t_put[0], t_all_put, lat)
-    merged = np.zeros_like(updates[0])
-    for i in range(w):
-        p, dt = channel.get(f"{tag}/part{i}")
-        merged += p
-        t_leader += dt
-    merged /= w
-    t_leader += channel.put(f"{tag}/merged", merged)
-    # update phase: everyone else polls for the merged file, then reads it
-    times = np.zeros(w)
-    for i in range(w):
-        if i == 0:
-            times[i] = t_leader
-        else:
-            t = _poll_until(t_put[i], t_leader, lat)
-            _, dt = channel.get(f"{tag}/merged")
-            times[i] = t + dt
-    return merged, times
-
-
-def scatter_reduce(channel: StorageChannel, updates: list[np.ndarray], tag: str):
-    """Fig 4 right: every worker reduces one partition of the update."""
-    w = len(updates)
-    lat = channel.spec.latency
-    n = updates[0].size
-    bounds = np.linspace(0, n, w + 1, dtype=int)
-    # phase 1: each worker writes w partitions
-    t_put = np.zeros(w)
-    for i, u in enumerate(updates):
-        t = 0.0
-        for j in range(w):
-            t += channel.put(f"{tag}/p{i}_{j}", u[bounds[j]: bounds[j + 1]])
-        t_put[i] = t
-    t_all_put = float(np.max(t_put))
-    # phase 2: worker j reduces partition j
-    merged = np.zeros_like(updates[0])
-    t_reduced = np.zeros(w)
-    for j in range(w):
-        t = _poll_until(t_put[j], t_all_put, lat)
-        acc = np.zeros(bounds[j + 1] - bounds[j], updates[0].dtype)
-        for i in range(w):
-            p, dt = channel.get(f"{tag}/p{i}_{j}")
-            acc += p
-            t += dt
-        acc /= w
-        merged[bounds[j]: bounds[j + 1]] = acc
-        t += channel.put(f"{tag}/r{j}", acc)
-        t_reduced[j] = t
-    t_all_reduced = float(np.max(t_reduced))
-    # phase 3: everyone reads the other w-1 reduced partitions
-    times = np.zeros(w)
-    for i in range(w):
-        t = _poll_until(t_reduced[i], t_all_reduced, lat)
-        for j in range(w):
-            if j != i:
-                _, dt = channel.get(f"{tag}/r{j}")
-                t += dt
-        times[i] = t
-    return merged, times
-
-
-PATTERNS = {"allreduce": allreduce, "scatter_reduce": scatter_reduce}
+__all__ = ["PATTERNS", "POLL", "allreduce", "scatter_reduce",
+           "two_level_reduce"]

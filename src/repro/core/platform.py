@@ -126,12 +126,110 @@ class FailureSpec:
 
 @dataclass(frozen=True)
 class CommSpec:
-    """How the fleet communicates.  FaaS platforms use ``channel`` +
-    ``pattern`` (Tables 1-3); IaaS fleets reduce over their NICs and use
-    only ``ckpt_channel`` (where spot checkpoints live)."""
-    channel: str = "s3"                  # s3|memcached|redis|dynamodb|vmps
-    pattern: str = "allreduce"           # allreduce|scatter_reduce
+    """How the fleet communicates: one point of the Transport x Collective
+    x Codec space (:mod:`repro.core.comm`, DESIGN.md §12).
+
+    The seed-era fields keep their platform-interpreted meaning --
+    ``channel``/``pattern`` are what FaaS runs (Tables 1-3), IaaS/pod
+    fleets default to ring over their NIC/DCN, ``ckpt_channel`` is where
+    spot/lifetime checkpoints live.  The explicit ``transport`` /
+    ``collective`` overrides (``None`` = platform default) and the
+    ``codec`` pin the full stack on ANY platform; the
+    ``"transport/collective/codec"`` string grammar
+    (:meth:`CommSpec.parse`, accepted anywhere a CommSpec is --
+    ``ExperimentSpec(comm="s3/scatter_reduce/int8")``) fills them in one
+    shot.
+    """
+    channel: str = "s3"                  # s3|memcached[_large]|redis|
+                                         #   dynamodb|vmps (FaaS transport)
+    pattern: str = "allreduce"           # allreduce|scatter_reduce|
+                                         #   hierarchical[:<g>] (store reduce)
     ckpt_channel: str = "s3"
+    codec: str = "fp32"                  # fp32|int8|topk[:<fraction>]
+    transport: str | None = None         # explicit transport (wins over
+                                         #   channel; nic/dcn allowed)
+    collective: str | None = None        # explicit collective (wins over
+                                         #   pattern; ring/pushpull allowed)
+
+    def __post_init__(self):
+        from repro.core import comm as C
+        # structural name validation, eagerly (a sweep should reject at
+        # expansion, not crash mid-batch inside make_comm)
+        for name in (self.channel, self.ckpt_channel):
+            C.transport_constants(name)          # raises on unknown
+        C.make_collective(self.pattern)
+        C.make_codec(self.codec)
+        if self.transport is not None:
+            C.transport_constants(self.transport)
+        if self.collective is not None:
+            C.make_collective(self.collective)
+
+    # ---- the string grammar -------------------------------------------------
+    @classmethod
+    def parse(cls, text: str, *, ckpt_channel: str = "s3") -> "CommSpec":
+        """``"<transport>[/<collective>[/<codec>]]"`` -> CommSpec (see
+        :mod:`repro.core.comm.grammar` for defaults and examples).  The
+        legacy ``channel``/``pattern`` views mirror the parsed parts where
+        they are expressible."""
+        from repro.core import comm as C
+        transport, collective, codec = C.parse_stack(text)
+        kw: dict = dict(transport=transport, collective=collective,
+                        codec=codec, ckpt_channel=ckpt_channel)
+        if transport not in C.NETWORK_TRANSPORTS:
+            kw["channel"] = transport
+        if collective is not None and (
+                collective.partition(":")[0] in C.STORE_COLLECTIVES):
+            kw["pattern"] = collective
+        return cls(**kw)
+
+    def resolved(self, platform: str = "faas") -> tuple[str, str, str]:
+        """The concrete ``(transport, collective, codec)`` this spec means
+        on ``platform`` -- explicit overrides win; otherwise FaaS reduces
+        ``pattern`` over ``channel``, IaaS rings over NICs, pods over the
+        DCN, and the VM-PS transport implies push/pull."""
+        from repro.core import comm as C
+        t = self.transport
+        if t is None:
+            t = {"iaas": "nic", "pod": "dcn"}.get(platform, self.channel)
+        c = self.collective
+        if c is None:
+            c = (self.pattern if t not in ("vmps", "nic", "dcn")
+                 else C.default_collective(t))
+        return t, c, self.codec
+
+    def stack_name(self, platform: str = "faas") -> str:
+        """Canonical ``transport/collective/codec`` string on ``platform``."""
+        from repro.core.comm import stack_name
+        return stack_name(*self.resolved(platform))
+
+    def validate(self, platform: str | None = None, model_bytes=None,
+                 workers: int | None = None) -> None:
+        """Raise on stacks that cannot run (pairing/platform rules) or
+        cannot fit (transport per-item limits vs the codec'd update size:
+        DynamoDB's 400 KB limit becomes an eager
+        :class:`~repro.core.comm.ChannelItemTooLarge`, reproducing Table
+        1's "N/A" cells at spec time).  ``model_bytes`` is the fp32
+        update-vector size; pass a callable for lazy estimation."""
+        from repro.core.comm import validate_stack
+        validate_stack(*self.resolved(platform or "faas"),
+                       platform=platform, model_bytes=model_bytes,
+                       workers=workers)
+
+
+def check_sync_codec(proto, codec: str) -> None:
+    """Codecs encode the *update vectors of collective reduces* (BSP and
+    the LocalSGD/DiLoCo sync boundaries); the ASP/SSP event loop exchanges
+    the raw fp32 global model through the kvstore instead, so a lossy
+    codec there would be a silent no-op -- reject it rather than return
+    fp32 results labeled int8/topk."""
+    from repro.core.comm import make_codec
+    from repro.core.sync import SSP
+    if isinstance(proto, SSP) and not make_codec(codec).is_identity:
+        raise ValueError(
+            f"comm codec {codec!r} has no effect under sync="
+            f"{proto.name!r}: codecs apply to collective reduces "
+            f"(bsp / local:<H> / diloco:<H>); the ASP/SSP global-model "
+            f"store moves raw fp32 -- drop the codec or switch sync")
 
 
 # --------------------------------------------------------------- protocol ----
@@ -203,12 +301,18 @@ class BasePlatform:
     sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
     seed: int = 0
 
+    def __post_init__(self):
+        if isinstance(self.comm, str):   # "s3/scatter_reduce/int8" grammar
+            self.comm = CommSpec.parse(self.comm)
+
     # ---- user entry point ---------------------------------------------------
     def train(self, model, algo, ds_train, ds_val, *,
               target_loss: float | None = None, max_epochs: int = 10,
               eval_every: int = 1, data_local: bool = False) -> RunResult:
         from repro.core.sync import make_sync
-        return simulate(self, make_sync(self.sync), model, algo,
+        proto = make_sync(self.sync)
+        check_sync_codec(proto, self.comm.codec)
+        return simulate(self, proto, model, algo,
                         ds_train, ds_val, target_loss=target_loss,
                         max_epochs=max_epochs, eval_every=eval_every,
                         data_local=data_local)

@@ -50,6 +50,9 @@ import numpy as np
 
 from repro.core import cost as pricing
 from repro.core.channels import StorageChannel, VMNetwork, VMParameterServer
+from repro.core.comm.transports import (
+    CHANNEL_SPECS, DCN_BANDWIDTH, DCN_LATENCY, NIC_BANDWIDTH, NIC_LATENCY,
+)
 from repro.core.engine import (  # noqa: F401  (RunResult re-exported)
     ChannelComm, FailureProcess, InjectedPreemptions, MPIComm, PoissonPreemptions,
     PSComm, RunResult, StragglerProcess, simulate,
@@ -62,12 +65,15 @@ from repro.core.platform import (  # noqa: F401  (specs re-exported)
 # counts between and beyond the measured points are handled
 _T_FAAS = {1: 1.2, 10: 1.2, 50: 11.0, 100: 18.0, 200: 35.0, 300: 50.0}
 _T_IAAS = {1: 100.0, 10: 132.0, 50: 160.0, 100: 292.0, 200: 606.0}
-B_S3 = 65e6
-L_S3 = 8e-2
-B_NET = {"t2.medium": 120e6, "c5.large": 225e6, "c5.xlarge": 600e6,
+# data-plane S3 constants: the same Table 6 row the "s3" comm transport is
+# built from (one source of truth in repro.core.comm.transports)
+B_S3 = CHANNEL_SPECS["s3"].bandwidth
+L_S3 = CHANNEL_SPECS["s3"].latency
+# the t2.medium row doubles as the comm package's "nic" transport default
+B_NET = {"t2.medium": NIC_BANDWIDTH, "c5.large": 225e6, "c5.xlarge": 600e6,
          "t2.2xlarge": 120e6, "c5.4xlarge": 1250e6, "m5a.12xlarge": 1250e6,
          "g3s.xlarge": 1250e6, "g4dn.xlarge": 1250e6}
-L_NET = {"t2.medium": 5e-4, "c5.large": 1.5e-4}
+L_NET = {"t2.medium": NIC_LATENCY, "c5.large": 1.5e-4}
 
 LIFETIME = 900.0          # Lambda max duration (s)
 LIFETIME_MARGIN = 20.0
@@ -181,24 +187,24 @@ class FaaSRuntime(BasePlatform):
         if mbytes > headroom_bytes:
             return (f"model ({mbytes / 1e6:.1f} MB) exceeds 1/3 of the "
                     f"smallest Lambda's memory ({gb_min:.1f} GB)")
+        try:
+            # the comm stack's pairing + per-item rules (DynamoDB 400 KB ->
+            # Table 1 "N/A") fail here, before any simulated second elapses
+            self.comm.validate(platform="faas", model_bytes=mbytes,
+                               workers=self.workers)
+        except ValueError as e:
+            return str(e)
         return ""
 
     def make_comm(self):
-        if self.comm.channel == "vmps":
-            return PSComm(VMParameterServer(), StorageChannel("s3"))
-        return ChannelComm(StorageChannel(self.comm.channel),
-                           self.comm.pattern)
+        from repro.core.comm import build_comm_stack
+        return build_comm_stack(*self.comm.resolved("faas"))
 
     def make_ckpt_store(self, comm):
-        return comm.chan          # FaaS comm is always ChannelComm or PSComm
+        return comm.kvstore()     # the storage channel (PSComm: its S3 side)
 
     def startup_time(self, comm) -> float:
-        t = interp_startup(_T_FAAS, self.workers)
-        if isinstance(comm, PSComm):
-            t = max(t, comm.ps.startup)
-        if isinstance(comm, ChannelComm):
-            t = max(t, comm.chan.spec.startup)
-        return t
+        return max(interp_startup(_T_FAAS, self.workers), comm.startup())
 
     def load_time(self, part_bytes: int, data_local: bool = False) -> float:
         return L_S3 + part_bytes / B_S3
@@ -303,13 +309,16 @@ class IaaSRuntime(BasePlatform):
         return VMNetwork(bn, ln)
 
     def make_comm(self):
-        return MPIComm(self._net())
+        from repro.core.comm import build_comm_stack
+        return build_comm_stack(*self.comm.resolved("iaas"), nic=self._net())
 
     def make_ckpt_store(self, comm):
         return StorageChannel(self.comm.ckpt_channel)
 
     def startup_time(self, comm) -> float:
-        return interp_startup(_T_IAAS, self.workers)
+        # NICs add nothing; a pinned storage/PS stack waits for its service
+        # to provision, exactly as on FaaS
+        return max(interp_startup(_T_IAAS, self.workers), comm.startup())
 
     def load_time(self, part_bytes: int, data_local: bool = False) -> float:
         if data_local:
@@ -336,8 +345,11 @@ class IaaSRuntime(BasePlatform):
         hourly = sum(pricing.EC2_HOURLY[i] for i in self.fleet.instances())
         if self.failure.spot:
             hourly *= self.failure.spot_discount
+        # comm substrate dollars: $0 for the default NIC ring, but a pinned
+        # storage/PS stack bills its hourly + per-op prices like on FaaS
         return (hourly / 3600.0 * sim_time
-                + ctx.ckpt_store.service_cost(sim_time))
+                + ctx.ckpt_store.service_cost(sim_time)
+                + ctx.comm.service_cost(sim_time))
 
 
 # --------------------------------------------------------------- pods -------
@@ -346,12 +358,13 @@ class IaaSRuntime(BasePlatform):
 #: same interp_startup convention as the Table 6 columns)
 _T_POD = {1: 45.0, 4: 75.0, 16: 120.0, 64: 240.0}
 
-#: cross-pod data-center network: per-pod egress bandwidth and latency.
-#: Intra-pod ICI is NOT metered here -- collectives inside a pod ride the
-#: compute term (they are part of the MFU discount), which is exactly the
+#: cross-pod data-center network: per-pod egress bandwidth and latency
+#: (the shared repro.core.comm "dcn" transport constants).  Intra-pod ICI
+#: is NOT metered here -- collectives inside a pod ride the compute term
+#: (they are part of the MFU discount), which is exactly the
 #: slow-channel/fast-compute split the paper studies on FaaS.
-POD_DCN_BANDWIDTH = 25e9          # bytes/s per pod
-POD_DCN_LATENCY = 1e-3            # s per collective phase
+POD_DCN_BANDWIDTH = DCN_BANDWIDTH  # bytes/s per pod
+POD_DCN_LATENCY = DCN_LATENCY      # s per collective phase
 
 
 class PodPlatform(BasePlatform):
@@ -442,13 +455,16 @@ class PodPlatform(BasePlatform):
         return ""
 
     def make_comm(self):
-        return MPIComm(VMNetwork(self.dcn_bandwidth, self.dcn_latency))
+        from repro.core.comm import build_comm_stack
+        return build_comm_stack(
+            *self.comm.resolved("pod"),
+            dcn=VMNetwork(self.dcn_bandwidth, self.dcn_latency, "dcn"))
 
     def make_ckpt_store(self, comm):
         return StorageChannel(self.comm.ckpt_channel)
 
     def startup_time(self, comm) -> float:
-        return interp_startup(_T_POD, self.workers)
+        return max(interp_startup(_T_POD, self.workers), comm.startup())
 
     def load_time(self, part_bytes: int, data_local: bool = False) -> float:
         if data_local:
@@ -472,5 +488,7 @@ class PodPlatform(BasePlatform):
         hourly = self.workers * self.chips_per_pod * self.chip_hourly
         if self.failure.spot:
             hourly *= self.failure.spot_discount
+        # DCN rings bill $0; pinned storage/PS stacks bill their service
         return (hourly / 3600.0 * sim_time
-                + ctx.ckpt_store.service_cost(sim_time))
+                + ctx.ckpt_store.service_cost(sim_time)
+                + ctx.comm.service_cost(sim_time))

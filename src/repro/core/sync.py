@@ -24,11 +24,13 @@ infrastructure (FaaS, IaaS, hybrid, spot, heterogeneous fleets):
   compression (``compress=True``, wire bytes /4 on top of the ``H`` x).
   ``LocalSGD(h=1)`` IS BSP (bit-identical histories, asserted in tests).
 
-The DiLoCo outer-step math (:class:`DiLoCoOuter`) and the int8
-error-feedback quantizer (:func:`quantize_int8_ef`) live here as the single
-implementation shared with the real multi-pod training stack
-(:mod:`repro.distributed.local_sgd` applies the same functions per
-parameter leaf inside ``shard_map``).
+The DiLoCo outer-step math (:class:`DiLoCoOuter`) lives here; the int8
+error-feedback quantizer is the shared :mod:`repro.core.comm.codecs`
+implementation (one source of truth for this module, the
+:class:`~repro.core.comm.Int8EFCodec` wire codec, and the real multi-pod
+training stack :mod:`repro.distributed.local_sgd`, which applies the same
+functions per parameter leaf inside ``shard_map``; the seed-era
+``repro.core.sync.quantize_int8_ef`` import path remains as an alias).
 
 Select a protocol with ``FaaSRuntime(sync="bsp"|"asp"|"ssp")`` (or
 ``"ssp:<s>"``, ``"local:<H>"``, ``"diloco:<H>"``, with an optional
@@ -42,6 +44,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.comm.codecs import (  # noqa: F401  (seed-era aliases: the
+    dequantize_int8, int8_wire_floats, quantize_int8_ef,  # one shared codec
+)                                                         # implementation)
 from repro.core.engine import SimContext
 from repro.core.patterns import PATTERNS, allreduce, scatter_reduce  # noqa: F401
 
@@ -72,31 +77,6 @@ class DiLoCoOuter:
         new_mom = self.momentum * mom + mean_delta
         new_outer = outer - self.lr * (self.momentum * new_mom + mean_delta)
         return new_outer, new_mom
-
-
-def quantize_int8_ef(xe):
-    """Symmetric per-channel (last-axis) int8 quantization with the error
-    returned for feedback: ``xe`` should already include the carried
-    residual.  -> ``(codes int8, scales f32, error f32)`` with
-    ``dequantize_int8(codes, scales) + error == xe``."""
-    import jax.numpy as jnp
-
-    scale = jnp.maximum(
-        jnp.max(jnp.abs(xe), axis=-1, keepdims=True) / 127.0, 1e-12)
-    q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
-    return q, scale, xe - q.astype(jnp.float32) * scale
-
-
-def dequantize_int8(q, scale):
-    import jax.numpy as jnp
-
-    return q.astype(jnp.float32) * scale
-
-
-def int8_wire_floats(n: int) -> int:
-    """f32 slots occupied by an int8-compressed n-element vector on the
-    wire: packed codes (4 per float) + one per-vector scale."""
-    return -(-n // 4) + 1
 
 
 class SyncProtocol:

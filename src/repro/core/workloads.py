@@ -78,6 +78,53 @@ def update_vector_bytes(workload: Workload, params=None) -> int:
     return int(ravel_pytree(params)[0].size) * 4
 
 
+#: static (feature_dim, n_classes) per study dataset -- the spec-time size
+#: estimator's view of repro.data.synthetic.make_dataset (dims are fixed by
+#: the paper; only row counts scale)
+_DATASET_SHAPES = {"higgs": (28, 2), "rcv1": (47_236, 2),
+                   "cifar10": (3072, 10), "yfcc100m": (4096, 2),
+                   "criteo": (1_000_000, 2)}
+
+_ARCH_BYTES_CACHE: dict[tuple, int] = {}
+
+
+def estimate_update_bytes(model: str, dataset: str = "higgs",
+                          model_args: dict | None = None) -> int | None:
+    """fp32 update-vector bytes one worker ships per metered reduce,
+    WITHOUT materializing data or parameters -- what spec-time comm
+    validation (:meth:`repro.core.platform.CommSpec.validate`) checks
+    against transport per-item limits (the DynamoDB 400 KB rule of Table
+    1).  Returns ``None`` when the size is not statically known (unknown
+    dataset); sizes come from the same dimension tables / configs the real
+    constructors use, so the estimate matches the simulated payloads."""
+    model_args = dict(model_args or {})
+    if is_arch_workload(model):
+        from repro.configs import get_arch, get_reduced
+        from repro.models import build_model
+        reduced = bool(model_args.get("reduced", True))
+        key = (model, reduced)
+        if key not in _ARCH_BYTES_CACHE:
+            arch_id = _arch_key(model)
+            arch = get_reduced(arch_id) if reduced else get_arch(arch_id)
+            _ARCH_BYTES_CACHE[key] = build_model(arch).param_count() * 4
+        return _ARCH_BYTES_CACHE[key]
+    if dataset not in _DATASET_SHAPES:
+        return None
+    d, n_classes = _DATASET_SHAPES[dataset]
+    if model in ("lr", "svm"):
+        return d * 4
+    if model == "kmeans":
+        k = int(model_args.get("k", 10))
+        # EM ships sums (k*d) + counts (k) + sse (1), see update_vector_bytes
+        return (k * d + k + 1) * 4
+    if model in ("mobilenet", "resnet50"):
+        from repro.core.mlmodels import _mlp_sizes
+        target_mb = 12.0 if model == "mobilenet" else 89.0
+        sizes = _mlp_sizes(d, n_classes, target_mb)
+        return sum(a * b + b for a, b in zip(sizes[:-1], sizes[1:])) * 4
+    return None
+
+
 # ---------------------------------------------------------- arch workloads --
 
 def _arch_key(name: str) -> str | None:

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
-from repro.core.sync import DiLoCoOuter, dequantize_int8, quantize_int8_ef
+from repro.core.comm.codecs import dequantize_int8, quantize_int8_ef
+from repro.core.sync import DiLoCoOuter
 from repro.distributed.sharding import ShardingCtx, use_sharding
 from repro.distributed.step import batch_shardings, resolve_shardings, _is_axes
 from repro.models import build_model
@@ -193,7 +194,8 @@ def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
 
         def body(xl, rl):
             # one quantizer implementation for the whole repo: the same
-            # core.sync helpers drive the discrete-event LocalSGD protocol
+            # core.comm.codecs helpers drive the discrete-event LocalSGD
+            # protocol and the Int8EF wire codec
             q, scale, new_res = quantize_int8_ef(
                 xl[0].astype(jnp.float32) + rl[0])
             qs = jax.lax.all_gather(q, "pod")          # int8 over the wire

@@ -137,6 +137,36 @@ def _faas_vs_pod(quick: bool) -> list[ExperimentSpec]:
     ]
 
 
+def _comm_axis(quick: bool) -> list[ExperimentSpec]:
+    # the Transport x Collective x Codec axis (DESIGN.md §12) on one
+    # CNN-sized workload: Table 3's allreduce-vs-scatter-reduce, the
+    # FSD-Inference-style hierarchical tree, and the MLLess-style
+    # reduced-communication codecs that change the FaaS verdict -- plus
+    # the same codecs riding the IaaS NIC ring and the pod DCN.
+    base = ExperimentSpec(
+        platform="faas", model="mobilenet", dataset="cifar10",
+        rows=2_000 if quick else 20_000, algorithm="ga_sgd",
+        algo_args={"lr": 0.05, "batch_size": 512}, max_epochs=1,
+        fleet=FleetSpec(workers=8))
+    stacks = [
+        "s3/allreduce/fp32",
+        "s3/scatter_reduce/fp32",
+        "s3/hierarchical/fp32",
+        "s3/scatter_reduce/int8",
+        "s3/scatter_reduce/topk:0.01",
+        "memcached/allreduce/fp32",
+        "vmps/pushpull/fp32",
+    ]
+    specs = [base.with_(name="comm_" + s.replace("/", "_").replace(":", ""),
+                        comm=s)
+             for s in stacks]
+    specs.append(base.with_(name="comm_iaas_nic_ring_int8", platform="iaas",
+                            comm="nic/ring/int8"))
+    specs.append(base.with_(name="comm_pod_dcn_ring_int8", platform="pod",
+                            comm="dcn/ring/int8"))
+    return specs
+
+
 def _pod_local_sgd(quick: bool) -> list[ExperimentSpec]:
     # communication-interval sweep on the pod platform: BSP GA-SGD vs
     # LocalSGD(H) vs DiLoCo, with and without int8 delta compression
@@ -178,6 +208,10 @@ PRESETS: dict[str, Preset] = {p.name: p for p in [
            "Pod platform comm-interval sweep: BSP vs LocalSGD(H) vs DiLoCo "
            "vs int8-compressed deltas (MA-SGD insight on pod meshes)",
            _pod_local_sgd),
+    Preset("comm_axis",
+           "Transport x Collective x Codec axis (§12): S3/Memcached/VM-PS, "
+           "allreduce vs scatter-reduce vs hierarchical, fp32 vs int8 vs "
+           "top-k, + NIC/DCN ring rows", _comm_axis),
 ]}
 
 

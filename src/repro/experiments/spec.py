@@ -46,6 +46,9 @@ class ExperimentSpec:
     fleet: FleetSpec = field(default_factory=FleetSpec)
     failure: FailureSpec = field(default_factory=FailureSpec)
     comm: CommSpec = field(default_factory=CommSpec)
+                                           # also accepts the string grammar
+                                           # "transport/collective/codec",
+                                           # e.g. "s3/scatter_reduce/int8"
     sync: str = "bsp"                      # bsp | asp | ssp:<s>
                                            #   | local:<H>[:c8] | diloco:<H>[:c8]
     model: str = "lr"                      # any core.workloads name: a study
@@ -98,12 +101,29 @@ class ExperimentSpec:
                 f"corpus; model {self.model!r} is a study stand-in -- pick "
                 f"one of the feature datasets (higgs, rcv1, ...)")
         object.__setattr__(self, "sync", sync_name(self.sync))
+        if isinstance(self.comm, str):     # "transport/collective/codec"
+            object.__setattr__(self, "comm", CommSpec.parse(self.comm))
         for f in ("fleet", "failure", "comm"):
             v = getattr(self, f)
             if isinstance(v, dict):
                 cls = {"fleet": FleetSpec, "failure": FailureSpec,
                        "comm": CommSpec}[f]
                 object.__setattr__(self, f, cls(**v))
+        # the comm stack fails HERE, not mid-simulation: pairing/platform
+        # rules and per-item limits (DynamoDB 400 KB x the estimated model
+        # update size -> ChannelItemTooLarge, Table 1's "N/A" cells).  The
+        # size estimate is lazy -- only transports with item limits pay it.
+        from repro.core.workloads import estimate_update_bytes
+        self.comm.validate(
+            platform=self.platform,
+            model_bytes=lambda: estimate_update_bytes(
+                self.model, self.dataset, self.model_args),
+            workers=self.fleet.workers)
+        # lossy codecs only act on collective reduces; reject the ASP/SSP
+        # pairing eagerly (it would silently run fp32)
+        from repro.core.platform import check_sync_codec
+        from repro.core.sync import make_sync
+        check_sync_codec(make_sync(self.sync), self.comm.codec)
 
     # ---- serialization ------------------------------------------------------
     def to_dict(self) -> dict:

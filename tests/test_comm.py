@@ -1,0 +1,369 @@
+"""The composable communication API (DESIGN.md §12): Transport x
+Collective x Codec parity with the seed-era paths, the string grammar,
+spec-time validation (DynamoDB 400 KB -> Table 1 "N/A" as an eager error),
+exact codec byte metering on all three platforms, and the new hierarchical
+/ top-k members of the design space."""
+import numpy as np
+import pytest
+
+from repro.core.algorithms import make_algorithm
+from repro.core.comm import (
+    ChannelItemTooLarge, CommStack, StorageChannel, Transport, VMNetwork,
+    VMParameterServer, allreduce, make_codec, make_collective,
+    parse_stack, scatter_reduce, two_level_reduce,
+)
+from repro.core.mlmodels import make_study_model
+from repro.core.platform import CommSpec
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime, PodPlatform
+from repro.data.synthetic import make_dataset, train_val_split
+from repro.experiments import ExperimentSpec, run_experiment
+
+
+@pytest.fixture(scope="module")
+def higgs():
+    ds = make_dataset("higgs", rows=6_000)
+    return train_val_split(ds)
+
+
+def _ga(**kw):
+    return make_algorithm("ga_sgd", **{"lr": 0.2, "batch_size": 512, **kw})
+
+
+class _Ctx:
+    """Minimal metering surface a CommStack drives (duck-typed SimContext)."""
+
+    def __init__(self, w):
+        self.clock = np.zeros(w)
+        self.breakdown = {}
+        self.bytes = 0.0
+
+    def meter_add(self, key, dt):
+        self.breakdown[key] = self.breakdown.get(key, 0.0) + dt
+
+    def meter_bytes(self, n):
+        self.bytes += n
+
+
+# ------------------------------------------------------------- the grammar --
+
+def test_parse_stack_grammar():
+    assert parse_stack("s3/scatter_reduce/int8") == (
+        "s3", "scatter_reduce", "int8")
+    assert parse_stack("s3") == ("s3", None, "fp32")
+    assert parse_stack("dcn/ring") == ("dcn", "ring", "fp32")
+    with pytest.raises(KeyError):
+        parse_stack("carrier_pigeon/allreduce/fp32")
+    with pytest.raises(KeyError):
+        parse_stack("s3/gossip/fp32")
+    with pytest.raises(KeyError):
+        parse_stack("s3/allreduce/zstd")
+    with pytest.raises(ValueError):
+        parse_stack("s3/allreduce/fp32/extra")
+    with pytest.raises(ValueError):
+        parse_stack("s3//fp32")
+    with pytest.raises(ValueError):
+        make_codec("topk:1.5")              # fraction out of range
+    with pytest.raises(ValueError):
+        make_collective("hierarchical:0")   # group size must be >= 1
+
+
+def test_comm_spec_parse_and_resolution():
+    c = CommSpec.parse("memcached/scatter_reduce/int8")
+    assert c.channel == "memcached"           # legacy view mirrors
+    assert c.pattern == "scatter_reduce"
+    assert c.resolved("faas") == ("memcached", "scatter_reduce", "int8")
+    # platform defaults: untouched CommSpec keeps the seed-era behavior
+    d = CommSpec()
+    assert d.resolved("faas") == ("s3", "allreduce", "fp32")
+    assert d.resolved("iaas") == ("nic", "ring", "fp32")
+    assert d.resolved("pod") == ("dcn", "ring", "fp32")
+    assert CommSpec(channel="vmps").resolved("faas") == (
+        "vmps", "pushpull", "fp32")
+    # explicit transports pin the stack on any platform
+    e = CommSpec.parse("s3/hierarchical:4/topk:0.02")
+    assert e.resolved("iaas") == ("s3", "hierarchical:4", "topk:0.02")
+    assert e.stack_name("iaas") == "s3/hierarchical:4/topk:0.02"
+    with pytest.raises(KeyError):
+        CommSpec(channel="floppynet")
+
+
+def test_pairing_and_platform_rules():
+    with pytest.raises(ValueError, match="ring"):
+        CommSpec.parse("s3/ring/fp32").validate(platform="faas")
+    with pytest.raises(ValueError, match="push/pull"):
+        CommSpec.parse("vmps/allreduce/fp32").validate(platform="faas")
+    with pytest.raises(ValueError, match="push/pull"):
+        CommSpec.parse("s3/pushpull/fp32").validate(platform="faas")
+    with pytest.raises(ValueError, match="FaaS"):
+        CommSpec.parse("nic/ring/fp32").validate(platform="faas")
+    # ...but the same stack is the IaaS default, and spec-level too
+    CommSpec.parse("nic/ring/int8").validate(platform="iaas")
+    with pytest.raises(ValueError, match="FaaS"):
+        ExperimentSpec(comm="nic/ring/fp32")
+    assert ExperimentSpec(platform="iaas",
+                          comm="nic/ring/int8").comm.codec == "int8"
+
+
+def test_transports_satisfy_protocol():
+    for t in (StorageChannel("s3"), VMNetwork(120e6, 5e-4),
+              VMParameterServer()):
+        assert isinstance(t, Transport)
+        dt = t.put("k", np.ones(64, np.float32))
+        _, dt2 = t.get("k")
+        assert dt >= 0 and dt2 >= 0
+        assert t.service_cost(10.0) >= 0.0
+        assert t.spec.bandwidth > 0
+
+
+# ---------------------------------------------------- seed-path parity ------
+
+@pytest.mark.parametrize("pattern", ["allreduce", "scatter_reduce"])
+def test_stack_string_byte_identical_to_legacy(higgs, pattern):
+    """`s3/<pattern>/fp32` IS the legacy patterns.* path: same losses,
+    same clocks, same bytes, same dollars."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    legacy = FaaSRuntime(workers=4, pattern=pattern).train(
+        model, _ga(), tr, va, max_epochs=2)
+    stack = FaaSRuntime(workers=4, comm=f"s3/{pattern}/fp32").train(
+        model, _ga(), tr, va, max_epochs=2)
+    assert legacy.history == stack.history       # bit-exact, times included
+    assert legacy.sim_time == stack.sim_time
+    assert legacy.cost == stack.cost
+    assert legacy.comm_bytes == stack.comm_bytes
+    assert legacy.comm_cost == stack.comm_cost
+
+
+def test_experiment_spec_string_comm_parity(higgs):
+    """Acceptance: ExperimentSpec(comm="s3/allreduce/fp32") reproduces the
+    legacy (default CommSpec) channel path byte-identically."""
+    base = ExperimentSpec(model="lr", rows=4_000, max_epochs=2,
+                          algorithm="ga_sgd",
+                          algo_args={"lr": 0.2, "batch_size": 512})
+    rec_default = run_experiment(base, cache_dir=None)
+    rec_string = run_experiment(base.with_(comm="s3/allreduce/fp32"),
+                                cache_dir=None)
+    assert rec_default.result == rec_string.result
+
+
+def test_vmps_and_ring_legacy_parity(higgs):
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    old = FaaSRuntime(workers=3, channel="vmps").train(
+        model, _ga(), tr, va, max_epochs=2)
+    new = FaaSRuntime(workers=3, comm="vmps/pushpull/fp32").train(
+        model, _ga(), tr, va, max_epochs=2)
+    assert old.history == new.history and old.cost == new.cost
+    old_i = IaaSRuntime(workers=3).train(model, _ga(), tr, va, max_epochs=2)
+    new_i = IaaSRuntime(workers=3, comm="nic/ring/fp32").train(
+        model, _ga(), tr, va, max_epochs=2)
+    assert old_i.history == new_i.history and old_i.cost == new_i.cost
+
+
+def test_stack_reduce_matches_raw_pattern_functions():
+    """CommStack drives the SAME free functions patterns.py always
+    exported -- merged vector and per-worker times agree exactly."""
+    rng = np.random.default_rng(0)
+    ups = [rng.standard_normal(500).astype(np.float32) for _ in range(5)]
+    for name, fn in [("allreduce", allreduce),
+                     ("scatter_reduce", scatter_reduce),
+                     ("hierarchical", two_level_reduce)]:
+        want_m, want_t = fn(StorageChannel("s3"), [u.copy() for u in ups],
+                            "ref")
+        ctx = _Ctx(5)
+        stack = CommStack(StorageChannel("s3"), name)
+        got_m = stack.bsp_reduce(ctx, [u.copy() for u in ups], "ref")
+        np.testing.assert_array_equal(want_m, got_m)
+        np.testing.assert_array_equal(np.asarray(want_t, float), ctx.clock)
+        assert ctx.bytes == ups[0].nbytes
+
+
+# ------------------------------------------------------------- collectives --
+
+def test_hierarchical_reduces_to_the_mean_and_scales():
+    rng = np.random.default_rng(1)
+    w, n = 16, 2_000_000
+    ups = [rng.standard_normal(n).astype(np.float32) for _ in range(w)]
+    want = np.mean(ups, axis=0)
+    m, t = two_level_reduce(StorageChannel("s3"), ups, "h")
+    np.testing.assert_allclose(m, want, rtol=1e-5, atol=1e-6)
+    assert np.all(np.asarray(t) > 0) and len(t) == w
+    # FSD-Inference scaling: the two-level tree flattens AllReduce's
+    # leader bottleneck (leader touches g + w/g objects, not w)
+    _, t_ar = allreduce(StorageChannel("s3"), ups, "a")
+    assert float(np.max(t)) < float(np.max(t_ar))
+    # explicit group size round-trips through the grammar
+    m4, _ = two_level_reduce(StorageChannel("s3"), ups[:8], "g", 4)
+    np.testing.assert_allclose(m4, np.mean(ups[:8], axis=0),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_collective_item_sizes():
+    ar = make_collective("allreduce")
+    sr = make_collective("scatter_reduce")
+    ring = make_collective("ring")
+    assert ar.max_item_bytes(12_000_000, 8) == 12_000_000
+    assert sr.max_item_bytes(12_000_000, 8) == 1_500_000
+    assert ring.max_item_bytes(12_000_000, 8) == 0
+
+
+# ------------------------------------------------------------------ codecs --
+
+def test_codec_error_feedback_units():
+    int8 = make_codec("int8")
+    v = np.linspace(-1.0, 1.0, 97).astype(np.float32)
+    deq = int8.encode_decode(0, v)
+    # round trip + carried residual reconstructs the input exactly
+    np.testing.assert_allclose(deq + int8._residual[0], v,
+                               rtol=1e-6, atol=1e-7)
+    topk = make_codec("topk:0.1")
+    out = topk.encode_decode(0, v)
+    assert np.count_nonzero(out) == topk._k(v.size)
+    np.testing.assert_allclose(out + topk._residual[0], v,
+                               rtol=1e-6, atol=1e-7)
+    # the filtered mass is deferred, not lost: a second round ships it
+    out2 = topk.encode_decode(0, np.zeros_like(v))
+    assert np.count_nonzero(out2) > 0
+    assert make_codec("topk:1").encode_decode(1, v) is not None
+    assert make_codec("fp32").encode_decode(0, v) is v
+
+
+@pytest.mark.parametrize("plat", ["faas", "iaas", "pod"])
+def test_codec_shrinks_comm_bytes_exactly(higgs, plat):
+    """Acceptance: .../int8 and .../topk shrink metered comm_bytes by
+    exactly the codec's wire ratio on all three platforms."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    builders = {
+        "faas": lambda c: FaaSRuntime(workers=3, comm=f"s3/allreduce/{c}"),
+        "iaas": lambda c: IaaSRuntime(workers=3, comm=f"nic/ring/{c}"),
+        "pod": lambda c: PodPlatform(pods=3, comm=f"dcn/ring/{c}"),
+    }
+    n = 28                                   # lr/higgs update elements
+    base = builders[plat]("fp32").train(model, _ga(), tr, va, max_epochs=2)
+    assert base.comm_bytes > 0
+    for codec in ("int8", "topk:0.25"):
+        r = builders[plat](codec).train(model, _ga(), tr, va, max_epochs=2)
+        wf = make_codec(codec).wire_floats(n)
+        # exact ratio via integer cross-multiplication (no float division)
+        assert int(r.comm_bytes) * n == int(base.comm_bytes) * wf
+        assert np.isfinite(r.final_loss) and r.rounds == base.rounds
+
+
+# ------------------------------------------------- spec-time validation -----
+
+def test_dynamodb_na_is_an_eager_spec_error():
+    """Acceptance: "dynamodb/..." with a > 400 KB model fails at spec
+    construction, naming the model size and the channel limit."""
+    with pytest.raises(ChannelItemTooLarge) as ei:
+        ExperimentSpec(comm="dynamodb/allreduce/fp32", model="mobilenet",
+                       dataset="cifar10")
+    msg = str(ei.value)
+    assert "dynamodb" in msg and "400" in msg and "MB" in msg
+    # a small model fits fine
+    ExperimentSpec(comm="dynamodb/allreduce/fp32", model="lr")
+    # MLLess's point: sparsifying the update flips the cell to feasible
+    ExperimentSpec(comm="dynamodb/allreduce/topk:0.001", model="mobilenet",
+                   dataset="cifar10")
+    # ...and so does scatter-reduce + int8 (375 KB items at w=8)
+    from repro.experiments.spec import FleetSpec
+    ExperimentSpec(comm="dynamodb/scatter_reduce/int8", model="mobilenet",
+                   dataset="cifar10", fleet=FleetSpec(workers=8))
+    with pytest.raises(ChannelItemTooLarge):
+        ExperimentSpec(comm="dynamodb/scatter_reduce/fp32",
+                       model="mobilenet", dataset="cifar10",
+                       fleet=FleetSpec(workers=8))
+
+
+def test_runtime_validate_reports_item_limit(higgs):
+    """Direct FaaSRuntime use fails at validate() (error result, no
+    mid-simulation crash), keeping the bench_channels N/A convention."""
+    ds = make_dataset("cifar10", rows=600)
+    tr, va = train_val_split(ds)
+    mn = make_study_model("mobilenet", tr)
+    r = FaaSRuntime(workers=4, channel="dynamodb").train(
+        mn, make_algorithm("ga_sgd", lr=0.05, batch_size=512), tr, va,
+        max_epochs=1)
+    assert "dynamodb" in r.error and not r.history
+
+
+def test_lossy_codec_rejected_under_asp_ssp(higgs):
+    """A lossy codec would be a silent no-op in the ASP/SSP global-model
+    loop -- rejected at spec time AND at direct runtime use."""
+    with pytest.raises(ValueError, match="no effect"):
+        ExperimentSpec(sync="asp", comm="s3/allreduce/int8")
+    with pytest.raises(ValueError, match="no effect"):
+        ExperimentSpec(sync="ssp:2", comm="s3/allreduce/topk:0.1")
+    ExperimentSpec(sync="asp", comm="s3/allreduce/fp32")    # identity is fine
+    ExperimentSpec(sync="local:4", comm="s3/allreduce/int8")
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    with pytest.raises(ValueError, match="no effect"):
+        FaaSRuntime(workers=3, sync="asp", comm="s3/allreduce/int8").train(
+            model, _ga(), tr, va, max_epochs=1)
+
+
+def test_storage_stack_on_iaas_bills_and_provisions(higgs):
+    """A storage/PS stack pinned on IaaS pays the service's startup and
+    dollars exactly as it would on FaaS (no free Memcached on VMs)."""
+    tr, va = higgs
+    model = make_study_model("lr", tr)
+    nic = IaaSRuntime(workers=3).train(model, _ga(), tr, va, max_epochs=2)
+    mc = IaaSRuntime(workers=3, comm="memcached/allreduce/fp32").train(
+        model, _ga(), tr, va, max_epochs=2)
+    assert mc.comm_cost > 0 and nic.comm_cost == 0.0
+    # total cost includes the substrate: strictly more than VM hours + ckpt
+    from repro.core import cost as pricing
+    vm_hours = 3 * pricing.EC2_HOURLY["t2.medium"] / 3600.0 * mc.sim_time
+    assert mc.cost >= vm_hours + mc.comm_cost
+    assert mc.breakdown["startup"] >= 130.0      # ElastiCache provisioning
+    assert np.isfinite(mc.final_loss)
+
+
+def test_comm_spec_json_round_trip():
+    spec = ExperimentSpec(comm="s3/hierarchical:4/topk:0.02", model="lr")
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec and again.spec_hash() == spec.spec_hash()
+    assert again.comm.resolved("faas") == ("s3", "hierarchical:4",
+                                           "topk:0.02")
+    # string comm in a sweep override expands like any other field
+    assert spec.with_(comm="s3/allreduce/fp32").comm == CommSpec.parse(
+        "s3/allreduce/fp32")
+
+
+def test_cli_list_prints_comm_registries(capsys):
+    from repro.__main__ import main
+    assert main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "transports:" in out and "collectives:" in out
+    assert "codecs:" in out and "hierarchical" in out and "topk" in out
+
+
+# ------------------------------------------ hypothesis byte-scaling law -----
+
+def test_comm_bytes_scale_exactly_with_codec_property():
+    pytest.importorskip("hypothesis", reason="optional test dependency")
+    from hypothesis import given, settings, strategies as st
+
+    @given(w=st.integers(2, 10), n=st.integers(8, 3_000),
+           frac=st.floats(0.001, 1.0),
+           collective=st.sampled_from(["allreduce", "scatter_reduce",
+                                       "hierarchical"]))
+    @settings(max_examples=40, deadline=None)
+    def prop(w, n, frac, collective):
+        rng = np.random.default_rng(n * w)
+        ups = [rng.standard_normal(n).astype(np.float32) for _ in range(w)]
+        base = _Ctx(w)
+        CommStack(StorageChannel("s3"), collective, "fp32").bsp_reduce(
+            base, ups, "t")
+        assert base.bytes == n * 4
+        for codec in ("int8", f"topk:{frac}"):
+            c = make_codec(codec)
+            ctx = _Ctx(w)
+            CommStack(StorageChannel("s3"), collective, codec).bsp_reduce(
+                ctx, ups, "t")
+            # metered bytes == fp32 bytes * wire ratio, exactly (integer
+            # cross-multiplication; holds for EVERY worker count)
+            assert int(ctx.bytes) * n == int(base.bytes) * c.wire_floats(n)
+
+    prop()
