@@ -7,7 +7,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.algorithms import make_algorithm
 from repro.core.analytical import (
-    Workload, estimate_epochs, faas_time, iaas_time, q1_fast_hybrid,
+    CostInputs, estimate_epochs, faas_time, iaas_time, q1_fast_hybrid,
     q2_hot_data,
 )
 from repro.core.mlmodels import make_study_model, model_bytes
@@ -28,7 +28,7 @@ def run(quick: bool = True):
         algo = make_algorithm("ga_sgd", lr=0.3, batch_size=2048)
         r = FaaSRuntime(workers=10).train(model, algo, tr, va,
                                           max_epochs=epochs)
-        wl = Workload(s_bytes=tr.nbytes, m_bytes=mbytes, R=r.rounds, C=0.001)
+        wl = CostInputs(s_bytes=tr.nbytes, m_bytes=mbytes, R=r.rounds, C=0.001)
         t_pred = faas_time(wl, 10)
         ratio = r.sim_time / t_pred
         errs.append(ratio)
@@ -47,8 +47,8 @@ def run(quick: bool = True):
                  "derived": f"est_epochs={est};actual={real.rounds}"})
 
     # ---- Fig 14 (Q1): faster FaaS-IaaS link ----------------------------------
-    wl_lr = Workload(s_bytes=16e9, m_bytes=16e3, R=20, C=60.0)
-    wl_mn = Workload(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)
+    wl_lr = CostInputs(s_bytes=16e9, m_bytes=16e3, R=20, C=60.0)
+    wl_mn = CostInputs(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)
     for wname, wl in (("lr_yfcc", wl_lr), ("mn_cifar", wl_mn)):
         q1 = q1_fast_hybrid(wl, 10)
         rows.append({"name": f"fig14_{wname}", "us_per_call": q1["hybrid_now"] * 1e6,

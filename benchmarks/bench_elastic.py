@@ -1,0 +1,76 @@
+"""Elastic fleet control (DESIGN.md §13): static vs schedule vs SMLT vs
+cost-capped scaling on the Fig-11 workload, emitting the ``w(t)`` timeline.
+
+A thin view over the ``elastic_axis`` preset (shared with ``python -m
+repro run elastic_axis``), plus one analytic-planner row per paper
+workload showing the crossover the planner reproduces (FaaS for LR/Higgs,
+IaaS for the comm-heavy CNNs).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.experiments import get_preset, run_experiment
+
+
+def _w_of_t(rec) -> str:
+    """Render the scaling timeline as ``w@round`` hops (the plot's data)."""
+    tl = rec.result.get("scaling_timeline", [])
+    if not tl:
+        return f"{rec.result['workers']}@0"
+    return " ".join(f"{w}@{r}" for r, w, _s, _c in tl)
+
+
+def run(quick: bool = True):
+    rows = []
+    for rec in (run_experiment(s) for s in
+                get_preset("elastic_axis").build(quick)):
+        r = rec.result
+        tl = r.get("scaling_timeline", [])
+        resize_s = sum(s for _r, _w, s, _c in tl)
+        resize_usd = sum(c for _r, _w, _s, c in tl)
+        rows.append({
+            "name": rec.spec.name,
+            "us_per_call": r["sim_time_s"] * 1e6 / max(r["rounds"], 1),
+            "sim_time_s": r["sim_time_s"], "cost_usd": r["cost_usd"],
+            "rounds": r["rounds"], "timeline": tl,
+            "derived": (f"w(t)={_w_of_t(rec)};rounds={r['rounds']};"
+                        f"cost=${r['cost_usd']:.4f};"
+                        f"resize={resize_s:.1f}s/${resize_usd:.5f}"),
+        })
+        assert not r.get("error"), (rec.spec.name, r["error"])
+
+    by_name = {r["name"]: r for r in rows}
+    sched = by_name["elastic_schedule"]
+    widths = {w for _r, w, _s, _c in sched["timeline"]}
+    assert len(widths) >= 2, \
+        f"schedule policy must actually change w, got timeline {sched}"
+    static = by_name["elastic_static"]
+    assert not static["timeline"], "static fleets must emit no timeline"
+    cap = by_name["elastic_cost_cap"]
+    assert cap["cost_usd"] <= static["cost_usd"] or cap["timeline"], \
+        "cost_cap should shed/stop or at least log its decisions"
+
+    # ---- analytic planner: the paper's FaaS/IaaS crossover ------------------
+    from repro.core.elastic import PAPER_WORKLOADS, plan
+    for name in sorted(PAPER_WORKLOADS):
+        best = plan(name, "cheapest")[0]
+        rows.append({
+            "name": f"plan_{name}",
+            "us_per_call": best.time_s * 1e6,
+            "derived": (f"pick={best.platform}@w{best.workers};"
+                        f"time={best.time_s:.0f}s;"
+                        f"cost=${best.cost_usd:.4f}"),
+        })
+    picks = {r["name"]: r["derived"] for r in rows
+             if r["name"].startswith("plan_")}
+    assert picks["plan_lr_higgs"].startswith("pick=faas"), picks
+    assert picks["plan_mobilenet_cifar10"].startswith("pick=iaas"), picks
+    return emit(rows, "bench_elastic")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    run(quick=ap.parse_args().quick)

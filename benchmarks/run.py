@@ -21,6 +21,7 @@ MODULES = [
     "bench_pipeline",      # Table 5
     "bench_analytical",    # Fig 13/14/15
     "bench_pods",          # §11 three-infrastructure study + LocalSGD sweep
+    "bench_elastic",       # §13 elastic fleets: w(t) per policy + planner
     "bench_roofline",      # §Roofline (dry-run derived)
     "bench_crosspod",      # §Perf paper-technique headline
     "bench_kernels",       # kernel microbench

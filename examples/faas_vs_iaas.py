@@ -10,7 +10,7 @@ the CLI, e.g.:
 """
 import argparse
 
-from repro.core.analytical import Workload, q1_fast_hybrid
+from repro.core.analytical import CostInputs, q1_fast_hybrid
 from repro.experiments import (
     ExperimentSpec, FleetSpec, get_preset, run_experiment, sweep,
 )
@@ -76,7 +76,7 @@ def main():
               f"loss={r['final_loss']:.4f}")
 
     print("\n== what-if: 10 GB/s FaaS<->VM link (paper Fig 14) ==")
-    wl = Workload(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)
+    wl = CostInputs(s_bytes=220e6, m_bytes=12e6, R=500, C=400.0)
     for k, v in q1_fast_hybrid(wl, 10).items():
         print(f"  {k:16s} {v:9.0f}s")
     print("\nFaaS wins the small-model/fast-convergence regime; the moment "

@@ -109,6 +109,7 @@ def cmd_list(args) -> int:
         n = len(p.build(True))
         print(f"{name:<18s} {n:2d} trial(s)  {p.description}")
     from repro.core.comm import list_codecs, list_collectives, list_transports
+    from repro.core.elastic import list_policies
     from repro.core.workloads import list_workloads
     from repro.experiments.spec import PLATFORMS
     print(f"\nplatforms: {', '.join(PLATFORMS)}")
@@ -118,6 +119,43 @@ def cmd_list(args) -> int:
     print(f"  transports:  {', '.join(list_transports())}")
     print(f"  collectives: {', '.join(list_collectives())}")
     print(f"  codecs:      {', '.join(list_codecs())}")
+    print(f"\nscaling policies (--set scaling=..., DESIGN.md §13):")
+    print(f"  {', '.join(list_policies())}")
+    return 0
+
+
+def cmd_plan(args) -> int:
+    """Analytic fleet planner (DESIGN.md §13): rank platform x width for a
+    workload by the §5.3 cost model."""
+    from repro.core.elastic import PAPER_WORKLOADS, plan
+    if args.target in PAPER_WORKLOADS:
+        target, label = PAPER_WORKLOADS[args.target], args.target
+    else:
+        spec = _load_specs(args.target, quick=not args.full)[0]
+        overrides = _parse_set(args.set or [])
+        if overrides:
+            spec = spec.with_(**overrides)
+        target, label = spec, spec.name or args.target
+    workers = ([int(w) for w in args.workers.split(",")]
+               if args.workers else None)
+    kw = {} if workers is None else {"workers": workers}
+    options = plan(target, args.objective, deadline_s=args.deadline_s,
+                   budget_usd=args.budget_usd, **kw)
+    print(f"# plan for {label} (objective={args.objective})")
+    print(f"{'rank':>4s} {'platform':<8s} {'w':>4s} {'time_s':>10s} "
+          f"{'cost_$':>9s}  note")
+    for i, o in enumerate(options, 1):
+        note = o.note if o.note else ("" if i > 1 else "<- pick")
+        print(f"{i:4d} {o.platform:<8s} {o.workers:4d} {o.time_s:10.1f} "
+              f"{o.cost_usd:9.4f}  {note}")
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(
+            json.dumps([o.to_dict() for o in options], indent=1))
+    if not options or not options[0].feasible:
+        print("# no feasible option under the given constraints",
+              file=sys.stderr)
+        return 1
     return 0
 
 
@@ -190,6 +228,25 @@ def main(argv: list[str] | None = None) -> int:
     sweep_p.add_argument("--workers", type=int, default=0,
                          help="thread-pool size for independent trials")
     sweep_p.set_defaults(fn=cmd_sweep)
+
+    plan_p = sub.add_parser(
+        "plan", parents=[common],
+        help="rank platform x fleet width for a workload via the §5.3 "
+             "analytic model (DESIGN.md §13); target is a preset, a spec "
+             "JSON, or a named paper workload (lr_higgs, "
+             "mobilenet_cifar10, ...)")
+    plan_p.add_argument("--objective", default="cheapest",
+                        choices=("cheapest", "fastest"))
+    plan_p.add_argument("--deadline-s", type=float, default=None,
+                        help="only options finishing within this many "
+                             "simulated seconds are feasible (default for "
+                             "'cheapest': 1.25x the fastest option)")
+    plan_p.add_argument("--budget-usd", type=float, default=None,
+                        help="only options under this $ are feasible")
+    plan_p.add_argument("--workers", default=None, metavar="W1,W2,...",
+                        help="fleet widths to sweep (default: the Fig-11 "
+                             "axis 1..300)")
+    plan_p.set_defaults(fn=cmd_plan)
 
     args = ap.parse_args(argv)
     return args.fn(args)

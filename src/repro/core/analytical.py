@@ -93,10 +93,21 @@ class CostInputs:
                    **kw)
 
 
-#: backwards-compatible alias (pre-§11 name); new code should use
-#: CostInputs -- `Workload` now names the engine-facing protocol in
-#: repro.core.workloads
-Workload = CostInputs
+def __getattr__(name: str):
+    """Deprecated alias: ``Workload`` was the pre-§11 name of
+    :class:`CostInputs` and now collides with the engine-facing
+    :class:`repro.core.workloads.Workload` protocol.  Importing it here
+    still works but warns; new code should use ``CostInputs``."""
+    if name == "Workload":
+        import warnings
+        warnings.warn(
+            "repro.core.analytical.Workload is a deprecated alias of "
+            "CostInputs (the engine-facing Workload protocol lives in "
+            "repro.core.workloads); import CostInputs instead",
+            DeprecationWarning, stacklevel=2)
+        return CostInputs
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 def wire_bytes(m_bytes: float, codec: str = "fp32") -> float:
@@ -111,7 +122,7 @@ def wire_bytes(m_bytes: float, codec: str = "fp32") -> float:
     return float(c.wire_floats(n) * 4)
 
 
-def faas_time(wl: Workload, w: int, *, channel: str = "s3",
+def faas_time(wl: CostInputs, w: int, *, channel: str = "s3",
               codec: str = "fp32") -> float:
     """§5.3 FaaS(w), over ANY storage transport's Table 6 constants
     (``channel`` accepts every :mod:`repro.core.comm` storage transport
@@ -126,7 +137,7 @@ def faas_time(wl: Workload, w: int, *, channel: str = "s3",
     return t + wl.R * wl.f(w) * per_round
 
 
-def iaas_time(wl: Workload, w: int, *, instance: str = "t2.medium") -> float:
+def iaas_time(wl: CostInputs, w: int, *, instance: str = "t2.medium") -> float:
     bn = TABLE6["B_n"][instance]
     ln = TABLE6["L_n"][instance]
     t = interp_startup(TABLE6["t_I"], w) + wl.s_bytes / w / min(TABLE6["B_S3"], bn)
@@ -134,12 +145,12 @@ def iaas_time(wl: Workload, w: int, *, instance: str = "t2.medium") -> float:
     return t + wl.R * wl.f(w) * per_round
 
 
-def faas_cost(wl: Workload, w: int, t: float, gb: float = 3.0) -> float:
+def faas_cost(wl: CostInputs, w: int, t: float, gb: float = 3.0) -> float:
     from repro.core import cost as pricing
     return pricing.lambda_cost(gb, t * w, w)
 
 
-def iaas_cost(wl: Workload, w: int, t: float,
+def iaas_cost(wl: CostInputs, w: int, t: float,
               instance: str = "t2.medium") -> float:
     from repro.core import cost as pricing
     return pricing.ec2_cost(instance, t, w)
@@ -169,7 +180,7 @@ def estimate_epochs(model, algo, ds, target_loss: float, *, sample_frac=0.1,
 
 # ------------------------------- what-ifs (§5.3.1) ----------------------------
 
-def hybridps_time(wl: Workload, w: int, *, bandwidth: float = 40.5e6,
+def hybridps_time(wl: CostInputs, w: int, *, bandwidth: float = 40.5e6,
                   update_unit: float = 2.7 / 75e6) -> float:
     """Hybrid VM-PS FaaS: 2 transfers + PS update per round."""
     t = interp_startup(TABLE6["t_F"], w) + wl.s_bytes / w / TABLE6["B_S3"]
@@ -178,7 +189,7 @@ def hybridps_time(wl: Workload, w: int, *, bandwidth: float = 40.5e6,
     return t + wl.R * wl.f(w) * per_round
 
 
-def q1_fast_hybrid(wl: Workload, w: int) -> dict:
+def q1_fast_hybrid(wl: CostInputs, w: int) -> dict:
     """Q1: 10 GB/s FaaS<->VM link, no serialization bottleneck."""
     return {
         "hybrid_now": hybridps_time(wl, w),
@@ -188,7 +199,7 @@ def q1_fast_hybrid(wl: Workload, w: int) -> dict:
     }
 
 
-def q2_hot_data(wl: Workload, w: int) -> dict:
+def q2_hot_data(wl: CostInputs, w: int) -> dict:
     """Q2: data pre-resident on a VM; everyone reads from that VM."""
     bn = TABLE6["B_n"]["t2.medium"]
     iaas_hot = iaas_time(wl, w) - wl.s_bytes / w / TABLE6["B_S3"] \

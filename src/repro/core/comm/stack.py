@@ -52,6 +52,9 @@ class CommStack:
                 f"/{self.codec.name}")
 
     def bsp_reduce(self, ctx, updates, tag):
+        # pre-codec update size, for elastic resize feasibility checks
+        # (validate_stack re-applies the codec's wire ratio itself)
+        ctx.last_update_nbytes = int(updates[0].nbytes)
         codec = self.codec
         if codec.is_identity:
             payloads, merged_lossy = updates, None
@@ -75,6 +78,17 @@ class CommStack:
 
     def kvstore(self):
         return self._store
+
+    def rebuilt(self) -> "CommStack":
+        """Re-compose this stack for a resized fleet (DESIGN.md §13): the
+        collective and codec are rebuilt fresh (error-feedback residuals
+        are keyed by worker position, which a resize invalidates) while the
+        TRANSPORT objects -- and with them the accumulated op counters,
+        per-op dollars, and the ASP/SSP kvstore contents -- carry over, so
+        ``service_cost`` keeps billing the whole run."""
+        return CommStack(
+            self.transport, self.collective.name, self.codec.name,
+            store=None if self._store is self.transport else self._store)
 
     def startup(self) -> float:
         """Seconds to provision the comm substrate (Table 6 ``startup``

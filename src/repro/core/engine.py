@@ -61,6 +61,12 @@ class RunResult:
                                   # metered (slow) substrate, whole run
                                   # (WIRE bytes: codecs shrink this exactly)
     comm_cost: float = 0.0        # $ billed by the comm substrate itself
+    scaling_timeline: list = field(default_factory=list)
+                                  # elastic fleets (DESIGN.md §13): one
+                                  # (round, w, resize_cost_s, resize_cost_usd)
+                                  # per membership change, so benchmarks can
+                                  # plot w(t); [] for fixed fleets; a final
+                                  # w=0 entry means the policy stopped the run
 
     @property
     def final_loss(self) -> float:
@@ -84,6 +90,9 @@ class RunResult:
                 "comm_bytes": self.comm_bytes,
                 "comm_time_s": round(self.comm_time, 2),
                 "comm_cost_usd": round(self.comm_cost, 6),
+                "scaling_timeline": [[int(r), int(w), round(s, 3),
+                                      round(c, 6)]
+                                     for r, w, s, c in self.scaling_timeline],
                 "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
                 "error": self.error}
 
@@ -138,10 +147,16 @@ class PoissonPreemptions(FailureProcess):
     def __init__(self, rate_per_hour: float, workers: int, seed: int = 0):
         self.scale = 3600.0 / max(rate_per_hour, 1e-12)
         self._rng = np.random.default_rng(seed ^ 0x5107)
-        self._togo = [float(self._rng.exponential(self.scale))
-                      for _ in range(workers)]   # healthy s until next kill
+        # keyed by STABLE worker id (elastic fleets retire ids for good and
+        # mint fresh ones for joiners, DESIGN.md §13); the initial fleet is
+        # drawn eagerly in id order so fixed fleets stay byte-identical to
+        # the seed-era list-based draws
+        self._togo = {i: float(self._rng.exponential(self.scale))
+                      for i in range(workers)}   # healthy s until next kill
 
     def next_preemption(self, worker, after_t, before_t):
+        if worker not in self._togo:             # elastic joiner: fresh lease
+            self._togo[worker] = float(self._rng.exponential(self.scale))
         window = max(before_t - after_t, 0.0)
         if self._togo[worker] >= window:
             self._togo[worker] -= window
@@ -204,6 +219,13 @@ class CommBackend:
     def service_cost(self, seconds: float) -> float:
         return 0.0
 
+    def rebuilt(self) -> "CommBackend":
+        """A stack re-composed for a resized fleet (DESIGN.md §13): fresh
+        per-worker collective/codec state, same metered transports (their
+        accumulated op counters and $ carry over).  The base backend is
+        width-agnostic and returns itself."""
+        return self
+
 
 # -------------------------------------------------------------- context -----
 
@@ -231,6 +253,21 @@ class SimContext:
     max_epochs: int
     eval_every: int
     invocations: int = 0
+    # ---- elastic-fleet state (DESIGN.md §13; inert for fixed fleets) ----
+    ds_train: Any = None          # kept so resizes can re-partition
+    elastic: Any = None           # ElasticController, or None = fixed fleet
+    worker_ids: np.ndarray = None   # stable identity per position: retired
+                                    # ids are never reused, so scripted kills
+                                    # for a removed worker can never fire on
+                                    # a later joiner
+    joined_at: np.ndarray = None    # sim s each CURRENT worker started
+                                    # billing (0.0 for the initial fleet)
+    retired_cost: float = 0.0       # $ already billed by retired workers
+    next_worker_id: int = 0
+    last_update_nbytes: int = 0     # raw bytes of the latest reduced update
+                                    # vector (EM ships sums+counts, more
+                                    # than the params) -- what resize
+                                    # feasibility checks item limits with
 
     @property
     def w(self) -> int:
@@ -274,18 +311,106 @@ class SimContext:
     def ensure_alive(self, i: int, est: float):
         """Guarantee worker ``i`` survives its next ``est`` seconds of work:
         consume any spot/crash preemption in the window, then rotate ahead of
-        a planned lifetime expiry (the Lambda 15-minute contract)."""
-        t_pre = self.failure.next_preemption(i, float(self.clock[i]),
+        a planned lifetime expiry (the Lambda 15-minute contract).  The
+        failure process is queried by STABLE worker id, not position, so a
+        worker retired by an elastic scale-down takes its pending failures
+        with it."""
+        wid = int(self.worker_ids[i])
+        t_pre = self.failure.next_preemption(wid, float(self.clock[i]),
                                              float(self.clock[i]) + est)
         while t_pre is not None:
             self._rotate(i, max(t_pre, float(self.clock[i])), "restart")
             self.res.preemptions += 1
-            t_pre = self.failure.next_preemption(i, float(self.clock[i]),
+            t_pre = self.failure.next_preemption(wid, float(self.clock[i]),
                                                  float(self.clock[i]) + est)
         if (math.isfinite(self.lifetime)
                 and self.clock[i] - self.invoked_at[i] + est
                 > self.lifetime - self.lifetime_margin):
             self._rotate(i, float(self.clock[i]), "checkpoint")
+
+    # ---- elastic resizing (DESIGN.md §13) ----
+    def maybe_resize(self, rnd: int) -> bool:
+        """Round-boundary scaling-policy check; no-op for fixed fleets.
+        Returns True when the policy says stop (e.g. a cost cap is hit)."""
+        if self.elastic is None:
+            return False
+        return self.elastic.step(self, rnd)
+
+    def elastic_boundary(self, rnd: int, total_rounds: int,
+                         rpe: int) -> tuple:
+        """The shared round-boundary step for round-loop protocols (BSP,
+        LocalSGD): consult the policy and, after a resize, rescale the
+        remaining round budget so the EPOCH count is preserved (a resize
+        re-partitions the data, changing rounds-per-epoch).
+
+        Returns ``(stop, total_rounds, rpe, resized)``; ``resized`` tells
+        the protocol to refresh its own width-dependent locals."""
+        if self.elastic is None or rnd >= total_rounds:
+            return False, total_rounds, rpe, False
+        w0 = self.w
+        if self.maybe_resize(rnd):
+            return True, total_rounds, rpe, False
+        if self.w == w0:
+            return False, total_rounds, rpe, False
+        new_rpe = self.algo.rounds_per_epoch(self.parts[0])
+        total_rounds = rnd + math.ceil((total_rounds - rnd) * new_rpe / rpe)
+        return False, total_rounds, new_rpe, True
+
+    def resize(self, new_w: int, rnd: int) -> None:
+        """Change the fleet to ``new_w`` workers at a sync boundary.
+
+        Scale-down retires the highest positions (their usage so far is
+        billed into ``retired_cost`` and their stable ids are never
+        reused); scale-up mints fresh ids and invokes/provisions joiners at
+        the platform's measured startup constants (clock stall metered
+        under ``breakdown["resize"]``).  Either way the training data is
+        re-partitioned over the new fleet, per-worker state is rebuilt from
+        the current merged parameters (callers resize only at points where
+        ``states[0]`` holds them), and the comm stack is re-composed for
+        the new width (error-feedback codec state resets; metered transport
+        counters carry over).  The change lands in
+        ``RunResult.scaling_timeline``.
+        """
+        old_w = self.w
+        if new_w == old_w:
+            return
+        t_now = float(np.max(self.clock))
+        dt = usd = 0.0
+        if new_w < old_w:
+            gone = np.arange(new_w, old_w)
+            self.retired_cost += float(self.platform.retire_cost(self, gone))
+            for name in ("clock", "invoked_at", "joined_at", "speeds",
+                         "worker_ids"):
+                setattr(self, name, getattr(self, name)[:new_w])
+        else:
+            added = new_w - old_w
+            dt, usd = self.platform.resize_cost(added)
+            ids = np.arange(self.next_worker_id, self.next_worker_id + added)
+            self.next_worker_id += added
+            self.worker_ids = np.concatenate([self.worker_ids, ids])
+            self.clock = np.concatenate(
+                [self.clock, np.full(added, t_now + dt)])
+            self.invoked_at = np.concatenate(
+                [self.invoked_at, np.full(added, t_now + dt)])
+            self.joined_at = np.concatenate(
+                [self.joined_at, np.full(added, t_now)])
+            self.speeds = np.concatenate(
+                [self.speeds, self.platform.joiner_speeds(ids)])
+            self.invocations += added
+            self.meter_add("resize", dt)
+        self.platform.resize_fleet(new_w)
+        params = self.states[0].params          # merged model at the boundary
+        self.parts = partition(self.ds_train, new_w)
+        self.states = [self.algo.init_worker(self.model, params, p)
+                       for p in self.parts]
+        flops = self.platform.worker_flops_array(self.model)
+        rows = self.algo.rows_per_round(self.parts[0])
+        self.c_round = np.asarray(rows * self.model.flops_per_row / flops,
+                                  float)
+        self.comm = self.comm.rebuilt()
+        self.res.workers = new_w
+        self.res.scaling_timeline.append(
+            (int(rnd), int(new_w), float(dt), float(usd)))
 
     # ---- evaluation ----
     def record_eval(self, rnd: int, total_rounds: int, params) -> bool:
@@ -312,14 +437,26 @@ class SimContext:
 
 def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
              target_loss: float | None = None, max_epochs: int = 10,
-             eval_every: int = 1, data_local: bool = False) -> RunResult:
+             eval_every: int = 1, data_local: bool = False,
+             elastic=None) -> RunResult:
     """Run one training scenario: ``platform`` (any
     :class:`~repro.core.platform.Platform` implementation) x ``sync``
-    (protocol object) x ``algo`` on real data/numerics."""
+    (protocol object) x ``algo`` on real data/numerics.  ``elastic`` is an
+    optional :class:`repro.core.elastic.ElasticController` consulted at
+    round boundaries (DESIGN.md §13); ``None`` keeps the fixed-fleet path
+    byte-identical to the pre-elastic engine."""
     import jax
 
+    if elastic is not None:
+        # some policies (schedule:<w@0,...>, plan) pin the INITIAL fleet:
+        # apply it before anything is invoked or billed
+        w0 = elastic.initial_workers(platform.workers)
+        if w0 != platform.workers:
+            platform.resize_fleet(w0)
     w = platform.workers
     res = RunResult(platform.system_name(), algo.name, w)
+    if elastic is not None:
+        res.scaling_timeline.append((0, w, 0.0, 0.0))
     parts = partition(ds_train, w)
     params0 = model.init(jax.random.key(platform.seed))
     mbytes = model_bytes(params0)
@@ -352,7 +489,9 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
         lifetime=platform.lifetime_s(),
         lifetime_margin=platform.lifetime_margin_s(),
         target_loss=target_loss, max_epochs=max_epochs, eval_every=eval_every,
-        invocations=w)
+        invocations=w,
+        ds_train=ds_train, elastic=elastic,
+        worker_ids=np.arange(w), joined_at=np.zeros(w), next_worker_id=w)
 
     try:
         sync.run(ctx)
@@ -361,6 +500,6 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
         return res
 
     res.sim_time = float(np.max(ctx.clock))
-    res.comm_cost = comm.service_cost(res.sim_time)
+    res.comm_cost = ctx.comm.service_cost(res.sim_time)
     res.cost = platform.finalize_cost(ctx)
     return res

@@ -61,6 +61,11 @@ class FleetSpec:
     paper §5 heterogeneity), ``instance``/``gpu`` by IaaS platforms; the
     straggler knobs apply everywhere.  Per-worker sequences must have
     exactly ``workers`` entries (validated lazily, when the fleet is used).
+
+    ``min_workers``/``max_workers`` bound what an elastic scaling policy
+    (DESIGN.md §13) may resize the fleet to; ``None`` means 1 / the
+    engine's :data:`repro.core.elastic.MAX_FLEET`.  They are inert under
+    the default ``scaling="static"``.
     """
     workers: int = 10
     lambda_gb: Any = 3.0                 # FaaS: scalar GB or per-worker tuple
@@ -68,12 +73,25 @@ class FleetSpec:
     gpu: bool = False                    # IaaS: GPU instances (NN models only)
     straggler: float = 1.0               # slowdown of one injected straggler
     backup_invocations: bool = False     # straggler mitigation (FaaS)
+    min_workers: int | None = None       # elastic floor (None = 1)
+    max_workers: int | None = None       # elastic ceiling (None = MAX_FLEET)
 
     def __post_init__(self):
         if isinstance(self.lambda_gb, list):
             _freeze(self, "lambda_gb", tuple(self.lambda_gb))
         if isinstance(self.instance, list):
             _freeze(self, "instance", tuple(self.instance))
+        lo = 1 if self.min_workers is None else int(self.min_workers)
+        hi = self.max_workers
+        if lo < 1:
+            raise ValueError(f"min_workers must be >= 1, got {lo}")
+        if hi is not None and int(hi) < lo:
+            raise ValueError(f"max_workers ({hi}) < min_workers ({lo})")
+        if not (lo <= self.workers <= (int(hi) if hi is not None
+                                       else self.workers)):
+            raise ValueError(
+                f"workers={self.workers} outside the elastic bounds "
+                f"[{lo}, {hi}]")
 
     def gb_array(self) -> np.ndarray:
         return per_worker(self.lambda_gb, self.workers).astype(float)
@@ -85,6 +103,17 @@ class FleetSpec:
         return StragglerProcess(
             factor=self.straggler,
             cap_at_median=self.backup_invocations).speeds(self.workers, seed)
+
+    def joiner_speeds(self, ids, seed: int) -> np.ndarray:
+        """Speed multipliers for elastic joiners, drawn per STABLE worker
+        id (so a given joiner's speed never depends on when it joins).
+        Joiners get the fleet's log-normal jitter but no fresh injected
+        straggler -- the deterministic straggler of ``speeds`` belongs to
+        the initial draw."""
+        return np.asarray([
+            float(np.exp(np.random.default_rng((seed, int(i)))
+                         .normal(0.0, 0.05)))
+            for i in ids])
 
 
 @dataclass(frozen=True)
@@ -283,6 +312,26 @@ class Platform(Protocol):
 
     def finalize_cost(self, ctx) -> float: ...
 
+    # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
+    def resize_fleet(self, new_w: int) -> None:
+        """Reshape the platform's own fleet view to ``new_w`` workers."""
+        ...
+
+    def resize_cost(self, added: int) -> tuple:
+        """``(seconds, dollars)`` to bring ``added`` joiners up: the clock
+        stall the fleet sees, and the directly-attributable $ reported in
+        the scaling timeline (billing itself flows through the meters)."""
+        ...
+
+    def retire_cost(self, ctx, idx) -> float:
+        """$ the workers at positions ``idx`` have accrued when they are
+        retired at a scale-down (their usage leaves the live arrays)."""
+        ...
+
+    def joiner_speeds(self, ids) -> np.ndarray:
+        """Straggler-jitter multipliers for joiners with stable ids."""
+        ...
+
 
 # ------------------------------------------------------------ base class ----
 
@@ -300,6 +349,8 @@ class BasePlatform:
     comm: CommSpec = field(default_factory=CommSpec)
     sync: object = "bsp"                 # bsp|asp|ssp|ssp:<s>|SyncProtocol
     seed: int = 0
+    scaling: object = "static"           # static|schedule:<w@r,..>|smlt|
+                                         #   cost_cap:<$>|ScalingPolicy inst.
 
     def __post_init__(self):
         if isinstance(self.comm, str):   # "s3/scatter_reduce/int8" grammar
@@ -309,13 +360,31 @@ class BasePlatform:
     def train(self, model, algo, ds_train, ds_val, *,
               target_loss: float | None = None, max_epochs: int = 10,
               eval_every: int = 1, data_local: bool = False) -> RunResult:
+        from repro.core.elastic import build_controller
         from repro.core.sync import make_sync
         proto = make_sync(self.sync)
         check_sync_codec(proto, self.comm.codec)
-        return simulate(self, proto, model, algo,
-                        ds_train, ds_val, target_loss=target_loss,
-                        max_epochs=max_epochs, eval_every=eval_every,
-                        data_local=data_local)
+        elastic = build_controller(self.scaling, self.fleet)
+        if elastic is not None and not getattr(proto, "supports_resize",
+                                               False):
+            raise ValueError(
+                f"scaling policy {elastic.policy.name!r} needs a sync "
+                f"protocol that supports mid-run resizing; {proto.name!r} "
+                f"does not declare supports_resize")
+        # elastic runs mutate self.fleet through resize_fleet; restore it
+        # so train() stays repeatable (a second call starts from the
+        # configured width, not wherever the last run ended).  Note that a
+        # policy INSTANCE passed as scaling= keeps its observation state
+        # across calls by design (reading it back is the point -- e.g.
+        # CostCapPolicy.max_round_spend); string specs build fresh.
+        fleet0 = self.fleet
+        try:
+            return simulate(self, proto, model, algo,
+                            ds_train, ds_val, target_loss=target_loss,
+                            max_epochs=max_epochs, eval_every=eval_every,
+                            data_local=data_local, elastic=elastic)
+        finally:
+            self.fleet = fleet0
 
     # ---- spec-derived hooks -------------------------------------------------
     @property
@@ -343,3 +412,27 @@ class BasePlatform:
 
     def init_breakdown(self) -> dict:
         return {"startup": 0.0, "load": 0.0, "compute": 0.0, "comm": 0.0}
+
+    # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
+    def resize_fleet(self, new_w: int) -> None:
+        """Reshape the fleet spec to ``new_w`` workers.  Only homogeneous
+        fleets can resize (per-worker ``lambda_gb``/``instance`` tuples
+        have no meaning for joiners) -- the controller builder rejects
+        heterogeneous fleets before a run starts; this re-checks as a
+        backstop."""
+        import dataclasses
+        for name in ("lambda_gb", "instance"):
+            if isinstance(getattr(self.fleet, name), tuple):
+                raise ValueError(
+                    f"cannot resize a fleet with per-worker {name}: elastic "
+                    f"scaling needs a homogeneous fleet")
+        self.fleet = dataclasses.replace(self.fleet, workers=int(new_w))
+
+    def resize_cost(self, added: int) -> tuple:
+        return 0.0, 0.0
+
+    def retire_cost(self, ctx, idx) -> float:
+        return 0.0
+
+    def joiner_speeds(self, ids) -> np.ndarray:
+        return self.fleet.joiner_speeds(ids, self.seed)

@@ -117,7 +117,7 @@ class FaaSRuntime(BasePlatform):
                  lambda_gb: object = 3.0, straggler: float = 1.0,
                  backup_invocations: bool = False, lifetime: float = LIFETIME,
                  seed: int = 0, preempt_rate: float = 0.0,
-                 preempt_at: tuple = (), *,
+                 preempt_at: tuple = (), scaling: object = "static", *,
                  fleet: FleetSpec | None = None,
                  failure: FailureSpec | None = None,
                  comm: CommSpec | None = None):
@@ -129,7 +129,7 @@ class FaaSRuntime(BasePlatform):
                 rate=preempt_rate, inject=tuple(preempt_at)),
             comm=comm if comm is not None else CommSpec(
                 channel=channel, pattern=pattern),
-            sync=sync, seed=seed)
+            sync=sync, seed=seed, scaling=scaling)
         self.lifetime = lifetime
 
     # ---- legacy flat attributes (read-only views over the specs) ------------
@@ -223,11 +223,33 @@ class FaaSRuntime(BasePlatform):
                 "checkpoint": 0.0}
 
     def finalize_cost(self, ctx) -> float:
-        gb_seconds = float(np.dot(self.fleet.gb_array(), ctx.clock))
+        # Lambda bills execution time only: each live worker's clock minus
+        # when it was (re-)invoked into the fleet (joined_at == 0 for the
+        # whole initial fleet, so fixed fleets bill exactly as before);
+        # retired workers' usage was folded into retired_cost on exit
+        gb_seconds = float(np.dot(self.fleet.gb_array(),
+                                  ctx.clock - ctx.joined_at))
         sim_time = float(np.max(ctx.clock))
         return (gb_seconds * pricing.LAMBDA_GB_S
                 + ctx.invocations * pricing.LAMBDA_REQUEST
-                + ctx.comm.service_cost(sim_time))
+                + ctx.comm.service_cost(sim_time)
+                + ctx.retired_cost)
+
+    # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
+    def resize_cost(self, added: int) -> tuple:
+        """Joiners are re-invoked like any fleet of ``added`` Lambdas:
+        hierarchical-invocation startup seconds (Table 6) plus the request
+        fees and the GB-seconds burned while starting (reported for the
+        timeline; the $ themselves flow through invocations/clock)."""
+        dt = interp_startup(_T_FAAS, added)
+        gb = float(self.fleet.gb_array()[0])
+        usd = added * (pricing.LAMBDA_REQUEST + gb * dt * pricing.LAMBDA_GB_S)
+        return dt, usd
+
+    def retire_cost(self, ctx, idx) -> float:
+        gb = self.fleet.gb_array()[idx]
+        return (float(np.dot(gb, ctx.clock[idx] - ctx.joined_at[idx]))
+                * pricing.LAMBDA_GB_S)
 
 
 class IaaSRuntime(BasePlatform):
@@ -244,7 +266,7 @@ class IaaSRuntime(BasePlatform):
                  gpu: bool = False, straggler: float = 1.0, seed: int = 0,
                  sync: object = "bsp", spot: bool = False,
                  preempt_rate: float = 2.0, preempt_at: tuple = (),
-                 ckpt_channel: str = "s3", *,
+                 ckpt_channel: str = "s3", scaling: object = "static", *,
                  fleet: FleetSpec | None = None,
                  failure: FailureSpec | None = None,
                  comm: CommSpec | None = None):
@@ -256,7 +278,7 @@ class IaaSRuntime(BasePlatform):
                 rate=preempt_rate, inject=tuple(preempt_at), spot=spot),
             comm=comm if comm is not None else CommSpec(
                 ckpt_channel=ckpt_channel),
-            sync=sync, seed=seed)
+            sync=sync, seed=seed, scaling=scaling)
 
     # ---- legacy flat attributes (read-only views over the specs) ------------
     @property
@@ -340,16 +362,52 @@ class IaaSRuntime(BasePlatform):
                                     armed=self.failure.spot,
                                     default_rate=self.SPOT_DEFAULT_RATE)
 
-    def finalize_cost(self, ctx) -> float:
-        sim_time = float(np.max(ctx.clock))
+    def _hourly_total(self) -> float:
+        """The fleet's (spot-discounted) $/hour -- the ONE derivation the
+        bill uses; kept as sum-then-discount so fixed-fleet costs stay
+        byte-identical to the pre-elastic expression."""
         hourly = sum(pricing.EC2_HOURLY[i] for i in self.fleet.instances())
         if self.failure.spot:
             hourly *= self.failure.spot_discount
+        return hourly
+
+    def _hourly_array(self) -> np.ndarray:
+        """Per-worker split of :meth:`_hourly_total` (elastic rebates and
+        retirements only -- both are no-ops on fixed fleets)."""
+        rates = np.asarray([pricing.EC2_HOURLY[i]
+                            for i in self.fleet.instances()])
+        if self.failure.spot:
+            rates = rates * self.failure.spot_discount
+        return rates
+
+    def finalize_cost(self, ctx) -> float:
+        sim_time = float(np.max(ctx.clock))
+        hourly = self._hourly_total()
+        # elastic joiners are only billed from when they were provisioned:
+        # subtract the pre-join span (0.0 for fixed fleets, keeping the
+        # seed-era expression byte-identical); retired VMs were billed into
+        # retired_cost when they left the fleet
+        joined_rebate = float(np.dot(self._hourly_array(),
+                                     ctx.joined_at)) / 3600.0
         # comm substrate dollars: $0 for the default NIC ring, but a pinned
         # storage/PS stack bills its hourly + per-op prices like on FaaS
-        return (hourly / 3600.0 * sim_time
+        return (hourly / 3600.0 * sim_time - joined_rebate
+                + ctx.retired_cost
                 + ctx.ckpt_store.service_cost(sim_time)
                 + ctx.comm.service_cost(sim_time))
+
+    # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
+    def resize_cost(self, added: int) -> tuple:
+        """Provisioning an ``added``-VM extension follows the same Table 6
+        cluster-startup curve as the initial fleet; the reported $ is the
+        provisioning time billed at the (spot-discounted) hourly rate."""
+        dt = interp_startup(_T_IAAS, added)
+        usd = added * float(self._hourly_array()[0]) * dt / 3600.0
+        return dt, usd
+
+    def retire_cost(self, ctx, idx) -> float:
+        span = ctx.clock[idx] - ctx.joined_at[idx]
+        return float(np.dot(self._hourly_array()[idx], span)) / 3600.0
 
 
 # --------------------------------------------------------------- pods -------
@@ -405,7 +463,8 @@ class PodPlatform(BasePlatform):
                  dcn_bandwidth: float = POD_DCN_BANDWIDTH,
                  dcn_latency: float = POD_DCN_LATENCY,
                  chip_hourly: float = pricing.TPU_CHIP_HOURLY,
-                 straggler: float = 1.0, preempt_at: tuple = (), *,
+                 straggler: float = 1.0, preempt_at: tuple = (),
+                 scaling: object = "static", *,
                  fleet: FleetSpec | None = None,
                  failure: FailureSpec | None = None,
                  comm: CommSpec | None = None):
@@ -415,7 +474,7 @@ class PodPlatform(BasePlatform):
             failure=failure if failure is not None else FailureSpec(
                 inject=tuple(preempt_at)),
             comm=comm if comm is not None else CommSpec(),
-            sync=sync, seed=seed)
+            sync=sync, seed=seed, scaling=scaling)
         if chips_per_pod < 1:
             raise ValueError(f"chips_per_pod must be >= 1, got {chips_per_pod}")
         if not 0.0 < mfu <= 1.0:
@@ -483,12 +542,44 @@ class PodPlatform(BasePlatform):
                                     armed=self.failure.spot,
                                     default_rate=self.SPOT_DEFAULT_RATE)
 
-    def finalize_cost(self, ctx) -> float:
-        sim_time = float(np.max(ctx.clock))
+    def _fleet_hourly(self) -> float:
+        """The whole mesh's (spot-discounted) $/hour -- the ONE derivation
+        the bill uses; kept multiply-then-discount so fixed-fleet costs
+        stay byte-identical to the pre-elastic expression."""
         hourly = self.workers * self.chips_per_pod * self.chip_hourly
         if self.failure.spot:
             hourly *= self.failure.spot_discount
+        return hourly
+
+    def _pod_hourly(self) -> float:
+        """Per-pod share of :meth:`_fleet_hourly` (elastic rebates,
+        retirements and joiner provisioning only)."""
+        hourly = self.chips_per_pod * self.chip_hourly
+        if self.failure.spot:
+            hourly *= self.failure.spot_discount
+        return hourly
+
+    def finalize_cost(self, ctx) -> float:
+        sim_time = float(np.max(ctx.clock))
+        hourly = self._fleet_hourly()
+        # elastic pod slices bill from when the reshape granted them
+        # (joined_at == 0 for fixed fleets -- expression unchanged);
+        # released slices were billed into retired_cost at the reshape
+        joined_rebate = self._pod_hourly() * float(np.sum(ctx.joined_at)) \
+            / 3600.0
         # DCN rings bill $0; pinned storage/PS stacks bill their service
-        return (hourly / 3600.0 * sim_time
+        return (hourly / 3600.0 * sim_time - joined_rebate
+                + ctx.retired_cost
                 + ctx.ckpt_store.service_cost(sim_time)
                 + ctx.comm.service_cost(sim_time))
+
+    # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
+    def resize_cost(self, added: int) -> tuple:
+        """Growing the mesh by ``added`` slices pays the pod-provisioning
+        queue/topology bring-up curve for the new slices."""
+        dt = interp_startup(_T_POD, added)
+        return dt, added * self._pod_hourly() * dt / 3600.0
+
+    def retire_cost(self, ctx, idx) -> float:
+        span = ctx.clock[idx] - ctx.joined_at[idx]
+        return self._pod_hourly() * float(np.sum(span)) / 3600.0

@@ -82,20 +82,31 @@ class DiLoCoOuter:
 class SyncProtocol:
     """Base class: a protocol runs the whole training loop over a context."""
     name = "base"
+    #: protocols that call ``ctx.maybe_resize`` at their sync boundaries
+    #: declare True; elastic scaling policies (DESIGN.md §13) refuse to
+    #: pair with protocols that do not
+    supports_resize = False
 
     def run(self, ctx: SimContext) -> None:
         raise NotImplementedError
 
 
 class BSP(SyncProtocol):
-    """Bulk-synchronous rounds with per-round lifetime/failure handling."""
+    """Bulk-synchronous rounds with per-round lifetime/failure handling.
+    Elastic fleets resize at any round boundary (every round IS a sync
+    point); the remaining round budget is rescaled to keep the epoch count,
+    since a resize re-partitions the data and changes rounds-per-epoch."""
     name = BSP_NAME
+    supports_resize = True
 
     def run(self, ctx: SimContext) -> None:
-        algo, states, model = ctx.algo, ctx.states, ctx.model
-        total_rounds = ctx.max_epochs * algo.rounds_per_epoch(ctx.parts[0])
+        algo, model = ctx.algo, ctx.model
+        rpe = algo.rounds_per_epoch(ctx.parts[0])
+        total_rounds = ctx.max_epochs * rpe
         est = float(np.max(ctx.c_round * ctx.speeds)) + 5.0
-        for rnd in range(total_rounds):
+        rnd = 0
+        while rnd < total_rounds:
+            states = ctx.states
             for i in range(ctx.w):
                 ctx.ensure_alive(i, est)
             updates = [algo.local_update(model, st, rnd) for st in states]
@@ -106,6 +117,13 @@ class BSP(SyncProtocol):
             ctx.res.rounds += 1
             if ctx.record_eval(rnd, total_rounds, algo.eval_params(states[0])):
                 break
+            rnd += 1
+            stop, total_rounds, rpe, resized = ctx.elastic_boundary(
+                rnd, total_rounds, rpe)
+            if stop:
+                break
+            if resized:
+                est = float(np.max(ctx.c_round * ctx.speeds)) + 5.0
 
 
 class SSP(SyncProtocol):
@@ -118,8 +136,17 @@ class SSP(SyncProtocol):
     the slowest *active* worker by more than ``s`` parks in a wait set and is
     released (wait time metered under ``"wait"``) when the laggard's next
     update lands.
+
+    Elastic fleets (DESIGN.md §13) resize at eval boundaries, where the
+    global model was just read: the membership change reconciles the
+    staleness clocks -- parked workers are released (wait metered to the
+    boundary), every survivor's completed-round count restarts at 0 so the
+    staleness bound is measured within the new membership, the remaining
+    per-worker round quota is rescaled from the epochs already done, and
+    the event heap is rebuilt over the new fleet.
     """
     name = SSP_NAME
+    supports_resize = True
 
     def __init__(self, staleness: float = 3):
         self.staleness = staleness
@@ -146,6 +173,9 @@ class SSP(SyncProtocol):
         heapq.heapify(heap)
         waiting: dict[int, float] = {}     # worker -> time it parked
         done = 0
+        done_mark = 0          # `done` at the last eval boundary
+        fleet_round = 0.0      # monotone fleet rounds across resize eras
+        epoch_acc = 0.0        # epochs completed across resize eras
         t = float(np.max(ctx.clock))
 
         def active_min() -> int:
@@ -196,9 +226,49 @@ class SSP(SyncProtocol):
                     heapq.heappush(heap, (float(ctx.clock[j]), j))
 
             if done % eval_stride == 0 or done == total:
+                # era-wise progress counters: `done` mixes worker-rounds
+                # from eras with different fleet widths, so policies get a
+                # MONOTONE fleet-round count (a naive done // w regresses
+                # after a scale-up and would make a schedule oscillate,
+                # re-billing joiner startup every swing) and the epoch
+                # estimate accumulates per era
+                span = done - done_mark
+                fleet_round += span / max(w, 1)
+                epoch_acc += span / max(rpe * w, 1)
+                done_mark = done
                 cur, _ = store.get("global")
                 if ctx.record_eval_at(t, unravel(cur)):
                     break
+                if ctx.elastic is not None and done < total:
+                    w_before = w
+                    # resize rebuilds worker state from states[0]: hand it
+                    # the freshly-read global model first
+                    states[0].params = unravel(cur)
+                    if ctx.maybe_resize(int(fleet_round)):
+                        break
+                    if ctx.w != w_before:
+                        # ---- membership change: clock reconciliation ----
+                        for j, t_park in waiting.items():
+                            ctx.meter_add("wait", max(0.0, t - t_park))
+                            if j < ctx.w:
+                                ctx.clock[j] = max(float(ctx.clock[j]), t)
+                        waiting.clear()
+                        epochs_done = epoch_acc
+                        rpe = algo.rounds_per_epoch(ctx.parts[0])
+                        per_worker = int(np.ceil(
+                            max(ctx.max_epochs - epochs_done, 0.0) * rpe))
+                        w = ctx.w
+                        states = ctx.states
+                        rounds = np.zeros(w, dtype=int)
+                        total = done + per_worker * w
+                        eval_stride = w * max(rpe // 4, 1)
+                        # the comm stack was re-composed: seed the (carried
+                        # over or fresh) kvstore with the global model
+                        store = ctx.comm.kvstore()
+                        ctx.meter_add("resize", store.put(
+                            "global", np.asarray(cur, np.float32)))
+                        heap = [(float(ctx.clock[i]), i) for i in range(w)]
+                        heapq.heapify(heap)
 
 
 class ASP(SSP):
@@ -234,8 +304,14 @@ class LocalSGD(SyncProtocol):
     Requires an algorithm with additive updates (``ga_sgd``): MA/ADMM/EM
     updates are not gradients and already amortize communication their own
     way.
+
+    Elastic fleets (DESIGN.md §13) resize at the averaging boundaries
+    only -- between boundaries workers hold un-merged local state that a
+    membership change would discard -- and the per-worker accumulators
+    (and compression residuals) restart at zero for the new fleet.
     """
     name = LOCAL_NAME
+    supports_resize = True
 
     def __init__(self, h: int = 8, outer: str = "ma", compress: bool = False,
                  outer_lr: float = 0.7, outer_momentum: float = 0.9):
@@ -269,15 +345,17 @@ class LocalSGD(SyncProtocol):
     def run(self, ctx: SimContext) -> None:
         from jax.flatten_util import ravel_pytree
 
-        algo, states, model = ctx.algo, ctx.states, ctx.model
+        algo, model = ctx.algo, ctx.model
         if not getattr(algo, "additive_update", False):
             raise ValueError(
                 f"LocalSGD needs an additive-update algorithm (ga_sgd); "
                 f"{algo.name!r} ships non-additive updates -- use bsp/asp/ssp")
-        total_rounds = ctx.max_epochs * algo.rounds_per_epoch(ctx.parts[0])
+        rpe = algo.rounds_per_epoch(ctx.parts[0])
+        total_rounds = ctx.max_epochs * rpe
         est = float(np.max(ctx.c_round * ctx.speeds)) + 5.0
         diloco = self.outer == "diloco"
 
+        states = ctx.states
         flat0, unravel = ravel_pytree(states[0].params)
         base = np.asarray(flat0, np.float32)      # params at last sync
         momentum = np.zeros_like(base) if diloco else None
@@ -285,7 +363,9 @@ class LocalSGD(SyncProtocol):
                     if self.compress else None)
         accs = [np.zeros_like(base) for _ in range(ctx.w)]
 
-        for rnd in range(total_rounds):
+        rnd = 0
+        while rnd < total_rounds:
+            states = ctx.states
             for i in range(ctx.w):
                 ctx.ensure_alive(i, est)
             updates = [algo.local_update(model, st, rnd) for st in states]
@@ -296,6 +376,7 @@ class LocalSGD(SyncProtocol):
             if not ((rnd + 1) % self.h == 0 or rnd == total_rounds - 1):
                 for st, u in zip(states, updates):
                     algo.apply_merged(model, st, u, 1)   # local-only round
+                rnd += 1
                 continue
 
             # ---- sync boundary: one metered merge for the whole block ----
@@ -332,6 +413,18 @@ class LocalSGD(SyncProtocol):
                     else ctx.record_eval_at(float(np.max(ctx.clock)), params))
             if done:
                 break
+            rnd += 1
+            # averaging boundary = the only safe membership change: every
+            # worker just resynced to the merged model
+            stop, total_rounds, rpe, resized = ctx.elastic_boundary(
+                rnd, total_rounds, rpe)
+            if stop:
+                break
+            if resized:
+                est = float(np.max(ctx.c_round * ctx.speeds)) + 5.0
+                accs = [np.zeros_like(base) for _ in range(ctx.w)]
+                if self.compress:
+                    residual = [np.zeros_like(base) for _ in range(ctx.w)]
 
 
 def sync_name(spec) -> str:

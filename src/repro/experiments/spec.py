@@ -33,8 +33,11 @@ PLATFORMS = ("faas", "iaas", "pod")
 #: salt for :meth:`ExperimentSpec.spec_hash`.  Bump whenever a spec field's
 #: DEFAULT VALUE changes (defaults are elided from the hash, so an old
 #: record would otherwise alias the new semantics); adding fields needs no
-#: bump.
-HASH_SCHEMA = "h2"
+#: bump.  h3: the elastic-fleet fields (``scaling`` on the spec,
+#: ``min_workers``/``max_workers`` on FleetSpec) landed together with the
+#: ``scaling_timeline`` RunResult key, so pre-elastic records are re-keyed
+#: rather than served with the old result schema.
+HASH_SCHEMA = "h3"
 
 
 @dataclass(frozen=True)
@@ -51,6 +54,10 @@ class ExperimentSpec:
                                            # e.g. "s3/scatter_reduce/int8"
     sync: str = "bsp"                      # bsp | asp | ssp:<s>
                                            #   | local:<H>[:c8] | diloco:<H>[:c8]
+    scaling: str = "static"                # elastic fleet policy (§13):
+                                           # static | schedule:<w@round,...>
+                                           #   | smlt[:<f>] | cost_cap:<$>
+                                           #   | plan[:cheapest|fastest]
     model: str = "lr"                      # any core.workloads name: a study
                                            # stand-in (lr/svm/...) or a real
                                            # arch (smollm_360m, mamba2_370m...)
@@ -124,6 +131,42 @@ class ExperimentSpec:
         from repro.core.platform import check_sync_codec
         from repro.core.sync import make_sync
         check_sync_codec(make_sync(self.sync), self.comm.codec)
+        # elastic scaling (§13): parse the policy grammar eagerly, reject
+        # sync protocols without a resize path and heterogeneous fleets
+        from repro.core.elastic import build_controller, validate_scaling
+        if not isinstance(self.scaling, str):
+            raise ValueError(
+                f"ExperimentSpec.scaling must be a policy string (specs are "
+                f"JSON-round-trippable); pass policy INSTANCES to the "
+                f"platform classes directly (got {type(self.scaling)})")
+        validate_scaling(self.scaling)
+        if self.scaling.startswith("plan"):
+            if self.platform not in ("faas", "iaas"):
+                raise ValueError(
+                    f"scaling='plan' covers the analytic model's platforms "
+                    f"(faas/iaas), not {self.platform!r}")
+        else:
+            controller = build_controller(self.scaling, self.fleet)
+            if controller is not None and not make_sync(
+                    self.sync).supports_resize:
+                raise ValueError(
+                    f"scaling={self.scaling!r} resizes the fleet mid-run, "
+                    f"which sync={self.sync!r} does not support "
+                    f"(supports_resize=False)")
+            # a declarative schedule names every width it will run at --
+            # validate the comm stack against each one NOW (a round-0 pin
+            # to a width whose scatter-reduce chunk busts a per-item
+            # transport limit should fail here, not mid-simulation)
+            from repro.core.elastic import SchedulePolicy
+            if controller is not None and isinstance(controller.policy,
+                                                     SchedulePolicy):
+                for _rnd, w in controller.policy.plan:
+                    self.comm.validate(
+                        platform=self.platform,
+                        model_bytes=lambda: estimate_update_bytes(
+                            self.model, self.dataset, self.model_args),
+                        workers=max(controller.min_w,
+                                    min(controller.max_w, w)))
 
     # ---- serialization ------------------------------------------------------
     def to_dict(self) -> dict:
@@ -174,18 +217,30 @@ class ExperimentSpec:
 
     # ---- builders -----------------------------------------------------------
     def build_runtime(self):
-        """The platform object a hand-written call would construct."""
+        """The platform object a hand-written call would construct.
+        ``scaling="plan[:objective]"`` resolves HERE: the analytic planner
+        picks the initial width for this spec's platform, and the run
+        itself is static (DESIGN.md §13)."""
+        fleet, scaling = self.fleet, self.scaling
+        if scaling.startswith("plan"):
+            from repro.core.elastic import plan_initial_workers
+            _, _, objective = scaling.partition(":")
+            fleet = replace(fleet, workers=plan_initial_workers(
+                self, objective or "cheapest"))
+            scaling = "static"
         if self.platform == "faas":
             return FaaSRuntime(
-                fleet=self.fleet, failure=self.failure, comm=self.comm,
-                sync=self.sync, seed=self.seed,
+                fleet=fleet, failure=self.failure, comm=self.comm,
+                sync=self.sync, seed=self.seed, scaling=scaling,
                 lifetime=LIFETIME if self.lifetime is None else self.lifetime)
         if self.platform == "pod":
-            return PodPlatform(fleet=self.fleet, failure=self.failure,
+            return PodPlatform(fleet=fleet, failure=self.failure,
                                comm=self.comm, sync=self.sync,
-                               seed=self.seed, **self.platform_args)
-        return IaaSRuntime(fleet=self.fleet, failure=self.failure,
-                           comm=self.comm, sync=self.sync, seed=self.seed)
+                               seed=self.seed, scaling=scaling,
+                               **self.platform_args)
+        return IaaSRuntime(fleet=fleet, failure=self.failure,
+                           comm=self.comm, sync=self.sync, seed=self.seed,
+                           scaling=scaling)
 
     def build_workload(self):
         """(workload, algo, ds_train, ds_val) via the unified

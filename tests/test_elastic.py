@@ -1,0 +1,397 @@
+"""Elastic fleet control (DESIGN.md §13): static-parity pinning, scheduled
+resizes under scripted preemptions, the cost-cap budget invariant, the
+analytic planner's paper crossover, and the spec/CLI surface."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.algorithms import make_algorithm
+from repro.core.elastic import (
+    CostCapPolicy, SchedulePolicy, ScalingPolicy, SMLTPolicy, StaticPolicy,
+    Telemetry, build_controller, make_policy, plan, plan_initial_workers,
+)
+from repro.core.mlmodels import make_study_model
+from repro.core.platform import FailureSpec, FleetSpec
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime, PodPlatform
+from repro.data.synthetic import make_dataset, train_val_split
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = make_dataset("higgs", rows=4_000, seed=0)
+    tr, va = train_val_split(ds)
+    model = make_study_model("lr", tr)
+    algo = make_algorithm("ga_sgd", lr=0.2, batch_size=512)
+    return model, algo, tr, va
+
+
+def _hist(res):
+    return [(float(t), float(l)) for t, l in res.history]
+
+
+# ------------------------------------------------------------ (a) parity ----
+
+@pytest.mark.parametrize("make", [
+    lambda **kw: FaaSRuntime(workers=3, **kw),
+    lambda **kw: IaaSRuntime(workers=3, **kw),
+    lambda **kw: PodPlatform(pods=3, **kw),
+], ids=["faas", "iaas", "pod"])
+def test_static_parity_pinned_on_all_platforms(workload, make):
+    """scaling='static' (the default) is byte-identical to a fixed fleet,
+    AND an active controller that never resizes (a constant schedule)
+    perturbs nothing but the timeline -- the controller only reads."""
+    model, algo, tr, va = workload
+    base = make().train(model, algo, tr, va, max_epochs=2)
+    static = make(scaling="static").train(model, algo, tr, va, max_epochs=2)
+    pinned = make(scaling="schedule:3@0").train(model, algo, tr, va,
+                                                max_epochs=2)
+    assert base.scaling_timeline == [] == static.scaling_timeline
+    assert pinned.scaling_timeline == [(0, 3, 0.0, 0.0)]
+    for other in (static, pinned):
+        assert _hist(other) == _hist(base)
+        assert other.sim_time == base.sim_time
+        assert other.cost == base.cost
+        assert other.comm_bytes == base.comm_bytes
+        assert other.breakdown == base.breakdown
+
+
+def test_static_policy_builds_no_controller():
+    assert build_controller("static", FleetSpec()) is None
+    assert build_controller(StaticPolicy(), FleetSpec()) is None
+    assert build_controller("smlt", FleetSpec()) is not None
+    assert isinstance(SchedulePolicy.parse("2@0,8@5"), ScalingPolicy)
+
+
+# -------------------------------------------- (b) schedule x preemptions ----
+
+def test_schedule_resize_under_injected_preemption(workload):
+    """A worker retired by a scale-down takes its scripted spot kill with
+    it: a later scale-up mints FRESH worker ids, so the preemption never
+    fires -- while the same kill on a fixed fleet does."""
+    model, algo, tr, va = workload
+    sched = "schedule:4@0,2@1,4@6"
+
+    dry = FaaSRuntime(workers=4, scaling=sched).train(
+        model, algo, tr, va, max_epochs=10)
+    assert not dry.error
+    widths = [w for _r, w, _s, _c in dry.scaling_timeline]
+    assert widths[:3] == [4, 2, 4]            # down at round 1, up at round 6
+    up = dry.scaling_timeline[2]
+    assert up[2] > 0.0 and up[3] > 0.0        # joiner startup billed
+
+    # a kill for worker id 3, scheduled well after its retirement window
+    t_kill = dry.sim_time + 1.0
+    killed_static = FaaSRuntime(
+        workers=4, preempt_at=((3, t_kill),)).train(
+        model, algo, tr, va, max_epochs=10)
+    assert killed_static.preemptions == 1     # fixed fleet: the kill lands
+    killed_elastic = FaaSRuntime(
+        workers=4, scaling=sched, preempt_at=((3, t_kill),)).train(
+        model, algo, tr, va, max_epochs=10)
+    assert killed_elastic.preemptions == 0    # id 3 is gone; ids 4/5 joined
+    assert killed_elastic.workers == 4        # ...and the fleet is back to 4
+    assert _hist(killed_elastic) == _hist(dry)   # kill truly never fired
+
+
+def test_resize_budget_rescales_epochs(workload):
+    """Scaling 4 -> 2 halves the fleet and re-partitions: rounds-per-epoch
+    doubles, and the engine stretches the round budget to keep the epoch
+    count instead of silently training less."""
+    model, algo, tr, va = workload
+    static = FaaSRuntime(workers=4).train(model, algo, tr, va, max_epochs=6)
+    shrunk = FaaSRuntime(workers=4, scaling="schedule:2@2").train(
+        model, algo, tr, va, max_epochs=6)
+    assert shrunk.rounds > static.rounds      # narrower fleet, more rounds
+    assert shrunk.scaling_timeline[-1][1] == 2
+
+
+def test_iaas_spot_retired_worker_not_billed_after_exit(workload):
+    """IaaS scale-down folds the retired VMs' usage into the bill exactly
+    once: the elastic run must cost less than the same fixed fleet."""
+    model, algo, tr, va = workload
+    fixed = IaaSRuntime(workers=4).train(model, algo, tr, va, max_epochs=4)
+    down = IaaSRuntime(workers=4, scaling="schedule:2@1").train(
+        model, algo, tr, va, max_epochs=4)
+    assert not down.error
+    assert down.cost < fixed.cost
+
+
+def test_ssp_membership_reconciliation(workload):
+    """SSP resizes at eval boundaries: the run completes, the staleness
+    bound holds within the new membership, and w(t) is recorded."""
+    model, algo, tr, va = workload
+    res = FaaSRuntime(workers=4, sync="ssp:2",
+                      scaling="schedule:4@0,2@1").train(
+        model, algo, tr, va, max_epochs=4)
+    assert not res.error and res.rounds > 0
+    assert any(w == 2 for _r, w, _s, _c in res.scaling_timeline)
+    assert res.max_staleness <= 2
+
+
+def test_ssp_scale_up_does_not_oscillate(workload):
+    """The policy's round counter under SSP must be MONOTONE across a
+    scale-up: `done // current_w` regresses after widening (16 rounds at
+    w=8 reads as round 2), which would un-apply a schedule entry and
+    flip-flop the fleet, re-billing joiner startup every swing."""
+    model, algo, tr, va = workload
+    res = FaaSRuntime(workers=2, sync="ssp:2",
+                      scaling="schedule:2@0,8@5").train(
+        model, algo, tr, va, max_epochs=6)
+    assert not res.error
+    rounds_seq = [r for r, _w, _s, _c in res.scaling_timeline]
+    assert rounds_seq == sorted(rounds_seq)
+    assert [w for _r, w, _s, _c in res.scaling_timeline] == [2, 8]
+
+
+def test_resize_skipped_when_transport_item_limit_would_break():
+    """A scale-down grows the scatter-reduce chunk: a target width whose
+    per-item size exceeds the transport limit (DynamoDB 400 KB) is skipped
+    -- the fleet keeps its width -- instead of aborting the run mid-flight
+    with ChannelItemTooLarge."""
+    from repro.core.platform import CommSpec
+
+    ds = make_dataset("higgs", rows=8_000, seed=0)
+    tr, va = train_val_split(ds)
+    model = make_study_model("kmeans", tr, k=3_500)   # ~406 KB update:
+                                                      # > 400 KB whole,
+                                                      # < 400 KB halved
+    algo = make_algorithm("kmeans_em")
+    res = FaaSRuntime(
+        workers=2, scaling="schedule:1@1",
+        fleet=FleetSpec(workers=2, min_workers=1),
+        comm=CommSpec(channel="dynamodb", pattern="scatter_reduce")).train(
+        model, algo, tr, va, max_epochs=3)
+    assert not res.error                     # the run survived
+    assert res.workers == 2                  # the infeasible shrink was skipped
+    assert all(w == 2 for _r, w, _s, _c in res.scaling_timeline)
+
+
+def test_smlt_survives_sparse_eval_cadence(workload):
+    """Under eval_every > 1 some boundaries see no fresh eval; the
+    controller must report loss_delta=None there (no signal), not a stale
+    0.0 that SMLT would read as a stall and shed the whole fleet on."""
+    model, algo, tr, va = workload
+    r1 = FaaSRuntime(workers=4, scaling="smlt").train(
+        model, algo, tr, va, max_epochs=4, eval_every=1)
+    r2 = FaaSRuntime(workers=4, scaling="smlt").train(
+        model, algo, tr, va, max_epochs=4, eval_every=2)
+    assert max(w for _r, w, _s, _c in r1.scaling_timeline) == \
+        max(w for _r, w, _s, _c in r2.scaling_timeline)   # still widens
+    assert all(w >= 2 for _r, w, _s, _c in r2.scaling_timeline)
+
+
+def test_elastic_train_is_repeatable(workload):
+    """An elastic run must not leave the platform's fleet at the final
+    width: a second train() on the same object reproduces the first."""
+    model, algo, tr, va = workload
+    rt = FaaSRuntime(workers=4, scaling="schedule:2@3")
+    r1 = rt.train(model, algo, tr, va, max_epochs=3)
+    r2 = rt.train(model, algo, tr, va, max_epochs=3)
+    assert rt.workers == 4
+    assert _hist(r1) == _hist(r2)
+    assert r1.scaling_timeline == r2.scaling_timeline
+
+
+def test_schedule_widths_validated_at_spec_time():
+    """Every width a schedule names is checked against the comm stack's
+    per-item limits eagerly: a round-0 pin to a width whose scatter-reduce
+    chunk busts DynamoDB's 400 KB must fail at spec construction, not
+    mid-simulation."""
+    from repro.experiments import ExperimentSpec
+    from repro.core.platform import CommSpec
+
+    kw = dict(model="kmeans", model_args={"k": 3_500},
+              algorithm="kmeans_em", rows=8_000,
+              comm=CommSpec(channel="dynamodb", pattern="scatter_reduce"),
+              fleet=FleetSpec(workers=2, min_workers=1))
+    ExperimentSpec(**kw)                                  # w=2 chunks fit
+    with pytest.raises(ValueError, match="dynamodb"):
+        ExperimentSpec(scaling="schedule:1@0", **kw)      # w=1 busts 400 KB
+
+
+def test_planner_prices_real_instance_even_off_nic_table():
+    """Instances outside the analytic NIC table fall back to t2.medium's
+    Table 6 constants for TIME only; the COST keeps the real hourly rate
+    (c5.xlarge is ~3.7x t2.medium) and the option says so."""
+    opts_cheap = plan("lr_higgs", "fastest", platforms=("iaas",),
+                      workers=(10,), instance="t2.medium")
+    opts_big = plan("lr_higgs", "fastest", platforms=("iaas",),
+                    workers=(10,), instance="c5.xlarge")
+    assert opts_big[0].time_s == opts_cheap[0].time_s
+    assert opts_big[0].cost_usd > 3 * opts_cheap[0].cost_usd
+    assert "approximated" in opts_big[0].note
+
+
+def test_elastic_rejects_unsupported_pairings():
+    with pytest.raises(ValueError, match="homogeneous"):
+        build_controller("smlt", FleetSpec(workers=2, lambda_gb=(3.0, 1.0)))
+    with pytest.raises(ValueError, match="<workers>@<round>"):
+        make_policy("schedule:oops")
+    with pytest.raises(KeyError, match="unknown scaling policy"):
+        make_policy("warp9")
+    with pytest.raises(ValueError, match="spec level"):
+        make_policy("plan")
+    with pytest.raises(ValueError):
+        FleetSpec(workers=4, max_workers=2)
+
+
+# ------------------------------------------------- (c) cost_cap property ----
+
+def test_cost_cap_stop_is_recorded(workload):
+    model, algo, tr, va = workload
+    policy = CostCapPolicy(1e-4)              # far below one round's spend
+    res = FaaSRuntime(workers=4, scaling=policy).train(
+        model, algo, tr, va, max_epochs=6)
+    assert res.scaling_timeline[-1][1] == 0   # the stop is in the timeline
+    assert res.cost <= 1e-4 + policy.max_round_spend + 1e-12
+
+
+def test_cost_cap_never_overshoots_by_more_than_one_round(workload):
+    """Property: for ANY budget, total $ <= budget + one round's spend
+    (the policy only lets a round start while still under budget)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    model, algo, tr, va = workload
+
+    @settings(max_examples=8, deadline=None)
+    @given(budget=st.floats(min_value=1e-5, max_value=2e-2),
+           workers=st.integers(min_value=2, max_value=6))
+    def prop(budget, workers):
+        policy = CostCapPolicy(budget)
+        res = FaaSRuntime(workers=workers, scaling=policy,
+                          fleet=FleetSpec(workers=workers,
+                                          min_workers=1)).train(
+            model, algo, tr, va, max_epochs=4)
+        assert res.cost <= budget + policy.max_round_spend + 1e-12
+
+    prop()
+
+
+def test_smlt_widens_then_narrows():
+    """Unit-level SMLT contract on hand-built telemetry: improving rate ->
+    widen; stalled rate -> step back; decayed loss delta -> narrow."""
+    pol = SMLTPolicy(factor=2)
+
+    def tel(rnd, w, delta, rt=1.0):
+        return Telemetry(round=rnd, workers=w, loss=1.0, loss_delta=delta,
+                         round_time=rt, comm_share=0.2, cost_so_far=0.0,
+                         sim_time=10.0, min_workers=1, max_workers=64)
+
+    assert pol.observe(tel(1, 4, 0.10)) == 8        # first signal: widen
+    assert pol.observe(tel(2, 8, 0.25)) == 16       # rate improved: widen
+    assert pol.observe(tel(3, 16, 0.20)) == 8       # stalled: step back
+    assert pol.observe(tel(4, 8, 0.20)) == 8        # hold
+    assert pol.observe(tel(5, 8, 0.01)) == 4        # efficiency decayed
+
+
+# ---------------------------------------------------------- (d) planner -----
+
+def test_planner_reproduces_paper_crossover():
+    """The paper's headline: FaaS pays off for fast-converging, comm-light
+    LR/Higgs; comm-heavy MobileNet belongs on IaaS -- under BOTH
+    objectives."""
+    for objective in ("cheapest", "fastest"):
+        assert plan("lr_higgs", objective)[0].platform == "faas", objective
+        assert plan("mobilenet_cifar10", objective)[0].platform == "iaas", \
+            objective
+
+
+def test_planner_constraints_and_ranking():
+    opts = plan("lr_higgs", "cheapest")
+    assert all(o.feasible for o in opts if o is opts[0])
+    assert opts == sorted(opts, key=lambda o: (not o.feasible, o.cost_usd))
+    # unconstrained cheapest is a tiny IaaS fleet (VM-seconds are ~4x
+    # cheaper than 3GB-Lambda-seconds) -- the auto-deadline is what asks
+    # the paper's question "at a competitive degree of parallelism"
+    import math
+    assert plan("lr_higgs", "cheapest",
+                deadline_s=math.inf)[0].platform == "iaas"
+    tight = plan("lr_higgs", "fastest", budget_usd=1e-6)
+    assert not tight[0].feasible and "budget" in tight[0].note
+    with pytest.raises(KeyError, match="unknown planner workload"):
+        plan("gpt17_800t", "cheapest")
+    with pytest.raises(ValueError, match="objective"):
+        plan("lr_higgs", "best_vibes")
+
+
+def test_plan_scaling_picks_initial_fleet():
+    from repro.experiments import ExperimentSpec
+    spec = ExperimentSpec(rows=3_000, max_epochs=2, scaling="plan",
+                          fleet=FleetSpec(workers=4, max_workers=25))
+    rt = spec.build_runtime()
+    assert rt.scaling == "static"             # the run itself is fixed
+    assert 1 <= rt.workers <= 25
+    with pytest.raises(ValueError, match="faas/iaas"):
+        ExperimentSpec(platform="pod", scaling="plan")
+
+
+# ------------------------------------------------------- spec + CLI layer ---
+
+def test_spec_round_trip_and_hash_with_scaling():
+    from repro.experiments import ExperimentSpec
+    spec = ExperimentSpec(name="el", rows=3_000, max_epochs=2,
+                          scaling="schedule:2@0,6@3",
+                          fleet=FleetSpec(workers=4, min_workers=2,
+                                          max_workers=8))
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert spec.spec_hash() != spec.with_(scaling="static").spec_hash()
+    # defaults elide: an all-default spec hashes schema + {} (h3 re-key)
+    import hashlib
+    from repro.experiments.spec import HASH_SCHEMA
+    assert HASH_SCHEMA == "h3"
+    assert ExperimentSpec().spec_hash() == \
+        hashlib.sha256(f"{HASH_SCHEMA}{{}}".encode()).hexdigest()[:16]
+
+
+def test_resizeless_protocol_refuses_elastic_policies(workload):
+    """Every built-in protocol declares supports_resize; a custom one that
+    does not (the base-class default) must be refused up front rather than
+    resized mid-flight."""
+    from repro.core.sync import SyncProtocol
+
+    class FrozenProto(SyncProtocol):
+        name = "frozen"
+
+        def run(self, ctx):               # pragma: no cover - never reached
+            raise AssertionError
+
+    model, algo, tr, va = workload
+    with pytest.raises(ValueError, match="supports_resize"):
+        FaaSRuntime(workers=2, sync=FrozenProto(), scaling="smlt").train(
+            model, algo, tr, va, max_epochs=1)
+
+
+def test_run_experiment_records_scaling_timeline(tmp_path):
+    from repro.experiments import ExperimentSpec, run_experiment
+    spec = ExperimentSpec(name="tl", rows=3_000, max_epochs=4,
+                          scaling="schedule:2@0,4@2",
+                          fleet=FleetSpec(workers=2, max_workers=8))
+    rec = run_experiment(spec, cache_dir=tmp_path)
+    tl = rec.result["scaling_timeline"]
+    assert [w for _r, w, _s, _c in tl][:2] == [2, 4]
+    d = json.loads(Path(rec.path).read_text())
+    assert d["result"]["scaling_timeline"] == tl
+
+
+def test_cli_plan_smoke():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "plan", "lr_higgs",
+         "--objective", "cheapest"],
+        cwd=ROOT, env=ENV, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    pick = out.stdout.splitlines()[2]
+    assert "faas" in pick and "<- pick" in pick
+    listing = subprocess.run(
+        [sys.executable, "-m", "repro", "list"],
+        cwd=ROOT, env=ENV, capture_output=True, text=True, timeout=120)
+    assert "scaling policies" in listing.stdout
+    assert "elastic_axis" in listing.stdout

@@ -190,7 +190,8 @@ def test_sweep_duplicate_points_run_once(tmp_path):
 def test_presets_build_valid_specs():
     assert set(PRESETS) == {"fig10_breakdown", "fig11_end2end", "fig8_sync",
                             "spot_vs_ondemand", "hetero_fleet",
-                            "faas_vs_pod", "pod_local_sgd", "comm_axis"}
+                            "faas_vs_pod", "pod_local_sgd", "comm_axis",
+                            "elastic_axis"}
     for name, preset in PRESETS.items():
         specs = preset.build(True)
         assert specs, name
