@@ -1,0 +1,68 @@
+"""Serving frontier (DESIGN.md §14): cost vs p99 for FaaS / IaaS / pod
+across arrival shapes — trickle, sustained, flash crowd.
+
+Runs the same grid as ``python -m repro serve --grid`` (provisioned fleets
+analytically sized per shape via ``provision_for``) and asserts the
+acceptance story: FaaS wins the trickle and flash cells on $ (scale to
+zero), provisioned fleets win sustained traffic on both $ and p99.  Also
+writes ``BENCH_serving.json`` at the repo root with the full frontier.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.experiments import frontier
+from repro.experiments.serving import FRONTIER_ARRIVALS
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run(quick: bool = True):
+    duration = 300.0 if quick else 3600.0
+    recs = frontier(duration_s=duration)
+    rows = []
+    for rec in recs:
+        r = rec.result
+        rows.append({
+            "name": rec.spec.name,
+            "us_per_call": r["p99_ms"] * 1e3,          # p99 as the latency col
+            "platform": rec.spec.platform, "arrival": rec.spec.arrival,
+            "workers": r["workers0"], "requests": r["requests"],
+            "completed": r["completed"], "cold_starts": r["cold_starts"],
+            "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+            "cost_usd": r["cost_usd"], "usd_per_1k": r["usd_per_1k"],
+            "derived": (f"w={r['workers0']};req={r['requests']};"
+                        f"cold={r['cold_starts']};p99={r['p99_ms']:.1f}ms;"
+                        f"cost=${r['cost_usd']:.5f}"),
+        })
+        assert r["completed"] + r["rejected"] + r["dropped"] == r["requests"]
+
+    cell = {(row["platform"], row["arrival"]): row for row in rows}
+    trickle, sustained, flash = FRONTIER_ARRIVALS
+    # scale-to-zero wins the sparse and bursty cells on $
+    for shape in (trickle, flash):
+        for fat in ("iaas", "pod"):
+            assert cell[("faas", shape)]["cost_usd"] < \
+                cell[(fat, shape)]["cost_usd"], (shape, fat)
+    # provisioned + batched wins sustained traffic on $ AND p99
+    assert cell[("iaas", sustained)]["cost_usd"] < \
+        cell[("faas", sustained)]["cost_usd"]
+    assert min(cell[("iaas", sustained)]["p99_ms"],
+               cell[("pod", sustained)]["p99_ms"]) < \
+        cell[("faas", sustained)]["p99_ms"]
+
+    (ROOT / "BENCH_serving.json").write_text(json.dumps(
+        {"schema": "repro.bench.serving/v1", "duration_s": duration,
+         "arrivals": list(FRONTIER_ARRIVALS), "rows": rows},
+        indent=1, default=float))
+    return emit(rows, "bench_serving")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    run(quick=ap.parse_args().quick)

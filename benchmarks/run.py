@@ -22,6 +22,7 @@ MODULES = [
     "bench_analytical",    # Fig 13/14/15
     "bench_pods",          # §11 three-infrastructure study + LocalSGD sweep
     "bench_elastic",       # §13 elastic fleets: w(t) per policy + planner
+    "bench_serving",       # §14 serving frontier: cost vs p99 per arrival
     "bench_roofline",      # §Roofline (dry-run derived)
     "bench_crosspod",      # §Perf paper-technique headline
     "bench_kernels",       # kernel microbench

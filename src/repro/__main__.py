@@ -121,6 +121,10 @@ def cmd_list(args) -> int:
     print(f"  codecs:      {', '.join(list_codecs())}")
     print(f"\nscaling policies (--set scaling=..., DESIGN.md §13):")
     print(f"  {', '.join(list_policies())}")
+    from repro.serving.arrivals import list_arrivals
+    print(f"\narrival processes (repro serve --arrival ..., DESIGN.md §14):")
+    for line in list_arrivals().values():
+        print(f"  {line}")
     return 0
 
 
@@ -156,6 +160,62 @@ def cmd_plan(args) -> int:
         print("# no feasible option under the given constraints",
               file=sys.stderr)
         return 1
+    return 0
+
+
+def _print_serve_records(records) -> None:
+    wname = max(len(r.spec.name or r.spec.platform) for r in records)
+    print(f"{'name':<{wname}s} {'w':>5s} {'req':>6s} {'done':>6s} "
+          f"{'cold':>5s} {'p50_ms':>10s} {'p99_ms':>10s} {'cost_$':>10s} "
+          f"{'$/1k':>9s}  note")
+    for r in records:
+        d = r.result
+        name = r.spec.name or r.spec.platform
+        p50 = d.get("p50_ms")
+        p99 = d.get("p99_ms")
+        perk = d.get("usd_per_1k")
+        print(f"{name:<{wname}s} {d.get('workers0', 0):5d} "
+              f"{d.get('requests', 0):6d} {d.get('completed', 0):6d} "
+              f"{d.get('cold_starts', 0):5d} "
+              f"{p50 if p50 is not None else float('nan'):10.1f} "
+              f"{p99 if p99 is not None else float('nan'):10.1f} "
+              f"{d.get('cost_usd', 0):10.5f} "
+              f"{perk if perk is not None else float('nan'):9.4f}  "
+              f"{'cached' if r.cached else ''}")
+
+
+def cmd_serve(args) -> int:
+    """Request-driven serving simulator (DESIGN.md §14)."""
+    from repro.experiments.serving import (
+        ServingSpec, frontier, run_serving)
+    cache = None if args.no_cache else args.cache
+    overrides = _parse_set(args.set or [])
+    if args.grid:
+        records = frontier(duration_s=args.duration_s, reduced=args.reduced,
+                           cache_dir=cache, force=args.force)
+        print("# cost-vs-p99 frontier: FaaS vs IaaS vs pod x arrival shape")
+    else:
+        if args.target:
+            path = Path(args.target)
+            if not path.exists():
+                raise SystemExit(f"spec file not found: {args.target}")
+            data = json.loads(path.read_text())
+            items = data if isinstance(data, list) else [data]
+            specs = [ServingSpec.from_dict(_unwrap(d)) for d in items]
+        else:
+            specs = [ServingSpec(name="serve", arrival=args.arrival,
+                                 duration_s=args.duration_s,
+                                 reduced=args.reduced)]
+        if overrides:
+            specs = [s.with_(**overrides) for s in specs]
+        records = [run_serving(s, cache_dir=cache, force=args.force)
+                   for s in specs]
+    _print_serve_records(records)
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(
+            json.dumps([r.to_dict() for r in records], indent=1))
+        print(f"# {len(records)} record(s) -> {args.out}", file=sys.stderr)
     return 0
 
 
@@ -247,6 +307,38 @@ def main(argv: list[str] | None = None) -> int:
                         help="fleet widths to sweep (default: the Fig-11 "
                              "axis 1..300)")
     plan_p.set_defaults(fn=cmd_plan)
+
+    serve_p = sub.add_parser(
+        "serve",
+        help="request-driven serving simulator (DESIGN.md §14): open-loop "
+             "traffic, cold starts, continuous batching")
+    serve_p.add_argument("target", nargs="?", default=None,
+                         help="ServingSpec JSON file (default: a single "
+                              "built-in spec shaped by --arrival)")
+    serve_p.add_argument("--grid", action="store_true",
+                         help="run the cost-vs-p99 frontier: faas/iaas/pod "
+                              "x trickle/sustained/flash")
+    serve_p.add_argument("--arrival", default="poisson:1",
+                         metavar="PROCESS",
+                         help="arrival grammar for the default spec "
+                              "(poisson:<qps> | diurnal:... | flash:... | "
+                              "trace:<file>)")
+    serve_p.add_argument("--duration-s", type=float, default=300.0,
+                         help="simulated traffic window (default 300)")
+    serve_p.add_argument("--reduced", action="store_true",
+                         help="serve the CPU-sized reduced arch variant")
+    serve_p.add_argument("--set", action="append", metavar="FIELD=VALUE",
+                         help="override a ServingSpec field (dotted paths "
+                              "reach the fleet)")
+    serve_p.add_argument("--cache", default=str(DEFAULT_CACHE),
+                         help="record cache dir (default experiments/runs/)")
+    serve_p.add_argument("--no-cache", action="store_true",
+                         help="do not read or write the record cache")
+    serve_p.add_argument("--force", action="store_true",
+                         help="re-run even on a cache hit")
+    serve_p.add_argument("--out", default=None,
+                         help="also write all records to this JSON file")
+    serve_p.set_defaults(fn=cmd_serve)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -31,4 +31,6 @@ from repro.core.elastic.policies import (  # noqa: F401
     ScalingPolicy, SMLTPolicy, StaticPolicy, build_controller, list_policies,
     make_policy, validate_scaling,
 )
-from repro.core.elastic.telemetry import Telemetry  # noqa: F401
+from repro.core.elastic.telemetry import (  # noqa: F401
+    ServingTelemetry, Telemetry,
+)

@@ -36,3 +36,27 @@ class Telemetry:
         if self.loss_delta is None or self.round_time <= 0.0:
             return None
         return self.loss_delta / self.round_time
+
+
+@dataclass(frozen=True)
+class ServingTelemetry:
+    """One autoscaler-window observation of a serving fleet (DESIGN.md §14).
+
+    Field names are chosen so the training policies whose ``observe`` only
+    reads scheduling state (``StaticPolicy``, ``SchedulePolicy`` via
+    ``round``/``workers``) or money (``CostCapPolicy`` via ``cost_so_far``/
+    ``min_workers``) work on serving snapshots unchanged -- the registry
+    grammar carries over; only the load-driven policy (smlt) is re-read on
+    serving signals (queue depth + utilization instead of loss deltas).
+    """
+    round: int                   # autoscaler windows completed so far
+    workers: int                 # replicas (provisioned) or concurrency cap
+    qps: float                   # arrivals/s over the window
+    queue_depth: int             # requests waiting at the window boundary
+    p50_ms: float | None         # window completion-latency percentiles
+    p99_ms: float | None         # (None if nothing completed this window)
+    utilization: float           # busy replica-seconds / capacity, in [0, 1]
+    cost_so_far: float           # serving bill if traffic stopped now ($)
+    sim_time: float              # window boundary on the simulated clock (s)
+    min_workers: int             # elastic floor
+    max_workers: int             # elastic ceiling

@@ -8,7 +8,13 @@ DESIGN.md §4) driven by the sync protocols of :mod:`repro.core.sync`.
 This module is the documented import surface:
 
     from repro.core.faas import FaaSRuntime, LIFETIME
+
+Serving reuses the same measured constants: ``KEEP_WARM_S`` (sandbox
+warm-pool retention) and ``ServingHooks`` (the per-platform serving
+contract, DESIGN.md §14) are re-exported here because the serving simulator
+documents its FaaS cold starts as "drawn from core/faas.py".
 """
 from repro.core.runtimes import (  # noqa: F401
-    FaaSRuntime, LIFETIME, LIFETIME_MARGIN, RunResult, interp_startup,
+    FaaSRuntime, KEEP_WARM_S, LIFETIME, LIFETIME_MARGIN, RunResult,
+    ServingHooks, interp_startup,
 )

@@ -58,7 +58,8 @@ from repro.core.engine import (  # noqa: F401  (RunResult re-exported)
     PSComm, RunResult, StragglerProcess, simulate,
 )
 from repro.core.platform import (  # noqa: F401  (specs re-exported)
-    BasePlatform, CommSpec, FailureSpec, FleetSpec, Platform, per_worker,
+    BasePlatform, CommSpec, FailureSpec, FleetSpec, Platform, ServingHooks,
+    per_worker,
 )
 
 # Table 6 startup constants (seconds) -- see interp_startup for how worker
@@ -77,6 +78,7 @@ L_NET = {"t2.medium": NIC_LATENCY, "c5.large": 1.5e-4}
 
 LIFETIME = 900.0          # Lambda max duration (s)
 LIFETIME_MARGIN = 20.0
+KEEP_WARM_S = 600.0       # Lambda sandbox warm-pool retention (serving)
 
 _per_worker = per_worker  # back-compat alias (pre-Platform name)
 
@@ -251,6 +253,25 @@ class FaaSRuntime(BasePlatform):
         return (float(np.dot(gb, ctx.clock[idx] - ctx.joined_at[idx]))
                 * pricing.LAMBDA_GB_S)
 
+    # ---- serving hooks (DESIGN.md §14) --------------------------------------
+    def serving_hooks(self) -> ServingHooks:
+        """Request-billed serving: one Lambda per in-flight request, the
+        sandbox invoke curve as the cold start, S3 as the weight store."""
+        if isinstance(self.fleet.lambda_gb, tuple):
+            raise ValueError("serving needs a homogeneous fleet: per-worker "
+                             "lambda_gb tuples cannot autoscale")
+        gb = float(self.fleet.gb_array()[0])
+        return ServingHooks(
+            system="faas", billing="request",
+            flops=float(self.worker_flops_array(None)[0]),
+            memory_bytes=gb * 1e9,
+            mem_bandwidth=pricing.LAMBDA_MEM_BW,
+            gb=gb, gb_s_usd=pricing.LAMBDA_GB_S,
+            request_fee_usd=pricing.LAMBDA_REQUEST,
+            keep_warm_s=KEEP_WARM_S,
+            cold_start_s=self.restart_time(),
+            load_bandwidth=B_S3, load_latency=L_S3)
+
 
 class IaaSRuntime(BasePlatform):
     """Distributed-PyTorch-style VM cluster: thin builder over the specs.
@@ -408,6 +429,30 @@ class IaaSRuntime(BasePlatform):
     def retire_cost(self, ctx, idx) -> float:
         span = ctx.clock[idx] - ctx.joined_at[idx]
         return float(np.dot(self._hourly_array()[idx], span)) / 3600.0
+
+    # ---- serving hooks (DESIGN.md §14) --------------------------------------
+    def serving_hooks(self) -> ServingHooks:
+        """Provisioned serving: hourly-billed VM replicas, Table 6 cluster
+        bring-up as the provisioning curve, S3 as the weight store.  GPU
+        fleets serve from device memory at device bandwidth."""
+        if isinstance(self.fleet.instance, tuple):
+            raise ValueError("serving needs a homogeneous fleet: per-worker "
+                             "instance tuples cannot autoscale")
+        inst = str(self.fleet.instances()[0])
+        if self.fleet.gpu:
+            mem_gb = pricing.GPU_HBM_GB.get(inst, 16.0)
+            mem_bw = pricing.VM_GPU_MEM_BW.get(inst, 320e9)
+        else:
+            mem_gb = pricing.EC2_RAM_GB.get(inst, 4.0)
+            mem_bw = pricing.VM_MEM_BW
+        return ServingHooks(
+            system=self.system_name(), billing="provisioned",
+            flops=float(self.worker_flops_array(None)[0]),
+            memory_bytes=mem_gb * 1e9, mem_bandwidth=mem_bw,
+            hourly_usd=float(self._hourly_array()[0]),
+            cold_start_s=self.restart_time(),
+            load_bandwidth=B_S3, load_latency=0.0,
+            provision_table=tuple(sorted(_T_IAAS.items())))
 
 
 # --------------------------------------------------------------- pods -------
@@ -583,3 +628,19 @@ class PodPlatform(BasePlatform):
     def retire_cost(self, ctx, idx) -> float:
         span = ctx.clock[idx] - ctx.joined_at[idx]
         return self._pod_hourly() * float(np.sum(span)) / 3600.0
+
+    # ---- serving hooks (DESIGN.md §14) --------------------------------------
+    def serving_hooks(self) -> ServingHooks:
+        """Provisioned serving on pod slices: weights shard across the
+        slice, so the streaming floor rides the aggregate HBM bandwidth --
+        which is exactly why continuous batching pays on this platform."""
+        from repro.distributed.roofline import HBM_BW, PEAK_FLOPS
+        return ServingHooks(
+            system=self.system_name(), billing="provisioned",
+            flops=self.chips_per_pod * PEAK_FLOPS * self.mfu,
+            memory_bytes=self.chips_per_pod * pricing.POD_HBM_GB * 1e9,
+            mem_bandwidth=self.chips_per_pod * HBM_BW,
+            hourly_usd=self._pod_hourly(),
+            cold_start_s=self.restart_time(),
+            load_bandwidth=B_S3, load_latency=L_S3,
+            provision_table=tuple(sorted(_T_POD.items())))

@@ -19,4 +19,7 @@ from repro.experiments.presets import PRESETS, Preset, get_preset  # noqa: F401
 from repro.experiments.runner import (  # noqa: F401
     SCHEMA, RunRecord, expand_grid, run_experiment, sweep,
 )
+from repro.experiments.serving import (  # noqa: F401
+    SERVE_SCHEMA, ServeRecord, ServingSpec, frontier, run_serving,
+)
 from repro.experiments.spec import ExperimentSpec  # noqa: F401

@@ -5,6 +5,13 @@ dense family; token-by-token warm-up fallback otherwise) followed by greedy
 or temperature sampling through ``decode_step``.  The same ``serve_step`` is
 what the decode_32k / long_500k dry-run shapes lower, so everything here
 runs identically under `jit` on the production mesh.
+
+Traffic-scale serving lives next door (DESIGN.md §14): open-loop arrival
+processes in :mod:`repro.serving.arrivals`, the analytic per-step
+:class:`~repro.serving.latency.LatencyModel`, and the request-driven
+discrete-event simulator in :mod:`repro.serving.sim`.  ``Generator`` counts
+its ``decode_step`` calls so the parity suite can pin the simulator's
+timing byte-identically to this real path (``simulated_latency_s``).
 """
 from __future__ import annotations
 
@@ -17,6 +24,13 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import Model, build_model
+from repro.serving.arrivals import (  # noqa: F401
+    ARRIVALS, ArrivalProcess, list_arrivals, make_arrivals,
+)
+from repro.serving.latency import LatencyModel  # noqa: F401
+from repro.serving.sim import (  # noqa: F401
+    ServingResult, ServingSMLT, make_autoscaler, provision_for, serve,
+)
 
 
 @dataclass
@@ -28,7 +42,18 @@ class Generator:
     def __post_init__(self):
         self.model: Model = build_model(self.arch)
         assert self.model.cfg.supports_decode, "encoder models cannot decode"
-        self._decode = jax.jit(self.model.decode_step)
+        self._decode_fn = jax.jit(self.model.decode_step)
+        self.decode_steps = 0     # calls to decode_step (parity with sim)
+
+    def _decode(self, *args):
+        self.decode_steps += 1
+        return self._decode_fn(*args)
+
+    def simulated_latency_s(self, lat: LatencyModel) -> float:
+        """Simulated seconds for the decode steps this Generator actually
+        executed, under ``lat``'s per-step roofline -- the bridge the parity
+        test pins against :func:`repro.serving.sim.serve`."""
+        return self.decode_steps * lat.step_s(1)
 
     def _prefill_loop(self, tokens: np.ndarray):
         """Generic prefill: feed prompt tokens through decode_step."""

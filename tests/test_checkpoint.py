@@ -59,6 +59,59 @@ def test_preemption_guard():
     assert not g.should_checkpoint()
 
 
+def test_roundtrip_is_bit_exact_and_dtype_preserving(tmp_path):
+    """Restore equality must be exact, not approximate: bf16 leaves come
+    back as bf16 with identical bit patterns (the uint16 shuttle encoding
+    is invisible), ints stay ints."""
+    rng = np.random.default_rng(0)
+    t = {"w": jnp.asarray(rng.standard_normal((3, 5)), jnp.bfloat16),
+         "b": jnp.asarray(rng.standard_normal(7), jnp.float32),
+         "n": jnp.int32(-42)}
+    ckpt.save(tmp_path, 4, t)
+    loaded, _ = ckpt.load(tmp_path, 4)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint16) if a.dtype == jnp.bfloat16
+            else np.asarray(a),
+            np.asarray(b).view(np.uint16) if b.dtype == jnp.bfloat16
+            else np.asarray(b))
+
+
+def test_load_specific_step_and_empty_dir(tmp_path):
+    ckpt.save(tmp_path, 1, {"x": jnp.float32(1.0)})
+    ckpt.save(tmp_path, 2, {"x": jnp.float32(2.0)})
+    loaded, meta = ckpt.load(tmp_path, 1)
+    assert float(loaded["x"]) == 1.0 and meta["step"] == 1
+    empty = tmp_path / "nothing"
+    empty.mkdir()
+    assert ckpt.load_latest(empty) == (None, None)
+
+
+def test_restart_cost_is_metered(tmp_path):
+    """A lifetime-rotated FaaS run pays for its checkpoints: the rotation
+    seconds land in breakdown['checkpoint'], extend sim_time, and (because
+    Lambda bills GB-seconds on the re-invoked clocks) raise the $ total over
+    the identical uninterrupted run."""
+    from repro.core.algorithms import make_algorithm
+    from repro.core.mlmodels import make_study_model
+    from repro.core.runtimes import FaaSRuntime
+    from repro.data.synthetic import make_dataset, train_val_split
+
+    tr, va = train_val_split(make_dataset("higgs", rows=4_000, seed=0))
+    model = make_study_model("lr", tr)
+    algo = lambda: make_algorithm("ga_sgd", lr=0.2, batch_size=1024)  # noqa
+    smooth = FaaSRuntime(workers=2).train(model, algo(), tr, va, max_epochs=2)
+    rotated = FaaSRuntime(workers=2, lifetime=20.0).train(
+        model, algo(), tr, va, max_epochs=2)
+    assert smooth.breakdown["checkpoint"] == 0.0
+    assert rotated.breakdown["checkpoint"] > 0.0
+    assert rotated.sim_time >= smooth.sim_time + rotated.breakdown["checkpoint"] / 2
+    assert rotated.cost > smooth.cost
+    np.testing.assert_allclose(rotated.final_loss, smooth.final_loss,
+                               rtol=1e-6)
+
+
 def test_elastic_resume_same_stream(tmp_path):
     """Train 2 workers, checkpoint, resume with 3 workers: the global sample
     order continues without gaps or repeats."""
