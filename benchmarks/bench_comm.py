@@ -10,7 +10,7 @@ the IaaS NIC ring / pod DCN ring / hybrid VM-PS push-pull.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_root
 from repro.core.comm import ChannelItemTooLarge
 from repro.experiments import ExperimentSpec, run_experiment
 from repro.experiments.spec import FleetSpec
@@ -68,6 +68,10 @@ def run(quick: bool = True):
             "derived": (f"bytes={r['comm_bytes']:.0f};"
                         f"ratio_vs_fp32={ratio:.4f}"),
         })
+    emit_root("comm", rows, quick=quick,
+              grid={"channels": list(channels),
+                    "collectives": list(collectives),
+                    "codecs": list(codecs)})
     return emit(rows, "bench_comm")
 
 

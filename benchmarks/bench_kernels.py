@@ -12,13 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, emit_root, timeit
+from repro.distributed.roofline import HBM_BW, PEAK_FLOPS
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.quant8.ref import quantize8_ref
 from repro.models.ssm import ssd_scan
-
-HBM_BW = 819e9
 
 
 def run(quick: bool = True):
@@ -34,7 +33,7 @@ def run(quick: bool = True):
     flops = 4 * bh * s * s * d
     rows.append({"name": "kern_flash_attention_ref", "us_per_call": t * 1e6,
                  "derived": f"cpu_gflops={flops / t / 1e9:.1f};"
-                            f"tpu_floor_us={flops / 197e12 * 1e6:.1f}"})
+                            f"tpu_floor_us={flops / PEAK_FLOPS * 1e6:.1f}"})
 
     # decode attention: b*m=16, S=32768, d=128, g=8
     bm, g, S = 16, 8, 32768 if not quick else 8192
@@ -59,7 +58,7 @@ def run(quick: bool = True):
     t = timeit(lambda: jax.block_until_ready(fs(x, dt, alog, B, C)))
     ssd_flops = 2 * b * s2 * 256 * h * p + 4 * b * s2 * h * p * n
     rows.append({"name": "kern_ssd_scan_ref", "us_per_call": t * 1e6,
-                 "derived": f"tpu_floor_us={ssd_flops / 197e12 * 1e6:.2f}"})
+                 "derived": f"tpu_floor_us={ssd_flops / PEAK_FLOPS * 1e6:.2f}"})
 
     # quant8: 64 MB tensor
     nq = 16_000_000 if not quick else 4_000_000
@@ -70,6 +69,8 @@ def run(quick: bool = True):
     rows.append({"name": "kern_quant8_ref", "us_per_call": t * 1e6,
                  "derived": f"cpu_GBps={bytes_q / t / 1e9:.1f};"
                             f"tpu_floor_us={bytes_q / HBM_BW * 1e6:.1f}"})
+    emit_root("kernels", rows, quick=quick,
+              peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW)
     return emit(rows, "bench_kernels")
 
 

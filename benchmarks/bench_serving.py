@@ -9,14 +9,9 @@ writes ``BENCH_serving.json`` at the repo root with the full frontier.
 """
 from __future__ import annotations
 
-import json
-from pathlib import Path
-
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_root
 from repro.experiments import frontier
 from repro.experiments.serving import FRONTIER_ARRIVALS
-
-ROOT = Path(__file__).resolve().parents[1]
 
 
 def run(quick: bool = True):
@@ -53,10 +48,8 @@ def run(quick: bool = True):
                cell[("pod", sustained)]["p99_ms"]) < \
         cell[("faas", sustained)]["p99_ms"]
 
-    (ROOT / "BENCH_serving.json").write_text(json.dumps(
-        {"schema": "repro.bench.serving/v1", "duration_s": duration,
-         "arrivals": list(FRONTIER_ARRIVALS), "rows": rows},
-        indent=1, default=float))
+    emit_root("serving", rows, duration_s=duration,
+              arrivals=list(FRONTIER_ARRIVALS))
     return emit(rows, "bench_serving")
 
 

@@ -1,12 +1,14 @@
 """Benchmark harness utilities: CSV rows in the required
-``name,us_per_call,derived`` format + JSON dumps under experiments/bench/."""
+``name,us_per_call,derived`` format, JSON dumps under experiments/bench/,
+and the committed repo-root ``BENCH_<name>.json`` trajectory files."""
 from __future__ import annotations
 
 import json
 import time
 from pathlib import Path
 
-OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
 
 
 def emit(rows: list[dict], bench: str):
@@ -18,6 +20,16 @@ def emit(rows: list[dict], bench: str):
         derived = r.get("derived", "")
         print(f"{name},{us:.1f},{derived}")
     return rows
+
+
+def emit_root(bench: str, rows: list[dict], **extra):
+    """Write the committed ``BENCH_<bench>.json`` perf-trajectory file at
+    the repo root (schema ``repro.bench.<bench>/v1``, same envelope as
+    ``BENCH_serving.json``) so speedups stay verifiable across PRs."""
+    payload = {"schema": f"repro.bench.{bench}/v1", **extra, "rows": rows}
+    (ROOT / f"BENCH_{bench}.json").write_text(
+        json.dumps(payload, indent=1, default=float))
+    return payload
 
 
 def timeit(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:

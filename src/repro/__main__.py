@@ -114,6 +114,9 @@ def cmd_list(args) -> int:
     from repro.experiments.spec import PLATFORMS
     print(f"\nplatforms: {', '.join(PLATFORMS)}")
     print(f"models:    {', '.join(list_workloads())}")
+    from repro.core.sync import list_syncs
+    print(f"\nsync protocols (--set sync=..., DESIGN.md §3):")
+    print(f"  {', '.join(list_syncs())}")
     print(f"\ncomm stacks (--set comm=transport/collective/codec, "
           f"DESIGN.md §12):")
     print(f"  transports:  {', '.join(list_transports())}")
@@ -125,7 +128,35 @@ def cmd_list(args) -> int:
     print(f"\narrival processes (repro serve --arrival ..., DESIGN.md §14):")
     for line in list_arrivals().values():
         print(f"  {line}")
+    from repro.analysis import list_checkers
+    print(f"\nlint checkers (repro lint --select ..., DESIGN.md §15):")
+    for line in list_checkers():
+        print(f"  {line}")
     return 0
+
+
+def cmd_lint(args) -> int:
+    """Static project-invariant checks (DESIGN.md §15)."""
+    from repro.analysis import (
+        ModuleCache, render_json, render_text, run_lint, write_manifest)
+    if args.write_manifest:
+        try:
+            path = write_manifest(ModuleCache())
+        except ValueError as e:
+            print(e, file=sys.stderr)
+            return 1
+        print(f"# spec-hash manifest -> {path}")
+        return 0
+    select = ([s.strip() for s in args.select.split(",") if s.strip()]
+              if args.select else None)
+    paths = [Path(p) for p in args.paths] or None
+    try:
+        findings, n_files = run_lint(paths=paths, select=select)
+    except KeyError as e:
+        raise SystemExit(str(e.args[0]) if e.args else str(e))
+    render = render_json if args.format == "json" else render_text
+    print(render(findings, n_files))
+    return 1 if findings else 0
 
 
 def cmd_plan(args) -> int:
@@ -255,6 +286,25 @@ def main(argv: list[str] | None = None) -> int:
 
     sub.add_parser("list", help="list available presets").set_defaults(
         fn=cmd_list)
+
+    lint_p = sub.add_parser(
+        "lint",
+        help="static project-invariant checks (DESIGN.md §15): "
+             "determinism, spec-hash drift, registries, units, metering, "
+             "constant duplication")
+    lint_p.add_argument("paths", nargs="*", default=[],
+                        help="files to lint (default: src/repro + "
+                             "benchmarks; explicit paths skip the "
+                             "tree-level checkers unless --select'ed)")
+    lint_p.add_argument("--select", default=None, metavar="A,B",
+                        help="comma-separated checker names (see `list`)")
+    lint_p.add_argument("--format", default="text",
+                        choices=("text", "json"),
+                        help="finding output format")
+    lint_p.add_argument("--write-manifest", action="store_true",
+                        help="regenerate the spec-hash manifest (refuses "
+                             "over an unbumped schema change)")
+    lint_p.set_defaults(fn=cmd_lint)
 
     common = argparse.ArgumentParser(add_help=False)
     common.add_argument("target",

@@ -1,0 +1,30 @@
+"""repro.analysis -- static enforcement of the simulator's contracts.
+
+``python -m repro lint`` runs the checker registry (determinism, spec-hash
+drift, registry consistency, unit hygiene, metering discipline, constant
+duplication) over a shared parsed-module cache.  See DESIGN.md §15.
+"""
+from repro.analysis.engine import (Finding, LintEngine, ModuleCache,
+                                   ParsedModule, REPO_ROOT, render_json,
+                                   render_text)
+from repro.analysis.checkers import (CHECKERS, Checker, list_checkers,
+                                     make_checker, select_checkers)
+from repro.analysis.manifest import (MANIFEST_PATH, check_manifest,
+                                     write_manifest)
+
+__all__ = [
+    "Finding", "LintEngine", "ModuleCache", "ParsedModule", "REPO_ROOT",
+    "render_json", "render_text",
+    "CHECKERS", "Checker", "list_checkers", "make_checker",
+    "select_checkers",
+    "MANIFEST_PATH", "check_manifest", "write_manifest",
+    "run_lint",
+]
+
+
+def run_lint(paths=None, select=None, root=REPO_ROOT):
+    """One-call lint: (findings, n_files).  ``paths`` restricts the file
+    set (and skips tree-level checkers unless ``select`` names them)."""
+    cache = ModuleCache(root=root, files=paths, force_all=paths is not None)
+    checkers = select_checkers(select, paths_given=paths is not None)
+    return LintEngine(checkers, cache).run(), len(cache.files)

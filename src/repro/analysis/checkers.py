@@ -1,0 +1,650 @@
+"""The checker registry: six project-invariant lints (DESIGN.md §15).
+
+Each checker guards a contract a previous PR established dynamically and
+nothing enforced statically:
+
+==============  =====  ======================================================
+checker         codes  invariant (establishing PR)
+==============  =====  ======================================================
+determinism     D001   no wall clocks in simulator code -- every second is
+                       simulated (PR 1's metering discipline)
+                D002   no unseeded/global RNG -- runs replay byte-identically
+                       from ``seed`` (PR 1/2 parity pins)
+spec_hash       H001-3 frozen spec field sets may only change together with
+                       their HASH_SCHEMA salt + committed manifest (PR 3's
+                       cache-evolution contract, re-keyed in PRs 5/6)
+registry        R001   every registered grammar name surfaces in
+                       ``repro list`` (PR 2's discoverability rule)
+                R002   every registry keeps a parse round-trip test
+                       (PR 4/5/6 convention)
+units           U001   metering names use the canonical ``_s``/``_usd``/
+                       ``_bytes``/``_gb`` suffixes, not ad-hoc aliases
+                U002   no +/- arithmetic across different unit suffixes
+metering        M001   metered cost/clock attributes mutate only inside the
+                       engine/platform/comm home modules (PR 1/5/6)
+                M002   the billing hooks (``finalize_cost``/``resize_cost``/
+                       ``retire_cost``) are called only by the engine and
+                       the elastic telemetry path (PR 5)
+constants       C001   measured Table-6/pricing/roofline constants live in
+                       exactly one module each -- no re-hardcoded copies
+                       (the "two implementations of one cost" rule PRs 3-5
+                       repeatedly paid down)
+==============  =====  ======================================================
+
+Checkers are selected by name on the same string-grammar convention as the
+sync/comm/scaling/arrivals registries: ``repro lint --select units,metering``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import Finding, ModuleCache, ParsedModule
+
+__all__ = ["CHECKERS", "Checker", "make_checker", "list_checkers",
+           "select_checkers"]
+
+
+class Checker:
+    """Protocol-by-convention: a named pass over the shared module cache."""
+
+    name: str = "?"
+    description: str = ""
+    codes: Dict[str, str] = {}
+    #: repo-relative path prefixes the checker scans by default
+    scope: Tuple[str, ...] = ()
+    #: tree-level checkers reason about the whole repo (registries, the
+    #: spec-hash manifest) and are skipped when explicit paths are linted,
+    #: unless selected by name
+    tree_level: bool = False
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, mod_or_rel, line: int, code: str,
+                message: str) -> Finding:
+        rel = (mod_or_rel.rel if isinstance(mod_or_rel, ParsedModule)
+               else mod_or_rel)
+        return Finding(file=rel, line=line, code=code, message=message,
+                       checker=self.name)
+
+
+# ------------------------------------------------------------ determinism ---
+
+#: wall-clock callables on the stdlib time module
+_WALL_TIME_FUNCS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+                    "monotonic", "monotonic_ns", "process_time",
+                    "process_time_ns"}
+_WALL_DT_FUNCS = {"now", "utcnow", "today"}
+#: the seeded numpy constructors that ARE allowed
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+                 "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937"}
+
+
+class DeterminismChecker(Checker):
+    """Simulator code may not read wall clocks or unseeded RNG state.
+
+    Every second and every random draw in ``core/``, ``serving/`` and
+    ``experiments/`` must come from the simulated clock and an explicit
+    ``np.random.default_rng(seed)`` / ``jax.random.key(seed)`` -- that is
+    what makes every record in ``experiments/runs/`` replayable.  The
+    ``launch/`` entry points and ``benchmarks/`` time real hardware and are
+    deliberately out of scope.
+    """
+
+    name = "determinism"
+    description = ("no wall clocks / unseeded RNG in simulator code "
+                   "(core, serving, experiments)")
+    codes = {"D001": "wall-clock read in simulated code",
+             "D002": "unseeded or global RNG"}
+    scope = ("src/repro/core/", "src/repro/serving/",
+             "src/repro/experiments/")
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        for mod in cache.modules(self.scope):
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: ParsedModule) -> Iterator[Finding]:
+        time_mods: Set[str] = set()      # names bound to the time module
+        time_funcs: Set[str] = set()     # from time import time, ...
+        dt_mods: Set[str] = set()        # import datetime [as d]
+        dt_classes: Set[str] = set()     # from datetime import datetime/date
+        rng_mods: Set[str] = set()       # import random [as r]
+        rng_funcs: Set[str] = set()      # from random import random, ...
+        np_mods: Set[str] = set()        # import numpy as np
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    bound = a.asname or a.name.split(".")[0]
+                    if a.name == "time":
+                        time_mods.add(bound)
+                    elif a.name == "datetime":
+                        dt_mods.add(bound)
+                    elif a.name == "random":
+                        rng_mods.add(bound)
+                    elif a.name in ("numpy", "numpy.random"):
+                        np_mods.add(bound)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "time":
+                    time_funcs.update(a.asname or a.name for a in node.names
+                                      if a.name in _WALL_TIME_FUNCS)
+                elif node.module == "datetime":
+                    dt_classes.update(a.asname or a.name for a in node.names
+                                      if a.name in ("datetime", "date"))
+                elif node.module == "random":
+                    rng_funcs.update(a.asname or a.name for a in node.names)
+
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name):
+                if fn.id in time_funcs:
+                    yield self.finding(
+                        mod, node.lineno, "D001",
+                        f"wall-clock call {fn.id}() in simulated code; "
+                        f"derive time from the simulated clock")
+                elif fn.id in rng_funcs:
+                    yield self.finding(
+                        mod, node.lineno, "D002",
+                        f"stdlib random.{fn.id}() is not seed-replayable; "
+                        f"use np.random.default_rng(seed)")
+                continue
+            if not isinstance(fn, ast.Attribute):
+                continue
+            base = fn.value
+            # time.time(), time.perf_counter(), ...
+            if (isinstance(base, ast.Name) and base.id in time_mods
+                    and fn.attr in _WALL_TIME_FUNCS):
+                yield self.finding(
+                    mod, node.lineno, "D001",
+                    f"wall-clock call {base.id}.{fn.attr}() in simulated "
+                    f"code; every second must come from the simulated clock")
+            # datetime.now() / date.today() (class imported directly)
+            elif (isinstance(base, ast.Name) and base.id in dt_classes
+                    and fn.attr in _WALL_DT_FUNCS):
+                yield self.finding(
+                    mod, node.lineno, "D001",
+                    f"wall-clock call {base.id}.{fn.attr}() in simulated "
+                    f"code; pass timestamps in explicitly")
+            # datetime.datetime.now() (module imported)
+            elif (isinstance(base, ast.Attribute)
+                    and base.attr in ("datetime", "date")
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id in dt_mods
+                    and fn.attr in _WALL_DT_FUNCS):
+                yield self.finding(
+                    mod, node.lineno, "D001",
+                    f"wall-clock call via the datetime module in simulated "
+                    f"code ({base.attr}.{fn.attr}())")
+            # random.random(), random.randint(), random.seed(), ...
+            elif isinstance(base, ast.Name) and base.id in rng_mods:
+                yield self.finding(
+                    mod, node.lineno, "D002",
+                    f"stdlib {base.id}.{fn.attr}() is global-state RNG; "
+                    f"use np.random.default_rng(seed)")
+            # np.random.<legacy>() -- the seeded constructors are fine
+            elif (isinstance(base, ast.Attribute) and base.attr == "random"
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id in np_mods
+                    and fn.attr not in _NP_RANDOM_OK):
+                yield self.finding(
+                    mod, node.lineno, "D002",
+                    f"np.random.{fn.attr}() uses numpy's global RNG state; "
+                    f"use np.random.default_rng(seed)")
+
+
+# -------------------------------------------------------------- spec_hash ---
+
+class SpecHashChecker(Checker):
+    """Frozen spec schemas may only drift together with their salt.
+
+    Static mirror of the ``spec_hash`` docstring contract: the dataclass
+    field set (names + default source text) of every hashed spec is
+    fingerprinted off the AST and compared to the committed
+    ``spec_manifest.json`` (see :mod:`repro.analysis.manifest`).
+    """
+
+    name = "spec_hash"
+    description = ("ExperimentSpec/ServingSpec field sets vs HASH_SCHEMA "
+                   "salts vs the committed manifest")
+    codes = {"H001": "spec fields changed without a salt bump",
+             "H002": "salt bumped but manifest stale",
+             "H003": "manifest missing or incomplete"}
+    tree_level = True
+
+    def __init__(self, manifest_path=None, specs=None):
+        from repro.analysis.manifest import MANIFEST_PATH
+        self.manifest_path = manifest_path or MANIFEST_PATH
+        self.specs = specs
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        from repro.analysis.manifest import check_manifest
+        yield from check_manifest(cache, self.manifest_path, self.specs)
+
+
+# --------------------------------------------------------------- registry ---
+
+class RegistryChecker(Checker):
+    """Every string-grammar registry stays discoverable and round-trippable.
+
+    R001: each registered name must surface in ``python -m repro list``
+    (the discoverability rule: a grammar nobody can list is a grammar
+    nobody sweeps).  R002: each registry must be exercised by at least one
+    parse/round-trip test under ``tests/`` (the convention every registry
+    PR followed).  This checker imports the live registries -- the one
+    place the lint engine goes beyond the AST, because the registries are
+    themselves built dynamically (dict comprehensions over CHANNEL_SPECS
+    etc.) and a stale parallel list here would be exactly the drift this
+    tool exists to kill.
+    """
+
+    name = "registry"
+    description = ("registered grammar names appear in `repro list` and "
+                   "have parse round-trip tests")
+    codes = {"R001": "registry name missing from `repro list`",
+             "R002": "registry has no parse round-trip test"}
+    tree_level = True
+
+    #: registry -> (defining module, registry symbol, required-any test ids)
+    TABLE = {
+        "sync": ("src/repro/core/sync.py", "SYNC_GRAMMARS",
+                 {"make_sync", "sync_name"}),
+        "transport": ("src/repro/core/comm/transports.py", "TRANSPORTS",
+                      {"make_transport", "parse_stack",
+                       "transport_constants"}),
+        "collective": ("src/repro/core/comm/collectives.py", "COLLECTIVES",
+                       {"make_collective"}),
+        "codec": ("src/repro/core/comm/codecs.py", "CODECS",
+                  {"make_codec"}),
+        "scaling": ("src/repro/core/elastic/policies.py", "POLICIES",
+                    {"make_policy", "validate_scaling"}),
+        "arrivals": ("src/repro/serving/arrivals.py", "ARRIVALS",
+                     {"make_arrivals"}),
+        "checkers": ("src/repro/analysis/checkers.py", "CHECKERS",
+                     {"make_checker", "select_checkers"}),
+    }
+
+    @staticmethod
+    def _names(registry: str) -> List[str]:
+        if registry == "sync":
+            from repro.core.sync import list_syncs
+            return [g.partition(":")[0].partition("[")[0]
+                    for g in list_syncs()]
+        if registry == "transport":
+            from repro.core.comm import list_transports
+            return list_transports()
+        if registry == "collective":
+            from repro.core.comm import list_collectives
+            return list_collectives()
+        if registry == "codec":
+            from repro.core.comm import list_codecs
+            return list_codecs()
+        if registry == "scaling":
+            from repro.core.elastic.policies import POLICIES
+            return sorted(POLICIES) + ["plan"]
+        if registry == "arrivals":
+            from repro.serving.arrivals import ARRIVALS
+            return sorted(ARRIVALS)
+        if registry == "checkers":
+            return sorted(CHECKERS)
+        raise KeyError(registry)
+
+    @staticmethod
+    def _cli_list_output() -> str:
+        import contextlib
+        import io
+        from repro.__main__ import cmd_list
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            cmd_list(None)
+        return buf.getvalue()
+
+    @staticmethod
+    def _symbol_line(cache: ModuleCache, rel: str, symbol: str) -> int:
+        mod = cache.load(rel)
+        if mod is None:
+            return 1
+        for node in mod.tree.body:
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target] if isinstance(node, ast.AnnAssign)
+                       else [])
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id == symbol:
+                    return node.lineno
+        return 1
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        listing = self._cli_list_output()
+        test_ids: Set[str] = set()
+        tests_dir = cache.root / "tests"
+        if tests_dir.is_dir():
+            for path in sorted(tests_dir.glob("test_*.py")):
+                mod = cache.get(path)
+                if mod is None:
+                    continue
+                for node in ast.walk(mod.tree):
+                    if isinstance(node, ast.Name):
+                        test_ids.add(node.id)
+                    elif isinstance(node, ast.Attribute):
+                        test_ids.add(node.attr)
+
+        for registry, (rel, symbol, required) in self.TABLE.items():
+            line = self._symbol_line(cache, rel, symbol)
+            base = [n.partition(":")[0] for n in self._names(registry)]
+            missing = sorted(n for n in base if n not in listing)
+            for name in missing:
+                yield self.finding(
+                    rel, line, "R001",
+                    f"{registry} registry entry {name!r} is not printed by "
+                    f"`python -m repro list` -- every selectable grammar "
+                    f"name must be discoverable (wire it into cmd_list)")
+            if not test_ids & required:
+                yield self.finding(
+                    rel, line, "R002",
+                    f"{registry} registry has no parse round-trip test: "
+                    f"nothing under tests/ references any of "
+                    f"{sorted(required)}")
+
+
+# ------------------------------------------------------------------ units ---
+
+#: canonical metering suffixes (checked longest-first so ``_bytes`` wins
+#: over ``_s``); each suffix is its own unit -- adding ``_s`` to ``_ms`` is
+#: exactly the class of bug the convention exists to prevent
+_UNIT_SUFFIXES = ("_bytes", "_flops", "_usd", "_qps", "_gb", "_mb", "_kb",
+                  "_ms", "_s")
+#: ad-hoc aliases of a canonical suffix -> the canonical form
+_UNIT_ALIASES = {
+    "_seconds": "_s", "_second": "_s", "_secs": "_s", "_sec": "_s",
+    "_msecs": "_ms", "_msec": "_ms", "_millis": "_ms",
+    "_dollars": "_usd", "_dollar": "_usd",
+    "_byte": "_bytes", "_gigabytes": "_gb", "_megabytes": "_mb",
+}
+
+
+def _unit_of(name: str) -> Optional[str]:
+    for alias, canon in _UNIT_ALIASES.items():
+        if name.endswith(alias):
+            return canon
+    for suffix in _UNIT_SUFFIXES:
+        if name.endswith(suffix):
+            return suffix
+    return None
+
+
+def _node_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class UnitsChecker(Checker):
+    """Suffix hygiene in metering code.
+
+    U001: a binding whose name spells a unit must use the canonical suffix
+    (``_s``/``_ms``/``_usd``/``_bytes``/``_gb``/...), not an ad-hoc alias
+    like ``_seconds`` -- greppability is the point of the convention.
+    U002: ``+``/``-`` between two names carrying *different* unit suffixes
+    is a unit error by construction (multiplying/dividing across units is
+    how conversions are written, adding across them never is).
+    """
+
+    name = "units"
+    description = ("canonical _s/_usd/_bytes/_gb suffixes in metering "
+                   "code; no mixed-unit +/- arithmetic")
+    codes = {"U001": "non-canonical unit suffix",
+             "U002": "+/- across different unit suffixes"}
+    scope = ("src/repro/core/", "src/repro/serving/",
+             "src/repro/experiments/")
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        for mod in cache.modules(self.scope):
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    name = _node_name(t)
+                    yield from self._alias(mod, node.lineno, name)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                    yield from self._alias(mod, a.lineno, a.arg)
+            elif (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, (ast.Add, ast.Sub))):
+                lu = self._operand_unit(node.left)
+                ru = self._operand_unit(node.right)
+                if lu and ru and lu != ru:
+                    op = "+" if isinstance(node.op, ast.Add) else "-"
+                    yield self.finding(
+                        mod, node.lineno, "U002",
+                        f"'{_node_name(node.left)} {op} "
+                        f"{_node_name(node.right)}' adds values of "
+                        f"different units ({lu} vs {ru}); convert "
+                        f"explicitly before summing")
+
+    def _alias(self, mod: ParsedModule, line: int,
+               name: Optional[str]) -> Iterator[Finding]:
+        if not name:
+            return
+        for alias, canon in _UNIT_ALIASES.items():
+            if name.endswith(alias):
+                yield self.finding(
+                    mod, line, "U001",
+                    f"{name!r} uses the non-canonical unit suffix "
+                    f"'{alias}'; the metering convention is "
+                    f"'{name[: -len(alias)]}{canon}'")
+                return
+
+    @staticmethod
+    def _operand_unit(node: ast.AST) -> Optional[str]:
+        name = _node_name(node)
+        return _unit_of(name) if name else None
+
+
+# --------------------------------------------------------------- metering ---
+
+#: the modules that legitimately own metered state mutation
+_METERING_HOME = ("src/repro/core/engine.py", "src/repro/core/runtimes.py",
+                  "src/repro/core/platform.py", "src/repro/core/channels.py",
+                  "src/repro/core/faas.py", "src/repro/core/iaas.py",
+                  "src/repro/core/sync.py", "src/repro/core/comm/",
+                  "src/repro/core/elastic/", "src/repro/serving/sim.py")
+_METERED_ATTRS = {"cost", "sim_time", "comm_bytes", "comm_cost", "op_cost",
+                  "retired_cost", "clock", "invoked_at"}
+_BILLING_HOOKS = {"finalize_cost", "resize_cost", "retire_cost"}
+
+
+class MeteringChecker(Checker):
+    """Money and simulated time mutate only through the metering path.
+
+    Outside the engine/platform/comm/serving-sim home modules, writing a
+    metered attribute (``.cost``, ``.sim_time``, ``.comm_bytes``, ...) or
+    calling a platform billing hook (``finalize_cost``/``resize_cost``/
+    ``retire_cost``) creates a second bookkeeping path -- the drift class
+    PRs 3-5 repeatedly removed.  Consumers read results; only the engine
+    writes them.
+    """
+
+    name = "metering"
+    description = ("metered cost/clock attrs and billing hooks only mutate "
+                   "inside the engine home modules")
+    codes = {"M001": "metered attribute mutated outside the engine",
+             "M002": "billing hook called outside the engine"}
+    scope = ("src/repro/", "benchmarks/")
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        for mod in cache.modules(self.scope):
+            if any(mod.rel.startswith(h) for h in _METERING_HOME):
+                continue
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for sub in ast.walk(t):
+                        if (isinstance(sub, ast.Attribute)
+                                and sub.attr in _METERED_ATTRS):
+                            yield self.finding(
+                                mod, node.lineno, "M001",
+                                f"direct write to metered attribute "
+                                f"'.{sub.attr}' outside the engine home "
+                                f"modules; route it through the metering "
+                                f"helpers (SimContext.meter_add / "
+                                f"finalize_cost / resize hooks)")
+            elif (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _BILLING_HOOKS):
+                yield self.finding(
+                    mod, node.lineno, "M002",
+                    f"billing hook .{node.func.attr}() called outside the "
+                    f"engine/elastic home modules; the engine owns when a "
+                    f"run is billed (read RunResult.cost instead)")
+
+
+# -------------------------------------------------------------- constants ---
+
+#: modules that own measured constants: everything numeric defined at
+#: module/class level here is "owned" and may not be re-hardcoded elsewhere
+_CONSTANT_HOMES = ("src/repro/core/comm/transports.py",
+                   "src/repro/core/cost.py",
+                   "src/repro/distributed/roofline.py")
+
+
+def _significant_digits(value: float) -> int:
+    text = f"{abs(value):.12g}"
+    mantissa = text.split("e")[0].replace(".", "").strip("0")
+    return len(mantissa)
+
+
+def _distinctive(value: float) -> bool:
+    """Is this constant specific enough that an equal literal elsewhere is
+    almost certainly a copy?  >= 3 significant digits (0.0464, 1.66667e-5,
+    819e9), or >= 2 at magnitudes >= 1e3 (65e6, 120e6).  Deliberately
+    excludes round knobs like 0.3, 10e9 or 1.2 that recur innocently."""
+    a = abs(value)
+    if a == 0.0:
+        return False
+    sig = _significant_digits(value)
+    return sig >= 3 or (sig >= 2 and a >= 1e3)
+
+
+class ConstantsChecker(Checker):
+    """Measured constants have exactly one home module.
+
+    Collects every distinctive float defined at module/class level in the
+    home modules (Table 6 channel constants, AWS pricing, the v5e roofline)
+    and flags equal float literals anywhere else in ``src/repro`` +
+    ``benchmarks`` -- a re-hardcoded ``65e6`` is a second implementation of
+    the S3 bandwidth waiting to drift.
+    """
+
+    name = "constants"
+    description = ("no re-hardcoded transport/pricing/roofline constants "
+                   "outside their home modules")
+    codes = {"C001": "owned measured constant re-hardcoded"}
+    scope = ("src/repro/", "benchmarks/")
+
+    def _owned(self, cache: ModuleCache) -> Dict[float, str]:
+        owned: Dict[float, str] = {}
+        for home in _CONSTANT_HOMES:
+            mod = cache.load(home)
+            if mod is None:
+                continue
+            stmts: List[ast.stmt] = []
+            for node in mod.tree.body:
+                if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    stmts.append(node)
+                elif isinstance(node, ast.ClassDef):
+                    stmts.extend(s for s in node.body
+                                 if isinstance(s, (ast.Assign, ast.AnnAssign)))
+            for stmt in stmts:
+                label = "?"
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                names = [t.id for t in targets if isinstance(t, ast.Name)]
+                if names:
+                    label = names[0]
+                for sub in ast.walk(stmt):
+                    if (isinstance(sub, ast.Constant)
+                            and type(sub.value) is float
+                            and _distinctive(sub.value)):
+                        owned.setdefault(
+                            float(sub.value),
+                            f"{label} ({mod.rel}:{sub.lineno})")
+        return owned
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        owned = self._owned(cache)
+        if not owned:
+            return
+        for mod in cache.modules(self.scope):
+            if mod.rel in _CONSTANT_HOMES:
+                continue
+            for node in ast.walk(mod.tree):
+                if (isinstance(node, ast.Constant)
+                        and type(node.value) is float
+                        and float(node.value) in owned):
+                    yield self.finding(
+                        mod, node.lineno, "C001",
+                        f"literal {node.value!r} re-hardcodes the measured "
+                        f"constant {owned[float(node.value)]}; import it "
+                        f"from its home module so the value cannot drift")
+
+
+# ----------------------------------------------------------------- registry --
+
+#: name -> zero-config factory, same convention as TRANSPORTS/CODECS/POLICIES
+CHECKERS = {
+    "determinism": DeterminismChecker,
+    "spec_hash": SpecHashChecker,
+    "registry": RegistryChecker,
+    "units": UnitsChecker,
+    "metering": MeteringChecker,
+    "constants": ConstantsChecker,
+}
+
+
+def make_checker(name: str) -> Checker:
+    try:
+        cls = CHECKERS[name]
+    except KeyError:
+        raise KeyError(f"unknown checker {name!r}; available: "
+                       f"{', '.join(sorted(CHECKERS))}") from None
+    return cls()
+
+
+def select_checkers(select: Optional[Iterable[str]] = None,
+                    paths_given: bool = False) -> List[Checker]:
+    """The checkers one lint run executes.  ``select`` narrows by name;
+    with explicit paths and no selection, tree-level checkers (registry,
+    spec_hash) are skipped -- they reason about the whole repo, not a file
+    subset."""
+    if select:
+        return [make_checker(n) for n in select]
+    out = []
+    for name in CHECKERS:
+        checker = make_checker(name)
+        if paths_given and checker.tree_level:
+            continue
+        out.append(checker)
+    return out
+
+
+def list_checkers() -> List[str]:
+    """Human-oriented registry listing for ``repro list``."""
+    out = []
+    for name, cls in CHECKERS.items():
+        codes = "/".join(cls.codes)
+        out.append(f"{name:<12s} [{codes}] {cls.description}")
+    return out

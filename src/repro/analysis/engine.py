@@ -1,0 +1,185 @@
+"""The lint engine: parsed-module cache, findings, suppressions, runner.
+
+``repro lint`` (DESIGN.md §15) statically enforces the contracts every PR
+in this repo leans on -- metered cost/clock discipline, seeded determinism,
+the string-grammar registries, and the spec-hash schema-evolution rules.
+Checkers (:mod:`repro.analysis.checkers`) are registered on the same
+string-grammar convention as the sync/comm/scaling/arrivals registries and
+all operate over one shared :class:`ModuleCache`, so the tree is read and
+parsed exactly once per run no matter how many checkers are selected.
+
+A finding renders as ``file:line CODE message`` (or structured JSON with
+``--format json``).  Any finding can be silenced on its line with a
+suppression comment naming the code::
+
+    t0 = time.time()   # lint: ignore[D001] -- wall-clock benchmark harness
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+__all__ = ["Finding", "ParsedModule", "ModuleCache", "LintEngine",
+           "REPO_ROOT", "render_text", "render_json"]
+
+#: repo root (``src/repro/analysis/engine.py`` -> three parents up from src)
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+#: directories the default lint run covers, relative to the repo root
+DEFAULT_TREES = ("src/repro", "benchmarks")
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*ignore\[([A-Za-z0-9_*,\s]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One structured lint finding -- ``file:line CODE message``."""
+
+    file: str          # repo-relative posix path
+    line: int
+    code: str          # e.g. "D001"
+    message: str
+    checker: str = ""  # registry name of the checker that produced it
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line} {self.code} {self.message}"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+class ParsedModule:
+    """One source file parsed once: AST + raw lines + suppression map."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=rel)
+        # line -> set of suppressed codes ("*" = all)
+        self.suppressed: Dict[int, set] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+                self.suppressed[i] = codes
+
+    def is_suppressed(self, line: int, code: str) -> bool:
+        codes = self.suppressed.get(line)
+        return bool(codes) and (code in codes or "*" in codes)
+
+
+class ModuleCache:
+    """The shared parse layer every checker reads from.
+
+    Modules are parsed lazily and exactly once; checkers iterate
+    :meth:`modules` (optionally filtered by repo-relative path prefixes) and
+    never call ``ast.parse`` themselves.  ``force_all=True`` (explicit CLI
+    paths / fixture tests) makes every file visible to every checker
+    regardless of the checker's default scope.
+    """
+
+    def __init__(self, root: Path = REPO_ROOT,
+                 files: Optional[Iterable[Path]] = None,
+                 force_all: bool = False):
+        self.root = Path(root)
+        self.force_all = force_all
+        if files is None:
+            found: List[Path] = []
+            for tree in DEFAULT_TREES:
+                base = self.root / tree
+                if base.is_dir():
+                    found.extend(p for p in sorted(base.rglob("*.py"))
+                                 if "__pycache__" not in p.parts)
+            self.files = found
+        else:
+            self.files = [Path(f) for f in files]
+        self._parsed: Dict[str, ParsedModule] = {}
+        self._errors: List[Finding] = []
+
+    def relpath(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.root).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def get(self, path: Path) -> Optional[ParsedModule]:
+        rel = self.relpath(path)
+        if rel not in self._parsed:
+            try:
+                self._parsed[rel] = ParsedModule(path, rel)
+            except SyntaxError as e:
+                self._errors.append(Finding(
+                    file=rel, line=e.lineno or 1, code="E999",
+                    message=f"syntax error: {e.msg}", checker="engine"))
+                self._parsed[rel] = None  # type: ignore[assignment]
+        return self._parsed[rel]
+
+    def load(self, relative: str) -> Optional[ParsedModule]:
+        """Fetch one module by repo-relative path, whether or not it is in
+        the scanned file set (the spec-hash checker reads its spec sources
+        this way)."""
+        return self.get(self.root / relative)
+
+    def modules(self, prefixes: Iterable[str] = ()) -> Iterable[ParsedModule]:
+        """Parsed modules whose repo-relative path starts with any prefix
+        (all files when no prefix is given or the cache is forced)."""
+        prefixes = tuple(prefixes)
+        for path in self.files:
+            rel = self.relpath(path)
+            if (not prefixes or self.force_all
+                    or any(rel.startswith(p) for p in prefixes)):
+                mod = self.get(path)
+                if mod is not None:
+                    yield mod
+
+    @property
+    def parse_errors(self) -> List[Finding]:
+        return list(self._errors)
+
+
+class LintEngine:
+    """Run a selection of checkers over one shared cache."""
+
+    def __init__(self, checkers: Iterable, cache: ModuleCache):
+        self.checkers = list(checkers)
+        self.cache = cache
+
+    def run(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for checker in self.checkers:
+            for f in checker.run(self.cache):
+                mod = self.cache._parsed.get(f.file)
+                if mod is not None and mod.is_suppressed(f.line, f.code):
+                    continue
+                findings.append(f)
+        findings.extend(self.cache.parse_errors)
+        findings.sort(key=lambda f: (f.file, f.line, f.code))
+        return findings
+
+
+# ------------------------------------------------------------- rendering ----
+
+def render_text(findings: List[Finding], n_files: int) -> str:
+    lines = [f.render() for f in findings]
+    noun = "finding" if len(findings) == 1 else "findings"
+    lines.append(f"# {len(findings)} {noun} in {n_files} file(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: List[Finding], n_files: int) -> str:
+    by_code: Dict[str, int] = {}
+    for f in findings:
+        by_code[f.code] = by_code.get(f.code, 0) + 1
+    return json.dumps({
+        "schema": "repro.lint/v1",
+        "files": n_files,
+        "findings": [f.to_dict() for f in findings],
+        "summary": {"total": len(findings),
+                    "by_code": dict(sorted(by_code.items()))},
+    }, indent=1)

@@ -1,0 +1,182 @@
+"""Spec-hash drift manifest (the ``spec_hash`` checker's committed state).
+
+``ExperimentSpec.spec_hash`` / ``ServingSpec.spec_hash`` elide fields at
+their default value under a salt (``HASH_SCHEMA`` / ``SERVE_HASH_SCHEMA``),
+so the on-disk record caches survive schema growth -- but ONLY as long as
+whoever touches the frozen field set also reasons about the salt (PR 3
+established the contract; PRs 5 and 6 each bumped a salt).  Nothing used to
+enforce that reasoning.  This module fingerprints the frozen dataclass
+field sets **statically** (AST -- names plus default-value source text) and
+compares them against the committed ``spec_manifest.json``:
+
+- field set or defaults changed, salt unchanged  -> ``H001``
+- salt changed, manifest not regenerated         -> ``H002``
+- manifest missing/unreadable                    -> ``H003``
+
+``python -m repro lint --write-manifest`` regenerates the manifest, and
+deliberately REFUSES while an H001 is outstanding: the only path to green
+is bump the salt, then regenerate -- the lint equivalent of the cache
+re-key PRs 5/6 performed by hand.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.engine import Finding, ModuleCache, REPO_ROOT
+
+MANIFEST_SCHEMA = "repro.lint.manifest/v1"
+MANIFEST_PATH = Path(__file__).resolve().parent / "spec_manifest.json"
+
+#: the hashed frozen specs this repo maintains: class -> (source file,
+#: salt constant name).  Extend this table when a new spec-hash family
+#: lands (and run ``--write-manifest``).
+HASHED_SPECS = {
+    "ExperimentSpec": ("src/repro/experiments/spec.py", "HASH_SCHEMA"),
+    "ServingSpec": ("src/repro/experiments/serving.py", "SERVE_HASH_SCHEMA"),
+}
+
+
+def dataclass_fields(tree: ast.Module,
+                     classname: str) -> Tuple[int, Dict[str, Optional[str]]]:
+    """(class def line, {field name -> default-value source or None}) for
+    one dataclass, read straight off the AST."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == classname:
+            fields: Dict[str, Optional[str]] = {}
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    default = (ast.unparse(stmt.value)
+                               if stmt.value is not None else None)
+                    fields[stmt.target.id] = default
+            return node.lineno, fields
+    raise LookupError(f"class {classname} not found")
+
+
+def salt_value(tree: ast.Module, salt_name: str) -> Tuple[int, str]:
+    """(line, value) of the module-level ``<salt_name> = "..."`` constant."""
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id == salt_name:
+                value = node.value
+                if isinstance(value, ast.Constant) and isinstance(
+                        value.value, str):
+                    return node.lineno, value.value
+    raise LookupError(f"salt constant {salt_name} not found")
+
+
+def current_state(cache: ModuleCache,
+                  specs: Dict[str, tuple] = None) -> Dict[str, dict]:
+    """The live fingerprint of every hashed spec: salt + field map."""
+    out: Dict[str, dict] = {}
+    for cls, (source, salt_name) in (specs or HASHED_SPECS).items():
+        mod = cache.load(source)
+        if mod is None:
+            continue
+        line, fields = dataclass_fields(mod.tree, cls)
+        salt_line, salt = salt_value(mod.tree, salt_name)
+        out[cls] = {"source": source, "salt_name": salt_name, "salt": salt,
+                    "fields": fields, "_line": line,
+                    "_salt_line": salt_line}
+    return out
+
+
+def load_manifest(path: Path = MANIFEST_PATH) -> Optional[dict]:
+    try:
+        data = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+    if data.get("schema") != MANIFEST_SCHEMA:
+        return None
+    return data
+
+
+def _diff(old: Dict[str, Optional[str]],
+          new: Dict[str, Optional[str]]) -> str:
+    added = sorted(set(new) - set(old))
+    removed = sorted(set(old) - set(new))
+    changed = sorted(k for k in set(old) & set(new) if old[k] != new[k])
+    parts: List[str] = []
+    if added:
+        parts.append(f"added {added}")
+    if removed:
+        parts.append(f"removed {removed}")
+    if changed:
+        parts.append(f"defaults changed {changed}")
+    return "; ".join(parts) or "reordered"
+
+
+def check_manifest(cache: ModuleCache, manifest_path: Path = MANIFEST_PATH,
+                   specs: Dict[str, tuple] = None) -> Iterator[Finding]:
+    """Yield the H001/H002/H003 findings for the current tree."""
+    state = current_state(cache, specs)
+    manifest = load_manifest(manifest_path)
+    if manifest is None:
+        for cls, cur in state.items():
+            yield Finding(
+                file=cur["source"], line=cur["_line"], code="H003",
+                message=(f"{cls}: no committed spec-hash manifest at "
+                         f"{manifest_path.name}; run `python -m repro lint "
+                         f"--write-manifest`"), checker="spec_hash")
+        return
+    recorded = manifest.get("specs", {})
+    for cls, cur in state.items():
+        rec = recorded.get(cls)
+        if rec is None:
+            yield Finding(
+                file=cur["source"], line=cur["_line"], code="H003",
+                message=(f"{cls} is hashed but absent from the manifest; "
+                         f"run `python -m repro lint --write-manifest`"),
+                checker="spec_hash")
+            continue
+        fields_changed = rec["fields"] != cur["fields"]
+        salt_changed = rec["salt"] != cur["salt"]
+        if fields_changed and not salt_changed:
+            yield Finding(
+                file=cur["source"], line=cur["_line"], code="H001",
+                message=(f"{cls} frozen field set changed "
+                         f"({_diff(rec['fields'], cur['fields'])}) without "
+                         f"bumping {cur['salt_name']} "
+                         f"(still {cur['salt']!r}): old cached records "
+                         f"would alias the new schema -- bump the salt, "
+                         f"re-key experiments/runs/ if needed, then run "
+                         f"`python -m repro lint --write-manifest`"),
+                checker="spec_hash")
+        elif salt_changed:
+            yield Finding(
+                file=cur["source"], line=cur["_salt_line"], code="H002",
+                message=(f"{cls}: {cur['salt_name']} bumped "
+                         f"{rec['salt']!r} -> {cur['salt']!r} but the "
+                         f"manifest still records the old schema; run "
+                         f"`python -m repro lint --write-manifest`"),
+                checker="spec_hash")
+
+
+def write_manifest(cache: ModuleCache, manifest_path: Path = MANIFEST_PATH,
+                   specs: Dict[str, tuple] = None) -> str:
+    """Regenerate the manifest.  Refuses while a field-set change is not
+    covered by a salt bump (H001) -- the bump must come first."""
+    blockers = [f for f in check_manifest(cache, manifest_path, specs)
+                if f.code == "H001"]
+    if blockers:
+        raise ValueError(
+            "refusing to rewrite the spec-hash manifest over an unbumped "
+            "schema change:\n" + "\n".join(f.render() for f in blockers))
+    state = current_state(cache, specs)
+    payload = {
+        "schema": MANIFEST_SCHEMA,
+        "specs": {cls: {k: v for k, v in cur.items()
+                        if not k.startswith("_")}
+                  for cls, cur in sorted(state.items())},
+    }
+    Path(manifest_path).write_text(json.dumps(payload, indent=1,
+                                              sort_keys=True) + "\n")
+    return str(manifest_path)

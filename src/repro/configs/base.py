@@ -29,7 +29,7 @@ class ModelConfig:
     moe_d_ff: int = 0              # per-expert ff width (0 -> d_ff)
     first_k_dense: int = 0         # leading dense layers (deepseek)
     dense_d_ff: int = 0            # ff width of those dense layers
-    capacity_factor: float = 1.25
+    capacity_factor: float = 1.25  # lint: ignore[C001] -- MoE capacity, not a price
     # --- MLA (DeepSeek latent attention) ---
     use_mla: bool = False
     kv_lora_rank: int = 0

@@ -25,7 +25,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.comm.codecs import make_codec
-from repro.core.comm.transports import CHANNEL_SPECS, transport_constants
+from repro.core.comm.transports import (
+    CHANNEL_SPECS, VMParameterServer, transport_constants)
 from repro.core.runtimes import _T_FAAS, _T_IAAS, B_NET, L_NET, interp_startup
 
 # ------------------------------- Table 6 -------------------------------------
@@ -180,8 +181,9 @@ def estimate_epochs(model, algo, ds, target_loss: float, *, sample_frac=0.1,
 
 # ------------------------------- what-ifs (§5.3.1) ----------------------------
 
-def hybridps_time(wl: CostInputs, w: int, *, bandwidth: float = 40.5e6,
-                  update_unit: float = 2.7 / 75e6) -> float:
+def hybridps_time(wl: CostInputs, w: int, *,
+                  bandwidth: float = VMParameterServer.base_bw,
+                  update_unit: float = VMParameterServer.update_unit) -> float:
     """Hybrid VM-PS FaaS: 2 transfers + PS update per round."""
     t = interp_startup(TABLE6["t_F"], w) + wl.s_bytes / w / TABLE6["B_S3"]
     per_round = (2 * wl.m_bytes / bandwidth
@@ -206,5 +208,5 @@ def q2_hot_data(wl: CostInputs, w: int) -> dict:
         + wl.s_bytes / w / bn
     # FaaS must still pull from the VM at Lambda-to-EC2 speed (~40.5 MB/s)
     faas_hot = faas_time(wl, w) - wl.s_bytes / w / TABLE6["B_S3"] \
-        + wl.s_bytes / w / 40.5e6
+        + wl.s_bytes / w / VMParameterServer.base_bw
     return {"iaas_hot": iaas_hot, "faas_hot": faas_hot}

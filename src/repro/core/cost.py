@@ -37,6 +37,7 @@ LAMBDA_3GB_FLOPS = 5e9            # 1.8 vCPU
 LAMBDA_1GB_FLOPS = 1.7e9          # 0.6 vCPU
 VM_CPU_FLOPS = 5.5e9              # t2.medium (2 vCPU, one training proc)
 VM_GPU_FLOPS = {"g3s.xlarge": 150e9, "g4dn.xlarge": 300e9}  # NN models only
+VM_GPU_FLOPS_DEFAULT = VM_GPU_FLOPS["g3s.xlarge"]  # unknown-GPU fallback
 
 # ---- serving memory model (DESIGN.md §14) ------------------------------------
 # Replica RAM bounds model weights + KV cache; memory bandwidth sets the
@@ -44,6 +45,7 @@ VM_GPU_FLOPS = {"g3s.xlarge": 150e9, "g4dn.xlarge": 300e9}  # NN models only
 LAMBDA_MEM_BW = 10e9              # bytes/s, Lambda sandbox DDR share
 VM_MEM_BW = 12e9                  # bytes/s, t2/c5-class DDR4
 VM_GPU_MEM_BW = {"g3s.xlarge": 160e9, "g4dn.xlarge": 320e9}   # HBM/GDDR
+VM_GPU_MEM_BW_DEFAULT = VM_GPU_MEM_BW["g4dn.xlarge"]  # unknown-GPU fallback
 EC2_RAM_GB = {
     "t2.medium": 4.0, "t2.2xlarge": 32.0,
     "c5.large": 4.0, "c5.xlarge": 8.0, "c5.4xlarge": 32.0,

@@ -93,7 +93,8 @@ def plan(workload, objective: str = "cheapest", *,
          deadline_s: float | None = None, budget_usd: float | None = None,
          workers=DEFAULT_WORKERS, platforms=("faas", "iaas"),
          channel: str = "s3", codec: str = "fp32", gb: float = 3.0,
-         instance: str = "t2.medium", slack: float = 1.25,
+         instance: str = "t2.medium",
+         slack: float = 1.25,  # lint: ignore[C001] -- deadline slack, not a price
          R: float | None = None) -> list[PlanOption]:
     """Sweep ``workers`` x ``platforms`` through the analytic model and
     return options ranked best-first: feasible options (deadline + budget)

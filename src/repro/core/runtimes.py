@@ -72,7 +72,10 @@ B_S3 = CHANNEL_SPECS["s3"].bandwidth
 L_S3 = CHANNEL_SPECS["s3"].latency
 # the t2.medium row doubles as the comm package's "nic" transport default
 B_NET = {"t2.medium": NIC_BANDWIDTH, "c5.large": 225e6, "c5.xlarge": 600e6,
-         "t2.2xlarge": 120e6, "c5.4xlarge": 1250e6, "m5a.12xlarge": 1250e6,
+         # t2.2xlarge's NIC coincides with the t2.medium row's value but is
+         # its own Table 6 measurement, not a copy of NIC_BANDWIDTH:
+         "t2.2xlarge": 120e6,  # lint: ignore[C001]
+         "c5.4xlarge": 1250e6, "m5a.12xlarge": 1250e6,
          "g3s.xlarge": 1250e6, "g4dn.xlarge": 1250e6}
 L_NET = {"t2.medium": NIC_LATENCY, "c5.large": 1.5e-4}
 
@@ -229,10 +232,10 @@ class FaaSRuntime(BasePlatform):
         # when it was (re-)invoked into the fleet (joined_at == 0 for the
         # whole initial fleet, so fixed fleets bill exactly as before);
         # retired workers' usage was folded into retired_cost on exit
-        gb_seconds = float(np.dot(self.fleet.gb_array(),
-                                  ctx.clock - ctx.joined_at))
+        gb_s = float(np.dot(self.fleet.gb_array(),
+                            ctx.clock - ctx.joined_at))
         sim_time = float(np.max(ctx.clock))
-        return (gb_seconds * pricing.LAMBDA_GB_S
+        return (gb_s * pricing.LAMBDA_GB_S
                 + ctx.invocations * pricing.LAMBDA_REQUEST
                 + ctx.comm.service_cost(sim_time)
                 + ctx.retired_cost)
@@ -336,7 +339,8 @@ class IaaSRuntime(BasePlatform):
         # capability estimate); with a model, convex workloads fall back to
         # CPU speed -- the paper's NN-only GPU rule.
         if self.fleet.gpu and (model is None or not model.convex):
-            return np.asarray([pricing.VM_GPU_FLOPS.get(i, 150e9)
+            return np.asarray([pricing.VM_GPU_FLOPS.get(
+                                   i, pricing.VM_GPU_FLOPS_DEFAULT)
                                for i in self.fleet.instances()])
         return np.full(self.workers, pricing.VM_CPU_FLOPS)
 
@@ -347,7 +351,7 @@ class IaaSRuntime(BasePlatform):
 
     def _net(self) -> VMNetwork:
         insts = self.fleet.instances()
-        bn = min(B_NET.get(i, 120e6) for i in insts)       # slowest NIC
+        bn = min(B_NET.get(i, NIC_BANDWIDTH) for i in insts)  # slowest NIC
         ln = max(L_NET.get(i, 5e-4) for i in insts)
         return VMNetwork(bn, ln)
 
@@ -365,7 +369,7 @@ class IaaSRuntime(BasePlatform):
 
     def load_time(self, part_bytes: int, data_local: bool = False) -> float:
         if data_local:
-            return part_bytes / min(B_NET.get(i, 120e6)
+            return part_bytes / min(B_NET.get(i, NIC_BANDWIDTH)
                                     for i in self.fleet.instances())
         return part_bytes / B_S3
 
@@ -441,7 +445,8 @@ class IaaSRuntime(BasePlatform):
         inst = str(self.fleet.instances()[0])
         if self.fleet.gpu:
             mem_gb = pricing.GPU_HBM_GB.get(inst, 16.0)
-            mem_bw = pricing.VM_GPU_MEM_BW.get(inst, 320e9)
+            mem_bw = pricing.VM_GPU_MEM_BW.get(
+                inst, pricing.VM_GPU_MEM_BW_DEFAULT)
         else:
             mem_gb = pricing.EC2_RAM_GB.get(inst, 4.0)
             mem_bw = pricing.VM_MEM_BW

@@ -57,6 +57,23 @@ LOCAL_NAME = "local"
 DILOCO_NAME = "diloco"
 COMPRESS_SUFFIX = "c8"
 
+#: the sync-protocol string grammar, one entry per selectable protocol --
+#: same registry convention as TRANSPORTS/CODECS/POLICIES/ARRIVALS so
+#: ``repro list`` and the lint registry checker can enumerate it.  Keep in
+#: step with :func:`make_sync` / :func:`sync_name`.
+SYNC_GRAMMARS = (
+    f"{BSP_NAME}",
+    f"{ASP_NAME}",
+    f"{SSP_NAME}[:<staleness>]",
+    f"{LOCAL_NAME}[:<H>][:{COMPRESS_SUFFIX}]",
+    f"{DILOCO_NAME}[:<H>][:{COMPRESS_SUFFIX}]",
+)
+
+
+def list_syncs() -> list:
+    """The selectable sync grammars (``repro list`` prints these)."""
+    return list(SYNC_GRAMMARS)
+
 
 # ------------------------------------------------ shared local-SGD math -----
 # One implementation for both halves of the codebase: the discrete-event

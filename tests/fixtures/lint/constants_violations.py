@@ -1,0 +1,14 @@
+"""Seeded constant-duplication violations (never imported; AST fixture).
+
+Line numbers are asserted exactly in tests/test_analysis.py.
+"""
+
+S3_BANDWIDTH_COPY = 65e6                     # C001 (line 6): s3 bandwidth
+
+
+def lambda_bill(gb_s: float) -> float:
+    return gb_s * 1.66667e-5                 # C001 (line 10): LAMBDA_GB_S
+
+
+def innocuous() -> float:
+    return 10e9 + 0.3                        # 1-sig knobs: not distinctive

@@ -1,0 +1,34 @@
+"""Seeded determinism violations for the lint fixture tests.
+
+Never imported -- the lint engine reads it as an AST only.  Line numbers
+are asserted exactly in tests/test_analysis.py; append, don't reorder.
+"""
+import random
+import time
+from datetime import datetime
+from time import perf_counter
+
+import numpy as np
+
+
+def ok_seeded(seed: int) -> float:
+    rng = np.random.default_rng(seed)        # allowed: seeded constructor
+    return float(rng.standard_normal())
+
+
+def bad_wall_clock() -> float:
+    t0 = time.time()                         # D001 (line 20)
+    t1 = perf_counter()                      # D001 (line 21)
+    stamp = datetime.now()                   # D001 (line 22)
+    return t0 + t1 + stamp.timestamp()
+
+
+def bad_rng() -> float:
+    a = np.random.rand()                     # D002 (line 27)
+    b = random.random()                      # D002 (line 28)
+    np.random.seed(0)                        # D002 (line 29)
+    return a + b
+
+
+def suppressed_wall_clock() -> float:
+    return time.time()  # lint: ignore[D001] -- fixture suppression demo

@@ -1,0 +1,15 @@
+"""Seeded metering-discipline violations (never imported; AST fixture).
+
+Line numbers are asserted exactly in tests/test_analysis.py.
+"""
+
+
+def steal_the_books(ctx, res) -> None:
+    ctx.cost = 0.0                           # M001 (line 8)
+    res.sim_time += 1.0                      # M001 (line 9)
+    ctx.clock[0] = 5.0                       # M001 (line 10)
+    res.comm_bytes, x = 0, 1                 # M001 (line 11), tuple target
+
+
+def bill_early(platform, ctx) -> float:
+    return platform.finalize_cost(ctx)       # M002 (line 15)

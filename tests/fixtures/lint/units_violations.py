@@ -1,0 +1,21 @@
+"""Seeded unit-hygiene violations (never imported; AST fixture only).
+
+Line numbers are asserted exactly in tests/test_analysis.py.
+"""
+
+
+def bill(duration_seconds: float) -> float:  # U001 (line 7): _seconds
+    cost_dollars = duration_seconds * 0.1    # U001 (line 8): _dollars
+    return cost_dollars
+
+
+def mixed(total_s: float, p50_ms: float, payload_bytes: float) -> float:
+    bad = total_s + p50_ms                   # U002 (line 13): _s + _ms
+    worse = payload_bytes - total_s          # U002 (line 14): _bytes - _s
+    fine = total_s + total_s                 # same unit: not flagged
+    converted = total_s + p50_ms / 1e3       # rhs is a BinOp: not flagged
+    return bad + worse + fine + converted
+
+
+def suppressed(total_s: float, p50_ms: float) -> float:
+    return total_s + p50_ms  # lint: ignore[U002] -- fixture suppression demo

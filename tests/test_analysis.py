@@ -1,0 +1,248 @@
+"""repro.analysis (DESIGN.md §15): the lint engine and its checkers.
+
+Covers: exact finding codes/lines on the seeded fixture files under
+tests/fixtures/lint/, suppression comments, a zero-findings run on the
+live tree (the merge gate), the ``--format json`` schema, registry-checker
+mechanics, and the spec-hash drift contract -- including the acceptance
+scenario where an ExperimentSpec field is added WITHOUT bumping
+HASH_SCHEMA (exercised on a mutated copy of the real source).
+"""
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    CHECKERS, Finding, LintEngine, ModuleCache, make_checker, run_lint,
+    select_checkers, write_manifest)
+from repro.analysis.checkers import RegistryChecker
+from repro.analysis.manifest import HASHED_SPECS, check_manifest
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "lint"
+
+
+def lint_fixture(name: str):
+    findings, _ = run_lint(paths=[FIXTURES / name])
+    return {(f.code, f.line) for f in findings}, findings
+
+
+# ------------------------------------------------- fixtures: exact findings --
+
+def test_determinism_fixture_exact_codes_and_lines():
+    got, findings = lint_fixture("det_violations.py")
+    assert got == {("D001", 20), ("D001", 21), ("D001", 22),
+                   ("D002", 27), ("D002", 28), ("D002", 29)}
+    # the suppressed time.time() on line 34 must NOT be reported
+    assert all(f.line != 34 for f in findings)
+    assert all(f.checker == "determinism" for f in findings)
+
+
+def test_units_fixture_exact_codes_and_lines():
+    got, findings = lint_fixture("units_violations.py")
+    assert got == {("U001", 7), ("U001", 8), ("U002", 13), ("U002", 14)}
+    assert all(f.line != 21 for f in findings)   # suppressed U002
+
+
+def test_metering_fixture_exact_codes_and_lines():
+    got, _ = lint_fixture("metering_violations.py")
+    assert got == {("M001", 8), ("M001", 9), ("M001", 10), ("M001", 11),
+                   ("M002", 15)}
+
+
+def test_constants_fixture_exact_codes_and_lines():
+    got, findings = lint_fixture("constants_violations.py")
+    assert got == {("C001", 6), ("C001", 10)}
+    # the finding names the owning symbol and home module
+    by_line = {f.line: f.message for f in findings}
+    assert "LAMBDA_GB_S" in by_line[10]
+    assert "cost.py" in by_line[10]
+
+
+def test_finding_render_format():
+    f = Finding(file="a/b.py", line=7, code="D001", message="no clocks")
+    assert f.render() == "a/b.py:7 D001 no clocks"
+
+
+def test_syntax_error_becomes_e999(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    findings, _ = run_lint(paths=[bad])
+    assert [f.code for f in findings] == ["E999"]
+
+
+# ----------------------------------------------------- the merge gate -------
+
+def test_live_tree_is_clean():
+    """The acceptance bar: `python -m repro lint` exits 0 on this tree."""
+    findings, n_files = run_lint()
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert n_files > 50          # it really scanned src/repro + benchmarks
+
+
+def test_cli_lint_clean_tree_and_json_schema():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "lint", "--format", "json"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(proc.stdout)
+    assert data["schema"] == "repro.lint/v1"
+    assert data["findings"] == []
+    assert data["summary"] == {"total": 0, "by_code": {}}
+    assert data["files"] > 50
+
+
+def test_cli_lint_fixture_exits_nonzero_with_file_line_code():
+    rel = "tests/fixtures/lint/det_violations.py"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "lint", rel],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert f"{rel}:20 D001 " in proc.stdout
+
+
+def test_cli_lint_unknown_checker_errors():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "lint", "--select", "nonsense"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode != 0
+    assert "unknown checker" in (proc.stdout + proc.stderr)
+
+
+# ------------------------------------------------- the checker registry -----
+
+def test_checker_registry_round_trip():
+    for name in CHECKERS:
+        checker = make_checker(name)
+        assert checker.name == name
+        assert checker.codes and checker.description
+    with pytest.raises(KeyError):
+        make_checker("bogus")
+
+
+def test_select_checkers_skips_tree_level_on_explicit_paths():
+    names = {c.name for c in select_checkers(paths_given=True)}
+    assert "spec_hash" not in names and "registry" not in names
+    # ... unless selected by name
+    assert {c.name for c in select_checkers(["spec_hash"],
+                                            paths_given=True)} == {"spec_hash"}
+
+
+def test_selected_checkers_share_one_parse_per_file():
+    cache = ModuleCache(files=[FIXTURES / "units_violations.py"],
+                        force_all=True)
+    LintEngine([make_checker("units"), make_checker("determinism"),
+                make_checker("metering")], cache).run()
+    assert len(cache._parsed) == 1
+
+
+# ---------------------------------------------------- registry checker ------
+
+def test_registry_names_all_non_empty_and_listed():
+    checker = RegistryChecker()
+    listing = checker._cli_list_output()
+    for registry in checker.TABLE:
+        names = checker._names(registry)
+        assert names, registry
+        for name in names:
+            assert name.partition(":")[0] in listing, (registry, name)
+
+
+def test_registry_checker_r001_r002_mechanics(monkeypatch):
+    cache = ModuleCache()
+    checker = RegistryChecker()
+    # a name the CLI listing does not print -> R001
+    monkeypatch.setattr(RegistryChecker, "_cli_list_output",
+                        staticmethod(lambda: ""))
+    codes = {f.code for f in checker.run(cache)}
+    assert "R001" in codes
+    # a registry whose required test identifiers nothing references -> R002
+    monkeypatch.setattr(
+        RegistryChecker, "_cli_list_output",
+        staticmethod(lambda: " ".join(
+            n for r in checker.TABLE for n in checker._names(r))))
+    monkeypatch.setitem(checker.TABLE, "sync",
+                        ("src/repro/core/sync.py", "SYNC_GRAMMARS",
+                         {"identifier_no_test_ever_uses"}))
+    findings = list(checker.run(ModuleCache()))
+    assert {f.code for f in findings} == {"R002"}
+    assert any(f.file == "src/repro/core/sync.py" for f in findings)
+
+
+# ---------------------------------------------------- spec-hash drift -------
+
+SPEC_REL = HASHED_SPECS["ExperimentSpec"][0]
+
+
+def _spec_playground(tmp_path: Path) -> tuple:
+    """A throwaway tree holding copies of the real hashed-spec sources,
+    plus a manifest freshly written against them."""
+    root = tmp_path / "tree"
+    for cls, (rel, _salt) in HASHED_SPECS.items():
+        dst = root / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(ROOT / rel, dst)
+    manifest = tmp_path / "spec_manifest.json"
+    write_manifest(ModuleCache(root=root), manifest)
+    return root, manifest
+
+
+def _mutate(root: Path, old: str, new: str, rel: str = SPEC_REL) -> None:
+    path = root / rel
+    source = path.read_text()
+    assert old in source, f"mutation anchor {old!r} vanished from {rel}"
+    path.write_text(source.replace(old, new))
+
+
+def test_spec_hash_clean_after_write_manifest(tmp_path):
+    root, manifest = _spec_playground(tmp_path)
+    assert list(check_manifest(ModuleCache(root=root), manifest)) == []
+
+
+def test_spec_hash_field_added_without_salt_bump_fails(tmp_path):
+    """The acceptance scenario: grow ExperimentSpec, forget HASH_SCHEMA."""
+    root, manifest = _spec_playground(tmp_path)
+    _mutate(root, "    max_epochs: int",
+            "    sneaky_new_knob: float = 0.0\n    max_epochs: int")
+    findings = list(check_manifest(ModuleCache(root=root), manifest))
+    assert [f.code for f in findings] == ["H001"]
+    assert findings[0].file == SPEC_REL
+    assert "sneaky_new_knob" in findings[0].message
+    assert "HASH_SCHEMA" in findings[0].message
+    # --write-manifest refuses to paper over the unbumped change
+    with pytest.raises(ValueError, match="refusing"):
+        write_manifest(ModuleCache(root=root), manifest)
+
+
+def test_spec_hash_default_change_also_fails(tmp_path):
+    root, manifest = _spec_playground(tmp_path)
+    _mutate(root, "    max_epochs: int = 3", "    max_epochs: int = 4")
+    findings = list(check_manifest(ModuleCache(root=root), manifest))
+    assert [f.code for f in findings] == ["H001"]
+
+
+def test_spec_hash_salt_bump_then_regenerate_goes_green(tmp_path):
+    root, manifest = _spec_playground(tmp_path)
+    _mutate(root, "    max_epochs: int",
+            "    sneaky_new_knob: float = 0.0\n    max_epochs: int")
+    _mutate(root, 'HASH_SCHEMA = "', 'HASH_SCHEMA = "bumped-')
+    cache = ModuleCache(root=root)
+    findings = list(check_manifest(cache, manifest))
+    assert [f.code for f in findings] == ["H002"]   # stale manifest
+    write_manifest(cache, manifest)                 # now allowed
+    assert list(check_manifest(ModuleCache(root=root), manifest)) == []
+
+
+def test_spec_hash_missing_manifest_is_h003(tmp_path):
+    root, _ = _spec_playground(tmp_path)
+    missing = tmp_path / "nowhere.json"
+    codes = [f.code for f in check_manifest(ModuleCache(root=root), missing)]
+    assert codes == ["H003"] * len(HASHED_SPECS)
+
+
+def test_committed_manifest_matches_the_live_tree():
+    """The repo's own manifest is in sync (the CI gate relies on it)."""
+    assert list(check_manifest(ModuleCache())) == []
