@@ -5,8 +5,22 @@ and report the model bytes each kernel must stream, i.e. the TPU roofline
 floor time = bytes / 819 GB/s.  The Pallas kernels themselves are validated
 in interpret mode (tests/test_kernels.py) -- interpret-mode timing is not
 meaningful, so `derived` reports the v5e roofline floor instead.
+
+This bench also closes the measured-MFU loop (DESIGN.md §16): it compiles
+the full smollm-360m train_4k step on a 2x4 host mesh in a subprocess
+(``repro.launch.dryrun`` -- jax pins the device count at first init) and
+emits the compute-bound roofline fraction into the committed
+``BENCH_kernels.json``, which ``PodPlatform(mfu="measured")`` and the
+analytic planner's pod rows read (:mod:`repro.core.calibration`).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +30,47 @@ from benchmarks.common import emit, emit_root, timeit
 from repro.distributed.roofline import HBM_BW, PEAK_FLOPS
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant8.ops import int8_roundtrip
 from repro.kernels.quant8.ref import quantize8_ref
+from repro.kernels.topk_ef.ops import topk_ef
 from repro.models.ssm import ssd_scan
+
+#: the measured-MFU dry-run cell: full (non-reduced) arch so the useful-FLOPs
+#: share reflects the real model, host mesh small enough to compile in ~5 s
+MFU_ARCH, MFU_SHAPE, MFU_MESH = "smollm-360m", "train_4k", "2x4"
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def measure_roofline_fraction() -> dict:
+    """Run the MFU dry-run cell in a subprocess and return
+    ``{"roofline_fraction": ..., "roofline_source": ...}`` (empty dict if
+    the compile fails -- the committed snapshot then remains authoritative)."""
+    from repro.core.calibration import compute_measured_mfu
+
+    env = dict(os.environ,
+               REPRO_XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", MFU_ARCH,
+         "--shape", MFU_SHAPE, "--mesh", MFU_MESH],
+        env=env, capture_output=True, text=True)
+    artifact = DRYRUN_DIR / f"{MFU_ARCH}__{MFU_SHAPE}__{MFU_MESH}.json"
+    if proc.returncode != 0 or not artifact.exists():
+        print(f"# measured-MFU dryrun failed:\n{proc.stderr[-2000:]}",
+              file=sys.stderr)
+        return {}
+    d = json.loads(artifact.read_text())
+    if not d.get("ok") or d.get("skipped"):
+        return {}
+    frac = compute_measured_mfu(d)
+    return {
+        "roofline_fraction": frac,
+        "roofline_source": {
+            "arch": MFU_ARCH, "shape": MFU_SHAPE, "mesh": MFU_MESH,
+            "chips": d["chips"],
+            "model_flops_global": d["model_flops_global"],
+            "t_compute_s": d["t_compute_s"],
+        },
+    }
 
 
 def run(quick: bool = True):
@@ -69,10 +122,38 @@ def run(quick: bool = True):
     rows.append({"name": "kern_quant8_ref", "us_per_call": t * 1e6,
                  "derived": f"cpu_GBps={bytes_q / t / 1e9:.1f};"
                             f"tpu_floor_us={bytes_q / HBM_BW * 1e6:.1f}"})
+
+    # codec hot paths: the fused EF roundtrip and the topk filter exactly as
+    # Int8EFCodec / TopKCodec execute them (ref backend = the CPU baseline
+    # of the same padded-tile plumbing the Pallas kernels run on TPU)
+    xc = jnp.asarray(rng.standard_normal((nq,)), jnp.float32)
+    fr = lambda: jax.block_until_ready(int8_roundtrip(xc, backend="ref")[2])
+    t = timeit(fr)
+    # read fp32 + write int8 codes + fp32 scales + fp32 deq + fp32 err
+    bytes_r = nq * (4 + 1 + 4 / 256 + 4 + 4)
+    rows.append({"name": "kern_int8_roundtrip_ref", "us_per_call": t * 1e6,
+                 "derived": f"cpu_GBps={bytes_r / t / 1e9:.1f};"
+                            f"tpu_floor_us={bytes_r / HBM_BW * 1e6:.1f}"})
+
+    kt = max(1, nq // 100)
+    ft = lambda: jax.block_until_ready(topk_ef(xc, kt, backend="ref")[0])
+    t = timeit(ft)
+    bytes_t = nq * 12  # read fp32 + write kept + residual
+    rows.append({"name": "kern_topk_ef_ref", "us_per_call": t * 1e6,
+                 "derived": f"cpu_GBps={bytes_t / t / 1e9:.1f};"
+                            f"tpu_floor_us={bytes_t / HBM_BW * 1e6:.1f}"})
+
+    mfu = measure_roofline_fraction()
     emit_root("kernels", rows, quick=quick,
-              peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW)
+              peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, **mfu)
     return emit(rows, "bench_kernels")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller tensors (CI smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size tensors (overrides --quick)")
+    args = ap.parse_args()
+    run(quick=not args.full)

@@ -8,7 +8,7 @@ with ``python -m repro run faas_vs_pod``.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_root
 from repro.experiments import get_preset, run_experiment
 
 
@@ -43,6 +43,7 @@ def run(quick: bool = True):
     assert sweep["podsgd_local8_c8"]["comm_bytes"] < \
         sweep["podsgd_local8"]["comm_bytes"] / 3.9, \
         "int8 deltas must cut metered bytes ~4x on top of the H x"
+    emit_root("pods", rows + sweep_rows, quick=quick)
     return emit(rows + sweep_rows, "bench_pods")
 
 

@@ -1,11 +1,17 @@
 """Roofline table (beyond paper): per (arch x shape x mesh) three-term
-roofline from the dry-run artifacts in experiments/dryrun/."""
+roofline from the dry-run artifacts in experiments/dryrun/.
+
+Joins the committed repo-root perf trajectory (``BENCH_roofline.json``,
+schema ``repro.bench.roofline/v1``): the committed full-arch dry-run
+artifact (the measured-MFU cell, see ``bench_kernels``) keeps the file
+populated on a fresh checkout; regenerate more cells with
+``python -m repro.launch.dryrun``."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_root
 
 DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
@@ -31,6 +37,7 @@ def run(quick: bool = True):
     if not rows:
         rows.append({"name": "roofline_missing", "us_per_call": 0,
                      "derived": "run `python -m repro.launch.dryrun` first"})
+    emit_root("roofline", rows, quick=quick)
     return emit(rows, "bench_roofline")
 
 

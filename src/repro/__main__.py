@@ -174,8 +174,12 @@ def cmd_plan(args) -> int:
     workers = ([int(w) for w in args.workers.split(",")]
                if args.workers else None)
     kw = {} if workers is None else {"workers": workers}
+    platforms = tuple(p.strip() for p in args.platforms.split(",")
+                      if p.strip())
+    mfu = args.mfu if args.mfu == "measured" else float(args.mfu)
     options = plan(target, args.objective, deadline_s=args.deadline_s,
-                   budget_usd=args.budget_usd, **kw)
+                   budget_usd=args.budget_usd, platforms=platforms,
+                   mfu=mfu, **kw)
     print(f"# plan for {label} (objective={args.objective})")
     print(f"{'rank':>4s} {'platform':<8s} {'w':>4s} {'time_s':>10s} "
           f"{'cost_$':>9s}  note")
@@ -356,6 +360,14 @@ def main(argv: list[str] | None = None) -> int:
     plan_p.add_argument("--workers", default=None, metavar="W1,W2,...",
                         help="fleet widths to sweep (default: the Fig-11 "
                              "axis 1..300)")
+    plan_p.add_argument("--platforms", default="faas,iaas",
+                        metavar="P1,P2,...",
+                        help="platforms to sweep (faas, iaas, pod; "
+                             "default: faas,iaas)")
+    plan_p.add_argument("--mfu", default="0.4",
+                        help="pod MFU: a fraction in (0, 1], or 'measured' "
+                             "to read the benchmarked roofline fraction "
+                             "from BENCH_kernels.json")
     plan_p.set_defaults(fn=cmd_plan)
 
     serve_p = sub.add_parser(

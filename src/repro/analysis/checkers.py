@@ -516,7 +516,8 @@ class MeteringChecker(Checker):
 
 #: modules that own measured constants: everything numeric defined at
 #: module/class level here is "owned" and may not be re-hardcoded elsewhere
-_CONSTANT_HOMES = ("src/repro/core/comm/transports.py",
+_CONSTANT_HOMES = ("src/repro/core/calibration.py",
+                   "src/repro/core/comm/transports.py",
                    "src/repro/core/cost.py",
                    "src/repro/distributed/roofline.py")
 

@@ -27,7 +27,10 @@ import numpy as np
 from repro.core.comm.codecs import make_codec
 from repro.core.comm.transports import (
     CHANNEL_SPECS, VMParameterServer, transport_constants)
-from repro.core.runtimes import _T_FAAS, _T_IAAS, B_NET, L_NET, interp_startup
+from repro.core.runtimes import (
+    _T_FAAS, _T_IAAS, _T_POD, B_NET, L_NET, POD_DCN_BANDWIDTH,
+    POD_DCN_LATENCY, interp_startup,
+)
 
 # ------------------------------- Table 6 -------------------------------------
 # Derived from the SAME Transport constants the simulator meters with
@@ -155,6 +158,35 @@ def iaas_cost(wl: CostInputs, w: int, t: float,
               instance: str = "t2.medium") -> float:
     from repro.core import cost as pricing
     return pricing.ec2_cost(instance, t, w)
+
+
+def pod_time(wl: CostInputs, w: int, *, chips_per_pod: int = 4,
+             mfu: float | str = 0.4, codec: str = "fp32") -> float:
+    """Pod(w): the :class:`~repro.core.runtimes.PodPlatform` analogue of
+    FaaS(w)/IaaS(w) -- pod provisioning + S3 data load + ``R * f(w)``
+    rounds of a cross-pod DCN ring all-reduce and roofline-discounted
+    compute.  ``mfu="measured"`` reads the benchmarked compute-bound
+    roofline fraction (:mod:`repro.core.calibration`), so the analytic pod
+    rows derive from measurements, not the asserted 0.4."""
+    from repro.core import cost as pricing
+    from repro.core.calibration import resolve_mfu
+    from repro.distributed.roofline import PEAK_FLOPS
+
+    mfu = resolve_mfu(mfu)
+    m = wire_bytes(wl.m_bytes, codec)
+    # wl.C is single-worker epoch seconds on the t2.medium CPU model
+    # (CostInputs' calibration); rescale to one slice's discounted FLOP/s
+    c_pod = wl.C * pricing.VM_CPU_FLOPS / (chips_per_pod * PEAK_FLOPS * mfu)
+    t = interp_startup(_T_POD, w) + wl.s_bytes / w / TABLE6["B_S3"]
+    per_round = (2 * w - 2) * (m / w / POD_DCN_BANDWIDTH + POD_DCN_LATENCY) \
+        + c_pod / w
+    return t + wl.R * wl.f(w) * per_round
+
+
+def pod_cost(wl: CostInputs, w: int, t: float,
+             chips_per_pod: int = 4) -> float:
+    from repro.core import cost as pricing
+    return w * chips_per_pod * pricing.TPU_CHIP_HOURLY * t / 3600.0
 
 
 # ----------------------------- epoch estimator --------------------------------

@@ -1,0 +1,71 @@
+"""Measured-MFU calibration: the pod platform's FLOP/s discount, closed-loop.
+
+:class:`repro.core.runtimes.PodPlatform` discounts hardware peak by an MFU
+factor (``worker_flops = chips_per_pod * PEAK_FLOPS * mfu``).  Historically
+that was an *asserted* ``0.4``; this module makes ``mfu="measured"`` read
+the benchmarked value instead, so ``python -m repro plan`` pod rows derive
+from measurements (DESIGN.md §16).
+
+The measurement: ``benchmarks/bench_kernels.py`` compiles the full
+smollm-360m train_4k step on a 2x4 host mesh (``repro.launch.dryrun`` in a
+subprocess -- jax pins the device count at first init) and records the
+**compute-bound roofline fraction** ``model_flops / (chips * PEAK_FLOPS *
+t_compute)`` == useful-FLOPs share of executed HLO FLOPs
+(:func:`compute_measured_mfu`), emitted as ``roofline_fraction`` in the
+committed ``BENCH_kernels.json``.  Train shapes are compute-bound on TPU
+(arithmetic intensity far above the ridge; the host-compiled *byte* counts
+are a CPU-backend artifact -- see ``roofline.analyze``), so the
+compute-bound fraction IS the roofline MFU estimate for this workload.
+
+:func:`measured_mfu` reads the committed snapshot at the repo root; the
+:data:`MEASURED_MFU` constant is the same number baked in as the fallback
+for installs without the file.  This module is a C001 lint home: the
+measured value may not be re-hardcoded elsewhere.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+#: fallback snapshot of BENCH_kernels.json's ``roofline_fraction`` --
+#: regenerate with ``python -m benchmarks.bench_kernels`` after kernel or
+#: model changes and keep this in step (asserted in tests)
+MEASURED_MFU = 0.520
+
+_BENCH_KERNELS = Path(__file__).resolve().parents[3] / "BENCH_kernels.json"
+
+
+def compute_measured_mfu(artifact: dict) -> float:
+    """Compute-bound roofline fraction of one dry-run artifact:
+    ``model_flops_global / (chips * PEAK_FLOPS * t_compute_s)``."""
+    from repro.distributed.roofline import PEAK_FLOPS
+
+    denom = artifact["chips"] * PEAK_FLOPS * artifact["t_compute_s"]
+    return float(artifact["model_flops_global"] / denom)
+
+
+def measured_mfu(path: Path | None = None) -> float:
+    """The benchmarked MFU: ``roofline_fraction`` from the committed
+    ``BENCH_kernels.json`` (:data:`MEASURED_MFU` when the file is absent
+    or predates the measurement)."""
+    p = _BENCH_KERNELS if path is None else Path(path)
+    try:
+        payload = json.loads(p.read_text())
+    except (OSError, ValueError):
+        return MEASURED_MFU
+    frac = payload.get("roofline_fraction")
+    if not isinstance(frac, (int, float)) or not 0.0 < frac <= 1.0:
+        return MEASURED_MFU
+    return float(frac)
+
+
+def resolve_mfu(mfu) -> float:
+    """``"measured"`` -> :func:`measured_mfu`; numbers pass through.
+    The one resolution point shared by :class:`PodPlatform` and the
+    analytic planner's pod rows."""
+    if isinstance(mfu, str):
+        if mfu != "measured":
+            raise ValueError(
+                f"mfu must be a number in (0, 1] or 'measured', got {mfu!r}")
+        return measured_mfu()
+    return float(mfu)

@@ -23,7 +23,8 @@ silently ignored.
 """
 from repro.core.comm.codecs import (  # noqa: F401
     CODECS, Codec, Fp32Codec, Int8EFCodec, TopKCodec, dequantize_int8,
-    int8_wire_floats, list_codecs, make_codec, quantize_int8_ef,
+    int8_encode_decode, int8_wire_floats, list_codecs, make_codec,
+    quantize_int8_ef,
 )
 from repro.core.comm.collectives import (  # noqa: F401
     COLLECTIVES, PATTERNS, Collective, PSPushPull, RingAllReduce,

@@ -1,4 +1,4 @@
-"""The **Codec** axis of the communication design space (DESIGN.md §12).
+"""The **Codec** axis of the communication design space (DESIGN.md §12, §16).
 
 A codec is *what an update vector looks like on the wire*.  The paper's
 core finding -- FaaS pays off only for models with *reduced* communication
@@ -14,12 +14,19 @@ included), while the *metered wire payload* is the packed form --
 ``wire_floats(n)`` f32 slots for an ``n``-element vector.  Metered
 ``comm_bytes`` therefore shrink by exactly ``wire_floats(n) / n``.
 
-The int8 quantizer trio (:func:`quantize_int8_ef` /
-:func:`dequantize_int8` / :func:`int8_wire_floats`) is the ONE
-implementation shared by the whole repo: the discrete-event stack here,
-the LocalSGD/DiLoCo sync protocols (:mod:`repro.core.sync`), and the real
-multi-pod training stack (:mod:`repro.distributed.local_sgd`, which applies
-the same functions per parameter leaf inside ``shard_map``).
+The codec math itself is NOT implemented here: :class:`Int8EFCodec` and
+:class:`TopKCodec` execute the Pallas kernels in :mod:`repro.kernels.quant8`
+and :mod:`repro.kernels.topk_ef` (interpret mode off-TPU, real Mosaic
+lowering on TPU; ``REPRO_CODEC_BACKEND=ref`` selects the straight-line
+oracle fallback).  Quantization is **blockwise**: one fp32 scale per
+256-element block (= ``kernels.quant8.kernel.BLOCK``), which is what the
+silicon path ships and what :func:`int8_wire_floats` meters.  The
+per-channel helper trio (:func:`quantize_int8_ef` / :func:`dequantize_int8`)
+delegates to the same :mod:`repro.kernels.quant8.ref` formula for the
+TP-sharded in-jit path in :mod:`repro.distributed.local_sgd`, whose
+per-channel (no-reshape) layout is load-bearing -- 256-block quantization
+of TP-sharded dims made GSPMD replicate the codes (measured regression,
+see its §Perf P2 note).
 """
 from __future__ import annotations
 
@@ -27,32 +34,58 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+#: elements per quantization block == one fp32 wire scale; must equal
+#: ``repro.kernels.quant8.kernel.BLOCK`` (asserted in tests) -- kept as a
+#: plain int so importing the codec registry never imports jax
+QUANT_BLOCK = 256
+
 
 # --------------------------------------------------- shared quantizer math --
 
 def quantize_int8_ef(xe):
     """Symmetric per-channel (last-axis) int8 quantization with the error
     returned for feedback: ``xe`` should already include the carried
-    residual.  -> ``(codes int8, scales f32, error f32)`` with
-    ``dequantize_int8(codes, scales) + error == xe``."""
-    import jax.numpy as jnp
+    residual.  -> ``(codes int8, scales f32, error f32)``.
 
-    scale = jnp.maximum(
-        jnp.max(jnp.abs(xe), axis=-1, keepdims=True) / 127.0, 1e-12)
-    q = jnp.clip(jnp.round(xe / scale), -127, 127).astype(jnp.int8)
-    return q, scale, xe - q.astype(jnp.float32) * scale
+    Thin delegate to :func:`repro.kernels.quant8.ref.quantize8_ef_ref`
+    (the one statement of the quantizer formula); jit-traceable, used
+    per parameter leaf inside ``shard_map`` by
+    :mod:`repro.distributed.local_sgd`.
+    """
+    from repro.kernels.quant8.ref import quantize8_ef_ref
+
+    q, scale, _deq, err = quantize8_ef_ref(xe, axis=-1)
+    return q, scale, err
 
 
 def dequantize_int8(q, scale):
-    import jax.numpy as jnp
+    from repro.kernels.quant8.ref import dequantize8_ref
 
-    return q.astype(jnp.float32) * scale
+    return dequantize8_ref(q, scale)
 
 
 def int8_wire_floats(n: int) -> int:
     """f32 slots occupied by an int8-compressed n-element vector on the
-    wire: packed codes (4 per float) + one per-vector scale."""
-    return -(-n // 4) + 1
+    wire: packed codes (4 per float) + one fp32 scale per 256-element
+    block -- the blockwise form the quant8 kernel actually ships."""
+    return -(-n // 4) + -(-n // QUANT_BLOCK)
+
+
+def int8_encode_decode(x, residual=None):
+    """One blockwise-int8 EF wire round trip for an any-shape vector.
+
+    -> ``(deq, new_residual)`` both shaped like ``x``.  This is THE
+    simulate-time hot path: one fused Pallas pass
+    (:func:`repro.kernels.quant8.ops.int8_roundtrip`) emits codes, scales,
+    dequantized values and the carried error together.
+    """
+    x = np.asarray(x, np.float32)
+    if residual is not None:
+        x = x + residual
+    from repro.kernels.quant8.ops import int8_roundtrip
+
+    _q, _s, deq, err = int8_roundtrip(x)
+    return np.asarray(deq, np.float32), np.asarray(err, np.float32)
 
 
 # ----------------------------------------------------------------- protocol --
@@ -103,8 +136,9 @@ class Fp32Codec(_CodecBase):
 
 
 class Int8EFCodec(_CodecBase):
-    """int8 + error feedback: ~4x fewer wire bytes; the quantization error
-    is carried per worker into the next round (:func:`quantize_int8_ef`)."""
+    """Blockwise int8 + error feedback: ~4x fewer wire bytes; the
+    quantization error is carried per worker into the next round.  Executes
+    the fused quant8 EF Pallas kernel (:func:`int8_encode_decode`)."""
     name = "int8"
 
     def __init__(self):
@@ -114,12 +148,9 @@ class Int8EFCodec(_CodecBase):
         return int8_wire_floats(n)
 
     def encode_decode(self, worker: int, vec: np.ndarray) -> np.ndarray:
-        res = self._residual.get(worker)
-        if res is None:
-            res = np.zeros_like(vec, dtype=np.float32)
-        q, scale, err = quantize_int8_ef(np.asarray(vec, np.float32) + res)
-        self._residual[worker] = np.asarray(err, np.float32)
-        return np.asarray(dequantize_int8(q, scale), np.float32)
+        deq, err = int8_encode_decode(vec, self._residual.get(worker))
+        self._residual[worker] = err
+        return deq
 
 
 class TopKCodec(_CodecBase):
@@ -127,7 +158,10 @@ class TopKCodec(_CodecBase):
     filtering): only the ``k = max(1, round(fraction * n))`` largest-|.|
     coordinates ship each round as (value, index) pairs -- ``2k`` f32 slots
     on the wire; everything filtered is carried as residual into the next
-    round, so no signal is lost, only deferred."""
+    round, so no signal is lost, only deferred.  Executes the fused
+    magnitude-threshold + residual-carry Pallas kernel
+    (:func:`repro.kernels.topk_ef.topk_ef`); ties at the k-th magnitude
+    are all kept."""
 
     def __init__(self, fraction: float = 0.01):
         fraction = float(fraction)
@@ -148,19 +182,15 @@ class TopKCodec(_CodecBase):
         return 2 * self._k(n)            # values + int32 indices
 
     def encode_decode(self, worker: int, vec: np.ndarray) -> np.ndarray:
+        from repro.kernels.topk_ef import topk_ef
+
         x = np.asarray(vec, np.float32)
         res = self._residual.get(worker)
         if res is not None:
             x = x + res
-        k = self._k(x.size)
-        if k >= x.size:
-            self._residual[worker] = np.zeros_like(x)
-            return x
-        idx = np.argpartition(np.abs(x), -k)[-k:]
-        out = np.zeros_like(x)
-        out[idx] = x[idx]
-        self._residual[worker] = x - out
-        return out
+        out, new_res = topk_ef(x, self._k(x.size))
+        self._residual[worker] = np.asarray(new_res, np.float32)
+        return np.asarray(out, np.float32)
 
 
 #: every selectable codec: name -> factory(arg_str or None)

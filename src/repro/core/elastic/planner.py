@@ -29,6 +29,7 @@ from dataclasses import dataclass
 
 from repro.core.analytical import (
     TABLE6, CostInputs, faas_cost, faas_time, iaas_cost, iaas_time,
+    pod_cost, pod_time,
 )
 from repro.core.elastic.policies import MAX_FLEET
 
@@ -93,17 +94,24 @@ def plan(workload, objective: str = "cheapest", *,
          deadline_s: float | None = None, budget_usd: float | None = None,
          workers=DEFAULT_WORKERS, platforms=("faas", "iaas"),
          channel: str = "s3", codec: str = "fp32", gb: float = 3.0,
-         instance: str = "t2.medium",
+         instance: str = "t2.medium", chips_per_pod: int = 4,
+         mfu: float | str = 0.4,
          slack: float = 1.25,  # lint: ignore[C001] -- deadline slack, not a price
          R: float | None = None) -> list[PlanOption]:
     """Sweep ``workers`` x ``platforms`` through the analytic model and
     return options ranked best-first: feasible options (deadline + budget)
     before infeasible ones, then by the objective's key.  See the module
-    docstring for the ``cheapest`` auto-deadline."""
+    docstring for the ``cheapest`` auto-deadline.  ``platforms`` may
+    include ``"pod"`` (accelerator slices, ``pod_time``/``pod_cost``);
+    ``mfu="measured"`` derives those rows from the benchmarked roofline
+    fraction instead of the asserted default."""
     if objective not in OBJECTIVES:
         raise ValueError(f"objective must be one of {OBJECTIVES}, "
                          f"got {objective!r}")
     ci = as_cost_inputs(workload, R=R)
+    if "pod" in platforms:
+        from repro.core.calibration import resolve_mfu
+        mfu = resolve_mfu(mfu)   # resolve once: one snapshot read per plan
     # the analytic NIC table (Table 6 "B_n"/"L_n") covers two instance
     # rows; for others the TIME constants fall back to t2.medium's NIC
     # (flagged in the option note) while the COST keeps the real instance
@@ -122,6 +130,11 @@ def plan(workload, objective: str = "cheapest", *,
             t = iaas_time(ci, w, instance=time_instance)
             raw.append(("iaas", w, t, iaas_cost(ci, w, t, instance),
                         nic_note))
+        if "pod" in platforms:
+            t = pod_time(ci, w, chips_per_pod=chips_per_pod, mfu=mfu,
+                         codec=codec)
+            raw.append(("pod", w, t, pod_cost(ci, w, t, chips_per_pod),
+                        f"mfu={mfu:.3f}"))
     if not raw:
         return []
     fastest = min(t for _, _, t, _, _ in raw)

@@ -485,9 +485,11 @@ class PodPlatform(BasePlatform):
     real :class:`~repro.core.workloads.ArchWorkload`) by this platform's
     FLOP/s hook, ``chips_per_pod * PEAK_FLOPS * mfu`` -- i.e. useful model
     FLOPs over roofline-discounted hardware peak.  ``mfu`` defaults to 0.4
-    (a typical ``roofline_fraction`` for the train shapes measured by
-    ``bench_roofline``); pass the measured fraction of a
-    :class:`~repro.distributed.roofline.RooflineReport` to calibrate.
+    (the asserted ballpark); pass ``mfu="measured"`` to read the
+    benchmarked compute-bound roofline fraction from the committed
+    ``BENCH_kernels.json`` (:mod:`repro.core.calibration`), or pass the
+    fraction of a :class:`~repro.distributed.roofline.RooflineReport`
+    directly.
 
     Intra-pod collectives are free (folded into ``mfu``); CROSS-pod traffic
     is the metered substrate: a ring all-reduce over the DCN, reusing the
@@ -509,7 +511,7 @@ class PodPlatform(BasePlatform):
                                "dcn_latency", "chip_hourly"})
 
     def __init__(self, pods: int = 4, chips_per_pod: int = 4,
-                 mfu: float = 0.4, sync: object = "bsp", seed: int = 0,
+                 mfu: float | str = 0.4, sync: object = "bsp", seed: int = 0,
                  dcn_bandwidth: float = POD_DCN_BANDWIDTH,
                  dcn_latency: float = POD_DCN_LATENCY,
                  chip_hourly: float = pricing.TPU_CHIP_HOURLY,
@@ -527,6 +529,8 @@ class PodPlatform(BasePlatform):
             sync=sync, seed=seed, scaling=scaling)
         if chips_per_pod < 1:
             raise ValueError(f"chips_per_pod must be >= 1, got {chips_per_pod}")
+        from repro.core.calibration import resolve_mfu
+        mfu = resolve_mfu(mfu)     # "measured" -> benchmarked fraction
         if not 0.0 < mfu <= 1.0:
             raise ValueError(f"mfu must be in (0, 1], got {mfu}")
         self.chips_per_pod = int(chips_per_pod)

@@ -26,10 +26,11 @@ infrastructure (FaaS, IaaS, hybrid, spot, heterogeneous fleets):
 
 The DiLoCo outer-step math (:class:`DiLoCoOuter`) lives here; the int8
 error-feedback quantizer is the shared :mod:`repro.core.comm.codecs`
-implementation (one source of truth for this module, the
-:class:`~repro.core.comm.Int8EFCodec` wire codec, and the real multi-pod
-training stack :mod:`repro.distributed.local_sgd`, which applies the same
-functions per parameter leaf inside ``shard_map``; the seed-era
+implementation, which since DESIGN.md §16 executes the fused
+:mod:`repro.kernels.quant8` Pallas kernel (one source of truth for this
+module, the :class:`~repro.core.comm.Int8EFCodec` wire codec, and the real
+multi-pod training stack :mod:`repro.distributed.local_sgd`, which applies
+the same ref formula per parameter leaf inside ``shard_map``; the seed-era
 ``repro.core.sync.quantize_int8_ef`` import path remains as an alias).
 
 Select a protocol with ``FaaSRuntime(sync="bsp"|"asp"|"ssp")`` (or
@@ -45,8 +46,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.comm.codecs import (  # noqa: F401  (seed-era aliases: the
-    dequantize_int8, int8_wire_floats, quantize_int8_ef,  # one shared codec
-)                                                         # implementation)
+    dequantize_int8, int8_encode_decode, int8_wire_floats,  # one shared codec
+    quantize_int8_ef,                                       # implementation)
+)
 from repro.core.engine import SimContext
 from repro.core.patterns import PATTERNS, allreduce, scatter_reduce  # noqa: F401
 
@@ -313,10 +315,10 @@ class LocalSGD(SyncProtocol):
 
     ``outer="diloco"`` instead treats the per-worker parameter displacement
     as a pseudo-gradient and applies :class:`DiLoCoOuter` Nesterov momentum
-    to it.  ``compress=True`` ships int8 + error-feedback quantized vectors
-    (:func:`quantize_int8_ef`): metered wire bytes drop ~4x on top of the
-    ``h`` x; the quantization error is carried per worker into the next
-    sync round.
+    to it.  ``compress=True`` ships blockwise int8 + error-feedback
+    quantized vectors (:func:`int8_encode_decode`, the fused quant8 Pallas
+    kernel): metered wire bytes drop ~4x on top of the ``h`` x; the
+    quantization error is carried per worker into the next sync round.
 
     Requires an algorithm with additive updates (``ga_sgd``): MA/ADMM/EM
     updates are not gradients and already amortize communication their own
@@ -352,9 +354,9 @@ class LocalSGD(SyncProtocol):
                               np.float32)
         deq = []
         for i, v in enumerate(vecs):
-            q, scale, err = quantize_int8_ef(v + residual[i])
-            residual[i] = np.asarray(err, np.float32)
-            deq.append(np.asarray(dequantize_int8(q, scale), np.float32))
+            d, err = int8_encode_decode(v, residual[i])
+            residual[i] = err
+            deq.append(d)
         wire = [np.zeros(int8_wire_floats(v.size), np.float32) for v in vecs]
         ctx.comm.bsp_reduce(ctx, wire, tag + ".q8")   # meters time+bytes only
         return np.mean(np.stack(deq), axis=0)

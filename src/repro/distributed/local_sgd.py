@@ -193,9 +193,10 @@ def build_local_sgd(arch: ArchConfig, mesh: Mesh, shape: ShapeConfig | str,
         full_in = P(*(("pod",) + tuple(pspec)))
 
         def body(xl, rl):
-            # one quantizer implementation for the whole repo: the same
-            # core.comm.codecs helpers drive the discrete-event LocalSGD
-            # protocol and the Int8EF wire codec
+            # one quantizer implementation for the whole repo: this helper
+            # delegates to kernels/quant8/ref.py, the same formula the
+            # Int8EF wire codec's fused Pallas kernel is validated against
+            # -- only the scale LAYOUT differs (per-channel here, see above)
             q, scale, new_res = quantize_int8_ef(
                 xl[0].astype(jnp.float32) + rl[0])
             qs = jax.lax.all_gather(q, "pod")          # int8 over the wire

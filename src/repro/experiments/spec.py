@@ -36,8 +36,12 @@ PLATFORMS = ("faas", "iaas", "pod")
 #: bump.  h3: the elastic-fleet fields (``scaling`` on the spec,
 #: ``min_workers``/``max_workers`` on FleetSpec) landed together with the
 #: ``scaling_timeline`` RunResult key, so pre-elastic records are re-keyed
-#: rather than served with the old result schema.
-HASH_SCHEMA = "h3"
+#: rather than served with the old result schema.  h4: int8 wire accounting
+#: went blockwise (``int8_wire_floats = ceil(n/4) + ceil(n/256)``, one fp32
+#: scale per 256-element block -- the form the quant8 Pallas kernel ships)
+#: and the codecs now execute the kernels, so cached ``comm_bytes``/loss
+#: histories from the per-vector-scale era must not alias the new numbers.
+HASH_SCHEMA = "h4"
 
 
 @dataclass(frozen=True)

@@ -1,1 +1,6 @@
-from repro.kernels.quant8.ops import dequantize8, quantize8  # noqa: F401
+from repro.kernels.quant8.ops import (  # noqa: F401
+    dequantize8,
+    int8_roundtrip,
+    quantize8,
+    resolve_backend,
+)

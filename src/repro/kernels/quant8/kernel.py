@@ -6,10 +6,17 @@ block before crossing the slow (inter-pod / storage) channel.  Pure
 VPU-elementwise work tiled (BM, 256): each grid step loads one (BM, 256)
 fp32 tile from HBM, writes the int8 codes + (BM, 1) scales -- bandwidth-
 optimal, one pass.
+
+This module is the ONE implementation of the codec's quantizer math
+(DESIGN.md §16): the :class:`~repro.core.comm.Int8EFCodec` wire codec
+executes these kernels (interpret mode off-TPU, real Mosaic lowering on
+TPU), validated bit-for-bit against the :mod:`repro.kernels.quant8.ref`
+oracle.  :func:`quantize8_ef_kernel` is the error-feedback variant the
+codec hot path uses: codes, scales, dequantized values AND the residual in
+a single pass over the data (three separate quantize/dequantize/subtract
+passes would stream the tensor three times).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,18 +35,38 @@ def _quant_kernel(x_ref, q_ref, s_ref):
     s_ref[...] = scale
 
 
+def _quant_ef_kernel(x_ref, q_ref, s_ref, d_ref, e_ref):
+    """Fused error-feedback quantize: one pass emits the wire form (codes +
+    per-block scales), the dequantized values the merge consumes, and the
+    residual ``x - deq`` carried into the next round."""
+    x = x_ref[...].astype(jnp.float32)                   # (bm, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    deq = q * scale
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+    d_ref[...] = deq
+    e_ref[...] = x - deq
+
+
 def _dequant_kernel(q_ref, s_ref, x_ref):
     x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...])
+
+
+def _rows_grid(rows: int) -> tuple[int, int]:
+    bm = min(BM, rows)
+    assert rows % bm == 0, (rows, bm)
+    return bm, rows // bm
 
 
 def quantize8_kernel(x, *, interpret: bool = True):
     """x (rows, BLOCK) fp32 -> (int8 codes (rows, BLOCK), scales (rows, 1))."""
     rows = x.shape[0]
-    bm = min(BM, rows)
-    assert rows % bm == 0
+    bm, grid = _rows_grid(rows)
     return pl.pallas_call(
         _quant_kernel,
-        grid=(rows // bm,),
+        grid=(grid,),
         in_specs=[pl.BlockSpec((bm, BLOCK), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((bm, BLOCK), lambda i: (i, 0)),
                    pl.BlockSpec((bm, 1), lambda i: (i, 0))],
@@ -49,13 +76,33 @@ def quantize8_kernel(x, *, interpret: bool = True):
     )(x)
 
 
+def quantize8_ef_kernel(x, *, interpret: bool = True):
+    """x (rows, BLOCK) fp32 -> (codes int8, scales (rows, 1), dequantized
+    (rows, BLOCK) f32, residual (rows, BLOCK) f32) in ONE pass."""
+    rows = x.shape[0]
+    bm, grid = _rows_grid(rows)
+    row_spec = pl.BlockSpec((bm, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        _quant_ef_kernel,
+        grid=(grid,),
+        in_specs=[row_spec],
+        out_specs=[row_spec,
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                   row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
 def dequantize8_kernel(q, s, *, interpret: bool = True):
     rows = q.shape[0]
-    bm = min(BM, rows)
-    assert rows % bm == 0
+    bm, grid = _rows_grid(rows)
     return pl.pallas_call(
         _dequant_kernel,
-        grid=(rows // bm,),
+        grid=(grid,),
         in_specs=[pl.BlockSpec((bm, BLOCK), lambda i: (i, 0)),
                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((bm, BLOCK), lambda i: (i, 0)),

@@ -1,35 +1,131 @@
-"""Public wrapper: arbitrary-shape tensors <-> padded (rows, 256) tiles."""
+"""Public wrapper: arbitrary-shape tensors <-> padded (rows, 256) tiles.
+
+Padding contract (DESIGN.md §16): the flat tensor is zero-padded up to a
+multiple of BLOCK=256 and reshaped to (rows, 256); rows are then zero-padded
+to a multiple of the kernel's BM grid step.  Zero padding never changes a
+real block's max-abs, so block scales — and therefore codes, dequantized
+values and residuals for the real elements — are bit-identical to the
+unpadded math.  Padding exists only on-device: returned codes/scales are
+sliced to the ``ceil(n/256)`` REAL blocks and wire accounting
+(`int8_wire_floats`) never counts it.
+
+Backend selection: ``backend=None`` reads ``REPRO_CODEC_BACKEND``
+(``kernel`` default → Pallas, interpret off-TPU / Mosaic on TPU;
+``ref``/``numpy`` → the straight-line :mod:`.ref` oracle through the SAME
+padding plumbing, so both backends agree bit-for-bit).
+"""
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quant8.kernel import BLOCK, dequantize8_kernel, quantize8_kernel
+from repro.kernels.quant8.kernel import (
+    BLOCK,
+    BM,
+    dequantize8_kernel,
+    quantize8_ef_kernel,
+    quantize8_kernel,
+)
+from repro.kernels.quant8.ref import dequantize8_ref, quantize8_ef_ref, quantize8_ref
 
 
-def _pad_rows(flat):
-    pad = (-flat.shape[0]) % BLOCK
+def resolve_backend(backend: str | None = None) -> str:
+    """'kernel' | 'ref' (env REPRO_CODEC_BACKEND; 'numpy' aliases 'ref')."""
+    if backend is None:
+        backend = os.environ.get("REPRO_CODEC_BACKEND", "kernel")
+    if backend == "numpy":
+        backend = "ref"
+    if backend not in ("kernel", "ref"):
+        raise ValueError(
+            f"unknown codec backend {backend!r} (want kernel|ref|numpy)")
+    return backend
+
+
+def _pad_tiles(flat):
+    """flat (n,) -> ((rows', 256) zero-padded tiles, n_real_blocks)."""
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat.reshape(-1, BLOCK), pad
+    tiles = flat.reshape(-1, BLOCK)
+    blocks = tiles.shape[0]
+    rpad = (-blocks) % min(BM, blocks)
+    if rpad:
+        tiles = jnp.concatenate(
+            [tiles, jnp.zeros((rpad, BLOCK), tiles.dtype)])
+    return tiles, blocks
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def quantize8(x, *, interpret: bool | None = None):
-    """Any-shape fp tensor -> (codes int8 (rows, 256), scales (rows, 1))."""
+@partial(jax.jit, static_argnames=("interpret", "backend"))
+def _quantize8(x, *, interpret: bool, backend: str):
+    tiles, blocks = _pad_tiles(x.astype(jnp.float32).reshape(-1))
+    if backend == "kernel":
+        q, s = quantize8_kernel(tiles, interpret=interpret)
+    else:
+        q, s = quantize8_ref(tiles)
+    return q[:blocks], s[:blocks]
+
+
+def quantize8(x, *, interpret: bool | None = None, backend: str | None = None):
+    """Any-shape fp tensor -> (codes int8 (blocks, 256), scales (blocks, 1))."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    rows, _ = _pad_rows(x.astype(jnp.float32).reshape(-1))
-    return quantize8_kernel(rows, interpret=interpret)
+    return _quantize8(x, interpret=interpret, backend=resolve_backend(backend))
 
 
-def dequantize8(q, s, shape, *, interpret: bool | None = None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    x = dequantize8_kernel(q, s, interpret=interpret).reshape(-1)
+@partial(jax.jit, static_argnames=("interpret", "backend", "shape"))
+def _dequantize8(q, s, *, interpret: bool, backend: str, shape):
+    blocks = q.shape[0]
+    rpad = (-blocks) % min(BM, blocks)
+    if rpad:
+        q = jnp.concatenate([q, jnp.zeros((rpad, BLOCK), q.dtype)])
+        s = jnp.concatenate([s, jnp.ones((rpad, 1), s.dtype)])
+    if backend == "kernel":
+        x = dequantize8_kernel(q, s, interpret=interpret)
+    else:
+        x = dequantize8_ref(q, s)
     n = 1
     for d in shape:
         n *= d
-    return x[:n].reshape(shape)
+    return x.reshape(-1)[:n].reshape(shape)
+
+
+def dequantize8(q, s, shape, *, interpret: bool | None = None,
+                backend: str | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _dequantize8(q, s, interpret=interpret,
+                        backend=resolve_backend(backend), shape=tuple(shape))
+
+
+@partial(jax.jit, static_argnames=("interpret", "backend"))
+def _int8_roundtrip(x, *, interpret: bool, backend: str):
+    flat = x.astype(jnp.float32).reshape(-1)
+    tiles, blocks = _pad_tiles(flat)
+    if backend == "kernel":
+        q, s, deq, err = quantize8_ef_kernel(tiles, interpret=interpret)
+    else:
+        q, s, deq, err = quantize8_ef_ref(tiles)
+    n = flat.shape[0]
+    deq = deq.reshape(-1)[:n].reshape(x.shape)
+    err = err.reshape(-1)[:n].reshape(x.shape)
+    return q[:blocks], s[:blocks], deq, err
+
+
+def int8_roundtrip(x, *, interpret: bool | None = None,
+                   backend: str | None = None):
+    """Fused EF quantize of any-shape x.
+
+    Returns (codes (blocks, 256) int8, scales (blocks, 1) f32,
+    deq shaped-like-x, residual shaped-like-x); residual is x - deq (to
+    the last ulp — see ref.quantize8_ef_ref on FMA contraction), and both
+    backends return bit-identical results.  One fused pass on the kernel
+    backend.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _int8_roundtrip(x, interpret=interpret,
+                           backend=resolve_backend(backend))

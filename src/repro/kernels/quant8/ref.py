@@ -1,12 +1,21 @@
-"""Oracle: the optimizer's numpy-style blockwise quantization."""
+"""Oracle: straight-line jnp blockwise quantization.
+
+This is the ONE statement of the int8 quantizer math.  The Pallas kernel
+(`kernel.py`) must match it bit-for-bit in interpret mode; the codec's
+explicit non-kernel fallback (``REPRO_CODEC_BACKEND=ref``) and the
+TP-sharded per-channel path in `repro.distributed.local_sgd` both call it
+directly with their own axis layout.  ``axis=-1`` generality is what lets
+one formula serve the (rows, 256) blockwise wire codec and the per-row
+per-channel in-jit path.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def quantize8_ref(x):
-    """x (rows, 256) -> (q int8, scales (rows, 1))."""
-    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1,
+def quantize8_ref(x, axis: int = -1):
+    """x (.., n) -> (q int8, scales (.., 1)) with one scale per `axis` slice."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
                                 keepdims=True), 1e-12) / 127.0
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale
@@ -14,3 +23,17 @@ def quantize8_ref(x):
 
 def dequantize8_ref(q, s):
     return q.astype(jnp.float32) * s
+
+
+def quantize8_ef_ref(x, axis: int = -1):
+    """Error-feedback variant: (q, scale, deq, residual).
+
+    ``residual = x - deq`` from the *emitted* deq (not re-derived).  Under
+    jit, XLA may contract ``q*scale`` and the subtraction into an FMA, so
+    recomputing ``x - deq`` outside matches only to the last ulp — but the
+    kernel backend produces bit-identical (deq, residual) to this oracle,
+    which is the invariant the EF codecs and parity tests rely on.
+    """
+    q, scale = quantize8_ref(x, axis=axis)
+    deq = dequantize8_ref(q, scale)
+    return q, scale, deq, x.astype(jnp.float32) - deq

@@ -1,0 +1,1 @@
+from repro.kernels.topk_ef.ops import topk_ef  # noqa: F401

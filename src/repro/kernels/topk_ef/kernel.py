@@ -1,0 +1,53 @@
+"""Fused magnitude-threshold + residual-carry Pallas kernel (top-k EF).
+
+The MLLess-style significance filter: keep elements whose magnitude clears
+the k-th-largest-|x| threshold tau, zero the rest — and emit the
+complementary residual (the suppressed mass carried into the next round's
+error feedback) in the SAME pass.  Pure VPU-elementwise given the scalar
+tau, tiled (BM, 256) like quant8; tau rides in SMEM.  A separate
+filter-then-subtract would stream the tensor twice for what is one
+compare + two selects per element.
+
+tau itself (a global k-selection) is computed by the caller
+(`ops.topk_ef` via ``lax.top_k``) — selection is not a tiling-friendly
+primitive, the threshold *application* is where the bytes move.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 256          # lane tile width (elements)
+BM = 256             # rows per grid step
+
+
+def _topk_ef_kernel(tau_ref, x_ref, out_ref, res_ref):
+    x = x_ref[...].astype(jnp.float32)                   # (bm, BLOCK)
+    tau = tau_ref[0]
+    keep = jnp.abs(x) >= tau
+    out_ref[...] = jnp.where(keep, x, 0.0)
+    res_ref[...] = jnp.where(keep, 0.0, x)
+
+
+def topk_ef_kernel(x, tau, *, interpret: bool = True):
+    """x (rows, BLOCK) f32, tau scalar -> (kept (rows, BLOCK), residual).
+
+    ``kept + residual == x`` exactly (each element lands in exactly one
+    output, unmodified); ties at tau are all kept.
+    """
+    rows = x.shape[0]
+    bm = min(BM, rows)
+    assert rows % bm == 0, (rows, bm)
+    tau = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (1,))
+    row_spec = pl.BlockSpec((bm, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        _topk_ef_kernel,
+        grid=(rows // bm,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), row_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32)],
+        interpret=interpret,
+    )(tau, x)

@@ -1,0 +1,57 @@
+"""Public wrapper: any-shape top-k EF filter over padded (rows, 256) tiles.
+
+Same padding contract as quant8 (DESIGN.md §16): zero-pad the flat tensor
+to the tile grid.  Padding zeros can only be "kept" when tau == 0, and a
+kept zero is still 0.0, so sliced outputs are identical to unpadded math.
+Backend selection shares `repro.kernels.quant8.ops.resolve_backend`
+(``REPRO_CODEC_BACKEND``: kernel default, ref/numpy fallback).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8.ops import resolve_backend
+from repro.kernels.topk_ef.kernel import BLOCK, BM, topk_ef_kernel
+from repro.kernels.topk_ef.ref import topk_ef_ref, topk_tau_ref
+
+
+@partial(jax.jit, static_argnames=("k", "interpret", "backend"))
+def _topk_ef(x, *, k: int, interpret: bool, backend: str):
+    flat = x.astype(jnp.float32).reshape(-1)
+    tau = topk_tau_ref(flat, k)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    tiles = flat.reshape(-1, BLOCK)
+    blocks = tiles.shape[0]
+    rpad = (-blocks) % min(BM, blocks)
+    if rpad:
+        tiles = jnp.concatenate(
+            [tiles, jnp.zeros((rpad, BLOCK), tiles.dtype)])
+    if backend == "kernel":
+        out, res = topk_ef_kernel(tiles, tau, interpret=interpret)
+    else:
+        out, res = topk_ef_ref(tiles, tau)
+    out = out.reshape(-1)[:n].reshape(x.shape)
+    res = res.reshape(-1)[:n].reshape(x.shape)
+    return out, res
+
+
+def topk_ef(x, k: int, *, interpret: bool | None = None,
+            backend: str | None = None):
+    """Keep the >= k largest-|x| elements of any-shape x, zero the rest.
+
+    Returns (kept, residual) both shaped like x with
+    ``kept + residual == x`` bitwise.  Ties at the k-th magnitude are all
+    kept, so nonzero count can exceed k on tied data.  k is clamped to
+    [1, x.size].
+    """
+    k = max(1, min(int(k), x.size))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _topk_ef(x, k=k, interpret=interpret,
+                    backend=resolve_backend(backend))

@@ -1,0 +1,22 @@
+"""Oracle: straight-line jnp top-k threshold filter with residual."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_tau_ref(x, k: int):
+    """tau = k-th largest |x| over the flat tensor (k static, 1 <= k <= n)."""
+    a = jnp.abs(x.astype(jnp.float32)).reshape(-1)
+    return jax.lax.top_k(a, k)[0][-1]
+
+
+def topk_ef_ref(x, tau):
+    """(kept, residual): keep |x| >= tau (ties all kept), rest to residual.
+
+    Each element lands unmodified in exactly one output, so
+    ``kept + residual == x`` holds bitwise.
+    """
+    xf = x.astype(jnp.float32)
+    keep = jnp.abs(xf) >= tau
+    return jnp.where(keep, xf, 0.0), jnp.where(keep, 0.0, xf)

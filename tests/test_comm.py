@@ -250,6 +250,28 @@ def test_codec_shrinks_comm_bytes_exactly(higgs, plat):
         assert np.isfinite(r.final_loss) and r.rounds == base.rounds
 
 
+def test_int8_comm_bytes_blockwise_engine_level():
+    """Acceptance (DESIGN.md §16): an "s3/allreduce/int8" run's metered
+    comm_bytes follow the BLOCKWISE wire formula exactly -- ceil(n/4)
+    packed-code floats plus ceil(n/256) per-block fp32 scales per round.
+    mobilenet-sized so the per-block term actually differs from the old
+    per-vector-scale accounting (n >> 256)."""
+    from repro.core.comm.codecs import QUANT_BLOCK, int8_wire_floats
+    from repro.core.workloads import estimate_update_bytes
+
+    ds = make_dataset("cifar10", rows=600)
+    tr, va = train_val_split(ds)
+    mn = make_study_model("mobilenet", tr)
+    n = estimate_update_bytes("mobilenet", "cifar10") // 4
+    assert n > QUANT_BLOCK
+    r = FaaSRuntime(workers=2, comm="s3/allreduce/int8").train(
+        mn, make_algorithm("ga_sgd", lr=0.05, batch_size=512), tr, va,
+        max_epochs=1)
+    want = -(-n // 4) + -(-n // QUANT_BLOCK)
+    assert want == int8_wire_floats(n)
+    assert r.rounds > 0 and int(r.comm_bytes) == r.rounds * want * 4
+
+
 # ------------------------------------------------- spec-time validation -----
 
 def test_dynamodb_na_is_an_eager_spec_error():
@@ -365,5 +387,28 @@ def test_comm_bytes_scale_exactly_with_codec_property():
             # metered bytes == fp32 bytes * wire ratio, exactly (integer
             # cross-multiplication; holds for EVERY worker count)
             assert int(ctx.bytes) * n == int(base.bytes) * c.wire_floats(n)
+
+    prop()
+
+
+def test_kernel_backed_codec_matches_ref_backend_bitwise_property():
+    """The Int8EF codec's default (Pallas interpret) backend and the
+    straight-line ref oracle are bit-identical on block-aligned shapes --
+    no numpy duplicate of the quantizer math survives outside ref.py."""
+    pytest.importorskip("hypothesis", reason="optional test dependency")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.kernels.quant8.ops import int8_roundtrip
+
+    @given(blocks=st.integers(1, 8), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=25, deadline=None)
+    def prop(blocks, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(blocks * 256).astype(np.float32)
+        int8 = make_codec("int8")
+        deq = int8.encode_decode(0, x)          # default: kernel backend
+        _q, _s, dr, er = int8_roundtrip(x, backend="ref")
+        assert np.array_equal(deq, np.asarray(dr))
+        assert np.array_equal(int8._residual[0], np.asarray(er))
 
     prop()

@@ -344,10 +344,11 @@ def test_spec_round_trip_and_hash_with_scaling():
                                           max_workers=8))
     assert ExperimentSpec.from_json(spec.to_json()) == spec
     assert spec.spec_hash() != spec.with_(scaling="static").spec_hash()
-    # defaults elide: an all-default spec hashes schema + {} (h3 re-key)
+    # defaults elide: an all-default spec hashes schema + {} (h4 re-key:
+    # int8 wire accounting went blockwise, DESIGN.md §16)
     import hashlib
     from repro.experiments.spec import HASH_SCHEMA
-    assert HASH_SCHEMA == "h3"
+    assert HASH_SCHEMA == "h4"
     assert ExperimentSpec().spec_hash() == \
         hashlib.sha256(f"{HASH_SCHEMA}{{}}".encode()).hexdigest()[:16]
 

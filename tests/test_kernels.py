@@ -8,8 +8,9 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.quant8.ops import dequantize8, quantize8
+from repro.kernels.quant8.ops import dequantize8, int8_roundtrip, quantize8
 from repro.kernels.quant8.ref import quantize8_ref
+from repro.kernels.topk_ef.ops import topk_ef
 from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
 from repro.kernels.ssd_scan.ops import ssd_scan_fused
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
@@ -124,3 +125,82 @@ def test_quant8_roundtrip(shape):
     xd = dequantize8(q, s, shape, interpret=True)
     # blockwise max-abs scaling: error bounded by scale/2 per element
     assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(s)) * 0.51
+
+
+def test_quant_block_is_the_codec_wire_constant():
+    """codecs.QUANT_BLOCK (plain int, no jax import) must equal the
+    kernel's BLOCK -- int8_wire_floats meters what the silicon ships."""
+    from repro.core.comm.codecs import QUANT_BLOCK
+    from repro.kernels.quant8.kernel import BLOCK
+    assert QUANT_BLOCK == BLOCK
+
+
+@pytest.mark.parametrize("shape", [(256,), (1000,), (33, 70), (7, 13, 11),
+                                   (300 * 256 + 17,)])
+def test_quant8_ef_kernel_vs_ref_bitwise(shape):
+    """The fused EF kernel and the straight-line oracle agree bit-for-bit
+    through the same padded-tile plumbing (both fuse identically under
+    jit -- see quant8/ref.py on FMA contraction)."""
+    x = _arr(shape, scale=3.0)
+    qk, sk, dk, ek = int8_roundtrip(x, interpret=True, backend="kernel")
+    qr, sr, dr, er = int8_roundtrip(x, backend="ref")
+    assert jnp.array_equal(qk, qr)
+    assert jnp.array_equal(sk, sr)
+    assert jnp.array_equal(dk, dr)
+    assert jnp.array_equal(ek, er)
+    assert qk.shape == (-(-x.size // 256), 256) and sk.shape == (qk.shape[0], 1)
+    # residual == x - deq to the last ulp; deq/err keep the input's shape
+    assert dk.shape == ek.shape == x.shape
+    np.testing.assert_allclose(np.asarray(ek), np.asarray(x - dk), atol=1e-6)
+
+
+# ------------------------------------------------------------ topk_ef --------
+
+@pytest.mark.parametrize("shape,k", [
+    ((1000,), 50), ((33, 70), 100), ((4, 256), 1), ((512,), 512),
+    ((7, 13, 11), 13),
+])
+def test_topk_ef_kernel_vs_ref(shape, k):
+    """Kernel vs oracle parity incl. k=1 and k=n edges; kept + residual
+    reconstructs x bitwise (disjoint supports, no float error)."""
+    x = _arr(shape, scale=2.0)
+    ok, rk = topk_ef(x, k, interpret=True, backend="kernel")
+    orf, rrf = topk_ef(x, k, backend="ref")
+    assert jnp.array_equal(ok, orf)
+    assert jnp.array_equal(rk, rrf)
+    assert jnp.array_equal(ok + rk, x)
+    assert not bool(jnp.any((ok != 0) & (rk != 0)))
+    # gaussian draws have no magnitude ties: exactly k survive
+    assert int(jnp.count_nonzero(ok)) == k
+
+
+def test_topk_ef_residual_carry_three_rounds():
+    """EF loop: each round's kept + residual equals its input bitwise, and
+    the filtered mass is deferred, not lost -- with no new gradient the
+    carried residual drains to zero in ceil(n/k) further rounds."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal(640), jnp.float32)
+    res = jnp.zeros_like(g)
+    for _ in range(3):
+        x = g + res
+        out, res = topk_ef(x, 64, interpret=True)
+        assert jnp.array_equal(out + res, x)
+        assert not bool(jnp.any((out != 0) & (res != 0)))
+    for _ in range(10):
+        _, res = topk_ef(res, 64, interpret=True)
+    assert float(jnp.max(jnp.abs(res))) == 0.0
+
+
+# ------------------------------------------------------------ calibration ----
+
+def test_measured_mfu_snapshot_consistency():
+    """The committed BENCH_kernels.json measurement, the in-code fallback
+    constant, and the resolve knob all agree."""
+    from repro.core.calibration import MEASURED_MFU, measured_mfu, resolve_mfu
+    m = measured_mfu()
+    assert 0.0 < m <= 1.0
+    assert abs(m - MEASURED_MFU) < 0.005
+    assert resolve_mfu("measured") == m
+    assert resolve_mfu(0.4) == 0.4
+    with pytest.raises(ValueError):
+        resolve_mfu("vibes")
