@@ -1,0 +1,104 @@
+"""Checkpoint subsystem (DESIGN.md §17): cadence grid under a recorded
+spot-preemption trace, per-transport save/restore costs, and derived
+restart times.
+
+Runs the ``spot_trace`` preset's scenario directly (IaaS spot fleet, the
+bundled ``spot_burst`` trace) across checkpoint cadences, plus a
+transport sweep of the closed-form save/restore price for a 100 MB model,
+and asserts the acceptance story: every trial sees the same recorded
+preemptions, cadence checkpointing moves nonzero metered bytes/$, and the
+platforms' derived ``restart_time(model_bytes)`` equals cold start + the
+metered restore.  Writes ``BENCH_ckpt.json`` at the repo root
+(schema ``repro.bench.ckpt/v1``).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, emit_root
+from repro.core.algorithms import make_algorithm
+from repro.core.ckpt import CKPT_TRANSPORTS, make_ckpt, shard_sizes
+from repro.core.comm.transports import xfer_seconds
+from repro.core.mlmodels import make_study_model
+from repro.core.platform import FailureSpec
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime, PodPlatform
+from repro.data.synthetic import make_dataset, train_val_split
+
+CADENCES = ("", "s3:every=2", "s3:every=8", "s3:every=2:sharded")
+MODEL_BYTES = 100_000_000          # transport-sweep payload (100 MB fp32)
+
+
+def run(quick: bool = True):
+    rows = []
+    tr, va = train_val_split(make_dataset("higgs",
+                                          rows=20_000 if quick else 200_000))
+    model = make_study_model("lr", tr)
+    fail = FailureSpec(spot=True, trace="spot_burst")
+
+    # -- cadence grid under the recorded trace -----------------------------
+    grid = {}
+    for ck in CADENCES:
+        ga = make_algorithm("ga_sgd", lr=0.2, batch_size=2048)
+        res = IaaSRuntime(workers=8, failure=fail, ckpt=ck).train(
+            model, ga, tr, va, max_epochs=3 if quick else 6)
+        grid[ck] = res
+        rows.append({
+            "name": f"trace[{ck or 'every=0'}]",
+            "us_per_call": res.sim_time * 1e6,
+            "kind": "trace_grid", "ckpt": ck,
+            "sim_time_s": res.sim_time, "cost_usd": res.cost,
+            "preemptions": res.preemptions,
+            "ckpt_bytes": res.ckpt_bytes, "ckpt_time_s": res.ckpt_time,
+            "ckpt_cost_usd": res.ckpt_cost,
+            "derived": (f"pre={res.preemptions};"
+                        f"ckptB={res.ckpt_bytes:.0f};"
+                        f"ckpt_s={res.ckpt_time:.3f}"),
+        })
+    # same recorded trace -> same kills, regardless of checkpoint policy
+    assert len({r.preemptions for r in grid.values()}) == 1
+    assert grid[""].preemptions > 0
+    # cadence checkpointing moves real metered traffic, denser > sparser
+    assert grid["s3:every=2"].ckpt_bytes > grid["s3:every=8"].ckpt_bytes > 0
+    assert grid["s3:every=2"].ckpt_cost > 0
+
+    # -- per-transport closed-form save+restore for a 100 MB model ---------
+    for name, ch in sorted(CKPT_TRANSPORTS.items()):
+        for sharded in (False, True):
+            spec = make_ckpt(f"{name}:every=1" + (":sharded" if sharded else ""))
+            sizes = shard_sizes(MODEL_BYTES, spec.shards(8))
+            if ch.max_item is not None and max(sizes) > ch.max_item:
+                continue                    # infeasible cell (Table 1 "N/A")
+            dt = sum(xfer_seconds(ch, s) for s in sizes)
+            rows.append({
+                "name": f"xfer[{name}{':sharded' if sharded else ''}]",
+                "us_per_call": dt * 1e6,
+                "kind": "transport", "transport": name, "sharded": sharded,
+                "shards": len(sizes), "bytes": sum(sizes),
+                "save_s": dt, "restore_s": spec.restore_seconds(
+                    MODEL_BYTES, ch, 8),
+                "derived": f"shards={len(sizes)};s={dt:.3f}",
+            })
+
+    # -- derived restart per platform --------------------------------------
+    for pname, rt in (("faas", FaaSRuntime(workers=8)),
+                      ("iaas", IaaSRuntime(workers=8)),
+                      ("pod", PodPlatform(pods=2, chips_per_pod=4))):
+        bare, loaded = rt.restart_time(), rt.restart_time(MODEL_BYTES)
+        assert loaded == bare + rt.ckpt.restore_seconds(
+            MODEL_BYTES, rt.ckpt_channel_spec(), rt.workers)
+        rows.append({
+            "name": f"restart[{pname}]", "us_per_call": loaded * 1e6,
+            "kind": "restart", "platform": pname,
+            "bare_s": bare, "loaded_s": loaded,
+            "derived": f"bare={bare:.2f}s;with_100MB={loaded:.2f}s",
+        })
+
+    emit_root("ckpt", rows, model_bytes=MODEL_BYTES, trace="spot_burst",
+              cadences=list(CADENCES))
+    return emit(rows, "bench_ckpt")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    run(quick=ap.parse_args().quick)

@@ -23,6 +23,7 @@ MODULES = [
     "bench_pods",          # §11 three-infrastructure study + LocalSGD sweep
     "bench_elastic",       # §13 elastic fleets: w(t) per policy + planner
     "bench_serving",       # §14 serving frontier: cost vs p99 per arrival
+    "bench_ckpt",          # §17 checkpoint cadence grid + derived restart
     "bench_roofline",      # §Roofline (dry-run derived)
     "bench_crosspod",      # §Perf paper-technique headline
     "bench_kernels",       # kernel microbench

@@ -124,6 +124,14 @@ def cmd_list(args) -> int:
     print(f"  codecs:      {', '.join(list_codecs())}")
     print(f"\nscaling policies (--set scaling=..., DESIGN.md §13):")
     print(f"  {', '.join(list_policies())}")
+    from repro.core.ckpt import list_ckpts
+    print(f"\ncheckpoint transports (--set ckpt=..., DESIGN.md §17):")
+    print(f"  {', '.join(list_ckpts().values())}")
+    from repro.core.failures import list_failures
+    print(f"\nfailure processes (--set failure.trace=... / failure.rate=..., "
+          f"DESIGN.md §17):")
+    for line in list_failures().values():
+        print(f"  {line}")
     from repro.serving.arrivals import list_arrivals
     print(f"\narrival processes (repro serve --arrival ..., DESIGN.md §14):")
     for line in list_arrivals().values():
@@ -187,6 +195,14 @@ def cmd_plan(args) -> int:
         note = o.note if o.note else ("" if i > 1 else "<- pick")
         print(f"{i:4d} {o.platform:<8s} {o.workers:4d} {o.time_s:10.1f} "
               f"{o.cost_usd:9.4f}  {note}")
+    # the restart term behind the ranking: startup + metered restore of
+    # the model's actual bytes through the checkpoint transport (§17)
+    from repro.core.analytical import restart_seconds
+    from repro.core.elastic.planner import as_cost_inputs
+    ci = as_cost_inputs(target)
+    per = ", ".join(f"{p}={restart_seconds(p, ci.m_bytes):.1f}s"
+                    for p in platforms)
+    print(f"# derived restart ({ci.m_bytes / 1e6:.3f} MB model): {per}")
     if args.out:
         Path(args.out).parent.mkdir(parents=True, exist_ok=True)
         Path(args.out).write_text(

@@ -262,6 +262,10 @@ class RegistryChecker(Checker):
                     {"make_policy", "validate_scaling"}),
         "arrivals": ("src/repro/serving/arrivals.py", "ARRIVALS",
                      {"make_arrivals"}),
+        "ckpt": ("src/repro/core/ckpt/spec.py", "CKPT_TRANSPORTS",
+                 {"make_ckpt", "make_ckpt_transport"}),
+        "failure": ("src/repro/core/failures.py", "FAILURES",
+                    {"make_failure"}),
         "checkers": ("src/repro/analysis/checkers.py", "CHECKERS",
                      {"make_checker", "select_checkers"}),
     }
@@ -287,6 +291,12 @@ class RegistryChecker(Checker):
         if registry == "arrivals":
             from repro.serving.arrivals import ARRIVALS
             return sorted(ARRIVALS)
+        if registry == "ckpt":
+            from repro.core.ckpt import list_ckpts
+            return sorted(list_ckpts())
+        if registry == "failure":
+            from repro.core.failures import FAILURES
+            return sorted(FAILURES)
         if registry == "checkers":
             return sorted(CHECKERS)
         raise KeyError(registry)
@@ -456,9 +466,11 @@ _METERING_HOME = ("src/repro/core/engine.py", "src/repro/core/runtimes.py",
                   "src/repro/core/platform.py", "src/repro/core/channels.py",
                   "src/repro/core/faas.py", "src/repro/core/iaas.py",
                   "src/repro/core/sync.py", "src/repro/core/comm/",
-                  "src/repro/core/elastic/", "src/repro/serving/sim.py")
+                  "src/repro/core/ckpt/", "src/repro/core/elastic/",
+                  "src/repro/serving/sim.py")
 _METERED_ATTRS = {"cost", "sim_time", "comm_bytes", "comm_cost", "op_cost",
-                  "retired_cost", "clock", "invoked_at"}
+                  "retired_cost", "clock", "invoked_at",
+                  "ckpt_bytes", "ckpt_time", "ckpt_cost"}
 _BILLING_HOOKS = {"finalize_cost", "resize_cost", "retire_cost"}
 
 

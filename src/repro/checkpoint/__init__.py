@@ -1,137 +1,27 @@
-"""Fault tolerance: atomic checkpoints, deadline-aware preemption guard,
-elastic resume.
+"""Fault tolerance: atomic checkpoints + deadline-aware preemption guard.
 
-This is the TPU-side realization of LambdaML's hierarchical invocation
-(§3.3.1): a Lambda worker checkpoints before its 15-minute lifetime expires
-and a fresh invocation resumes from the checkpoint.  On a preemptible TPU
-pod the same contract holds with a different deadline: ``PreemptionGuard``
-tracks a step-time EMA and fires while there is still (margin + one step) of
-budget left; ``save`` commits atomically (tmp + rename) so a kill mid-write
-never corrupts the latest checkpoint; ``load_latest`` + ``TokenStream.
-restore(worker, num_workers)`` give elastic resume under a different worker
-count.
+The tree-flatten / bf16-encode / atomic-commit machinery that used to be
+implemented here (a second, disconnected copy of the checkpoint path) now
+lives in :mod:`repro.core.ckpt.localfs` as the ``local`` backend of the
+metered checkpoint subsystem (DESIGN.md §17); this module re-exports it
+unchanged, so the seed-era import path -- ``from repro import checkpoint``
+-- keeps working with bit-exact bf16 roundtrips.
+
+:class:`PreemptionGuard` stays HERE on purpose: it reads the real wall
+clock (``time.monotonic``), which the simulated core (``repro/core``) is
+lint-forbidden (D001) from touching.  It is the real-hardware realization
+of LambdaML's hierarchical invocation (§3.3.1): checkpoint while there is
+still (margin + one step) of the lease left, resume after re-invocation.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 from dataclasses import dataclass, field
-from pathlib import Path
-from typing import Any, Optional
 
-import jax
-import numpy as np
-
-_SEP = "//"
-
-
-def _flatten(tree, prefix=""):
-    out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{_SEP}{k}" if prefix else str(k)))
-    elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{_SEP}#{i}" if prefix else f"#{i}"))
-    else:
-        out[prefix] = np.asarray(tree)
-    return out
-
-
-def _unflatten(flat: dict):
-    root: dict = {}
-    for key, v in flat.items():
-        parts = key.split(_SEP)
-        node = root
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = v
-
-    def fix(node):
-        if not isinstance(node, dict):
-            return node
-        if node and all(k.startswith("#") for k in node):
-            items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
-            return [fix(v) for _, v in items]
-        return {k: fix(v) for k, v in node.items()}
-    return fix(root)
-
-
-_BF16_TAG = "@bf16"
-
-
-def _encode(arr: np.ndarray):
-    """npz cannot store ml_dtypes.bfloat16 -- save as a uint16 view."""
-    if arr.dtype.name == "bfloat16":
-        return arr.view(np.uint16), True
-    return arr, False
-
-
-def _decode(arr: np.ndarray, is_bf16: bool):
-    if is_bf16:
-        import ml_dtypes  # ships with jax
-        return arr.view(ml_dtypes.bfloat16)
-    return arr
-
-
-def save(directory: str | Path, step: int, tree: Any,
-         metadata: Optional[dict] = None) -> Path:
-    """Atomic checkpoint commit: write tmp, fsync, rename."""
-    directory = Path(directory)
-    directory.mkdir(parents=True, exist_ok=True)
-    flat = {}
-    for k, v in _flatten(jax.tree.map(np.asarray, tree)).items():
-        enc, is_bf16 = _encode(v)
-        flat[k + _BF16_TAG if is_bf16 else k] = enc
-    tmp = directory / f".tmp-{step}-{os.getpid()}.npz"
-    final = directory / f"step_{step:010d}.npz"
-    with open(tmp, "wb") as f:
-        np.savez(f, **flat)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, final)  # atomic on POSIX
-    meta = dict(metadata or {})
-    meta["step"] = step
-    mtmp = directory / f".tmp-meta-{step}.json"
-    mtmp.write_text(json.dumps(meta))
-    os.replace(mtmp, directory / f"step_{step:010d}.json")
-    return final
-
-
-def list_steps(directory: str | Path) -> list[int]:
-    directory = Path(directory)
-    if not directory.exists():
-        return []
-    return sorted(int(p.stem.split("_")[1]) for p in directory.glob("step_*.npz"))
-
-
-def load(directory: str | Path, step: int):
-    directory = Path(directory)
-    with np.load(directory / f"step_{step:010d}.npz") as z:
-        flat = {}
-        for k in z.files:
-            if k.endswith(_BF16_TAG):
-                flat[k[: -len(_BF16_TAG)]] = _decode(z[k], True)
-            else:
-                flat[k] = z[k]
-    meta_p = directory / f"step_{step:010d}.json"
-    meta = json.loads(meta_p.read_text()) if meta_p.exists() else {"step": step}
-    return _unflatten(flat), meta
-
-
-def load_latest(directory: str | Path):
-    steps = list_steps(directory)
-    if not steps:
-        return None, None
-    return load(directory, steps[-1])
-
-
-def retain(directory: str | Path, keep: int = 3):
-    steps = list_steps(directory)
-    for s in steps[:-keep]:
-        (Path(directory) / f"step_{s:010d}.npz").unlink(missing_ok=True)
-        (Path(directory) / f"step_{s:010d}.json").unlink(missing_ok=True)
+from repro.core.ckpt.localfs import (  # noqa: F401
+    _BF16_TAG, _SEP, _decode, _encode, _flatten, _unflatten, list_steps,
+    load, load_latest, retain, save,
+)
 
 
 @dataclass

@@ -26,10 +26,11 @@ import numpy as np
 
 from repro.core.comm.codecs import make_codec
 from repro.core.comm.transports import (
-    CHANNEL_SPECS, VMParameterServer, transport_constants)
+    CHANNEL_SPECS, EBS_BANDWIDTH, EBS_LATENCY, VMParameterServer,
+    transport_constants, xfer_seconds)
 from repro.core.runtimes import (
-    _T_FAAS, _T_IAAS, _T_POD, B_NET, L_NET, POD_DCN_BANDWIDTH,
-    POD_DCN_LATENCY, interp_startup,
+    _T_FAAS, _T_IAAS, _T_POD, B_NET, L_NET, LIFETIME, LIFETIME_MARGIN,
+    POD_DCN_BANDWIDTH, POD_DCN_LATENCY, interp_startup,
 )
 
 # ------------------------------- Table 6 -------------------------------------
@@ -40,11 +41,11 @@ from repro.core.runtimes import (
 TABLE6 = {
     "t_F": dict(_T_FAAS),
     "t_I": dict(_T_IAAS),
-    "B_S3": CHANNEL_SPECS["s3"].bandwidth, "B_EBS": 1950e6,
+    "B_S3": CHANNEL_SPECS["s3"].bandwidth, "B_EBS": EBS_BANDWIDTH,
     "B_n": {k: B_NET[k] for k in ("t2.medium", "c5.large")},
     "B_EC": {"cache.t3.medium": CHANNEL_SPECS["memcached"].bandwidth,
              "cache.m5.large": CHANNEL_SPECS["memcached_large"].bandwidth},
-    "L_S3": CHANNEL_SPECS["s3"].latency, "L_EBS": 3e-5,
+    "L_S3": CHANNEL_SPECS["s3"].latency, "L_EBS": EBS_LATENCY,
     "L_n": {k: L_NET[k] for k in ("t2.medium", "c5.large")},
     "L_EC": {"cache.t3.medium": CHANNEL_SPECS["memcached"].latency},
 }
@@ -126,19 +127,48 @@ def wire_bytes(m_bytes: float, codec: str = "fp32") -> float:
     return float(c.wire_floats(n) * 4)
 
 
+def restart_seconds(platform: str, m_bytes: float = 0.0, *,
+                    ckpt: object = None, channel: str = "s3",
+                    workers: int = 1) -> float:
+    """DERIVED worker-restart seconds (DESIGN.md §17): platform startup
+    for one replacement worker plus the metered restore of the model's
+    actual byte size through the checkpoint transport -- the same
+    :func:`~repro.core.comm.transports.xfer_seconds` /
+    :meth:`~repro.core.ckpt.CheckpointSpec.restore_seconds` arithmetic the
+    simulator bills, so the planner's crossover and the discrete-event
+    meters cannot drift.  ``ckpt`` is a :class:`~repro.core.ckpt.
+    CheckpointSpec` or grammar string; with no explicit transport the
+    restore reads ``channel``'s constants (the engine's default store)."""
+    from repro.core.ckpt import ckpt_transport_constants, make_ckpt
+    table = {"faas": _T_FAAS, "iaas": _T_IAAS, "pod": _T_POD}[platform]
+    startup = interp_startup(table, 1)
+    if m_bytes <= 0:
+        return startup
+    spec = make_ckpt(ckpt)
+    ch = ckpt_transport_constants(spec.transport or channel)
+    return startup + spec.restore_seconds(m_bytes, ch, workers)
+
+
 def faas_time(wl: CostInputs, w: int, *, channel: str = "s3",
               codec: str = "fp32") -> float:
     """§5.3 FaaS(w), over ANY storage transport's Table 6 constants
     (``channel`` accepts every :mod:`repro.core.comm` storage transport
     name; the legacy ``"elasticache"`` alias maps to memcached) and any
-    codec's wire ratio."""
+    codec's wire ratio.  Runs longer than one Lambda lease add the
+    lifetime-rotation overhead: one checkpoint save + derived restart
+    per elapsed lease (zero for runs shorter than a lease)."""
     spec = transport_constants(
         "memcached" if channel == "elasticache" else channel)
     b, lat = spec.bandwidth, spec.latency
     m = wire_bytes(wl.m_bytes, codec)
     t = interp_startup(TABLE6["t_F"], w) + wl.s_bytes / w / TABLE6["B_S3"]
     per_round = (3 * w - 2) * (m / w / b + lat) + wl.C / w
-    return t + wl.R * wl.f(w) * per_round
+    train_span = wl.R * wl.f(w) * per_round
+    n_rot = int(train_span // (LIFETIME - LIFETIME_MARGIN))
+    if n_rot:       # ckpt save + re-invoke + restore, once per lease
+        t += n_rot * (xfer_seconds(spec, wl.m_bytes)
+                      + restart_seconds("faas", wl.m_bytes, channel=channel))
+    return t + train_span
 
 
 def iaas_time(wl: CostInputs, w: int, *, instance: str = "t2.medium") -> float:

@@ -40,6 +40,13 @@ NIC_LATENCY = 5e-4
 DCN_BANDWIDTH = 25e9
 DCN_LATENCY = 1e-3
 
+#: instance-attached EBS (gp2) volume: sequential bandwidth and access
+#: latency (Table 6 methodology) -- the measured source for BOTH the
+#: analytical model's local-disk terms (B_EBS/L_EBS) and the checkpoint
+#: subsystem's ``local`` backend (repro.core.ckpt)
+EBS_BANDWIDTH = 1950e6
+EBS_LATENCY = 3e-5
+
 
 class ChannelItemTooLarge(ValueError):
     """A payload exceeds the transport's per-item limit (DynamoDB's 400 KB
@@ -106,6 +113,17 @@ def nbytes(payload) -> int:
     return sum(p.nbytes for p in payload)
 
 
+def xfer_seconds(spec: ChannelSpec, size: int) -> float:
+    """Per-op transfer seconds for ``size`` bytes over ``spec`` -- the ONE
+    formula both the metered :class:`StorageChannel` and the closed-form
+    consumers (derived restarts in :mod:`repro.core.ckpt`, the analytical
+    model) evaluate, so they can never disagree."""
+    bw = spec.bandwidth
+    if size > 10e6 and spec.large_item_slowdown > 1:
+        bw /= spec.large_item_slowdown
+    return spec.latency + size / bw
+
+
 @runtime_checkable
 class Transport(Protocol):
     """The metering surface every substrate exposes (DESIGN.md §12)."""
@@ -137,10 +155,7 @@ class StorageChannel:
 
     # each op returns simulated seconds
     def _xfer(self, size: int) -> float:
-        bw = self.spec.bandwidth
-        if size > 10e6 and self.spec.large_item_slowdown > 1:
-            bw /= self.spec.large_item_slowdown
-        return self.spec.latency + size / bw
+        return xfer_seconds(self.spec, size)
 
     def put(self, key: str, payload: np.ndarray) -> float:
         size = nbytes(payload)

@@ -34,6 +34,7 @@ import numpy as np
 if TYPE_CHECKING:                        # platform.py imports engine at runtime
     from repro.core.platform import Platform
 
+from repro.core.ckpt import Checkpointer, CheckpointSpec
 from repro.core.comm import (  # noqa: F401  (adapters re-exported)
     ChannelComm, ChannelItemTooLarge, CommStack, MPIComm, PSComm,
     StorageChannel, VMNetwork,
@@ -61,6 +62,13 @@ class RunResult:
                                   # metered (slow) substrate, whole run
                                   # (WIRE bytes: codecs shrink this exactly)
     comm_cost: float = 0.0        # $ billed by the comm substrate itself
+    ckpt_bytes: float = 0.0       # checkpoint bytes moved through the
+                                  # metered checkpoint transport (save puts
+                                  # + restore gets, repro.core.ckpt)
+    ckpt_time: float = 0.0        # simulated checkpoint transfer seconds
+                                  # (excludes the cold-start part of a
+                                  # restart -- that stays in breakdown)
+    ckpt_cost: float = 0.0        # $ of checkpoint put/get requests
     scaling_timeline: list = field(default_factory=list)
                                   # elastic fleets (DESIGN.md §13): one
                                   # (round, w, resize_cost_s, resize_cost_usd)
@@ -90,6 +98,9 @@ class RunResult:
                 "comm_bytes": self.comm_bytes,
                 "comm_time_s": round(self.comm_time, 2),
                 "comm_cost_usd": round(self.comm_cost, 6),
+                "ckpt_bytes": self.ckpt_bytes,
+                "ckpt_time_s": round(self.ckpt_time, 2),
+                "ckpt_cost_usd": round(self.ckpt_cost, 6),
                 "scaling_timeline": [[int(r), int(w), round(s, 3),
                                       round(c, 6)]
                                      for r, w, s, c in self.scaling_timeline],
@@ -176,9 +187,10 @@ class InjectedPreemptions(FailureProcess):
     is executed clamped to the worker's current clock."""
 
     def __init__(self, at: tuple[tuple[int, float], ...]):
+        self.at = tuple((int(wk), float(t)) for wk, t in at)
         self._pending: dict[int, list[float]] = {}
-        for wk, t in at:
-            self._pending.setdefault(int(wk), []).append(float(t))
+        for wk, t in self.at:
+            self._pending.setdefault(wk, []).append(t)
         for ts in self._pending.values():
             ts.sort(reverse=True)  # pop() from the end = earliest first
 
@@ -253,6 +265,8 @@ class SimContext:
     max_epochs: int
     eval_every: int
     invocations: int = 0
+    ckpt: Any = None           # Checkpointer routing save/restore bytes
+                               # through the metered transport (§17)
     # ---- elastic-fleet state (DESIGN.md §13; inert for fixed fleets) ----
     ds_train: Any = None          # kept so resizes can re-partition
     elastic: Any = None           # ElasticController, or None = fixed fleet
@@ -297,16 +311,46 @@ class SimContext:
 
     # ---- checkpoint / restart machinery (shared lifetime + spot path) ----
     def _rotate(self, i: int, at_time: float, meter_key: str):
-        """Checkpoint worker ``i`` to the checkpoint store and bring a fresh
-        replacement up at ``at_time``: ckpt put + cold start + ckpt get."""
-        blob = np.zeros(max(self.mbytes // 4, 1), np.float32)
-        dt_put = self.ckpt_store.put(f"ckpt/{i}", blob)
-        restart = self.platform.restart_time()
-        _, dt_get = self.ckpt_store.get(f"ckpt/{i}")
-        self.clock[i] = at_time + dt_put + restart + dt_get
-        self.meter_add(meter_key, dt_put + restart + dt_get)
+        """Bring a fresh replacement for worker ``i`` up at ``at_time``,
+        routing checkpoint bytes through the metered transport
+        (repro.core.ckpt).
+
+        Save-at-kill mode (``CheckpointSpec.every == 0``, the seed
+        semantics): ckpt save + cold start + ckpt restore, byte-identical
+        to the inline seed path for the default spec.  Under a periodic
+        cadence an INVOLUNTARY kill instead restores the last fleet
+        checkpoint and re-does the work since it (nothing can save at the
+        moment of a preemption); planned lifetime rotations still save
+        on their way out in both modes."""
+        ck = self.ckpt
+        if ck is not None and ck.every > 0 and meter_key == "restart":
+            restart = self.platform.restart_time()
+            dt_get = ck.restore("ckpt/fleet")
+            rework = max(at_time - ck.last_ckpt_t, 0.0)
+            self.clock[i] = at_time + restart + dt_get + rework
+            self.meter_add(meter_key, restart + dt_get + rework)
+        else:
+            dt_put = ck.save(f"ckpt/{i}")
+            restart = self.platform.restart_time()
+            dt_get = ck.restore(f"ckpt/{i}")
+            self.clock[i] = at_time + dt_put + restart + dt_get
+            self.meter_add(meter_key, dt_put + restart + dt_get)
         self.invoked_at[i] = self.clock[i]
         self.invocations += 1
+
+    def ckpt_boundary(self, rnd: int) -> float:
+        """Periodic fleet checkpoint at a sync boundary
+        (``CheckpointSpec.every = N``): every worker stalls for one metered
+        fleet save.  Returns the stall seconds (0.0 when the cadence is off
+        or not yet due) so event-driven protocols can shift their queues."""
+        ck = self.ckpt
+        if ck is None or not ck.due(rnd):
+            return 0.0
+        dt = ck.save("ckpt/fleet")
+        self.clock += dt
+        self.meter_add("checkpoint", dt)
+        ck.mark(rnd, float(np.max(self.clock)))
+        return dt
 
     def ensure_alive(self, i: int, est: float):
         """Guarantee worker ``i`` survives its next ``est`` seconds of work:
@@ -398,6 +442,19 @@ class SimContext:
                 [self.speeds, self.platform.joiner_speeds(ids)])
             self.invocations += added
             self.meter_add("resize", dt)
+            if self.ckpt is not None:
+                # joiners are not born with the model: the merged params are
+                # published once through the checkpoint transport and every
+                # joiner pulls its copy (metered -- no free weight copy;
+                # pulls run in parallel, so the stall is one restore)
+                dt_save = self.ckpt.save("ckpt/fleet")
+                dt_pull = 0.0
+                for _ in range(added):
+                    dt_pull = self.ckpt.restore("ckpt/fleet")
+                self.clock[old_w:] += dt_save + dt_pull
+                self.invoked_at[old_w:] += dt_save + dt_pull
+                self.meter_add("resize", dt_save + dt_pull)
+                self.ckpt.mark(rnd, float(self.clock[old_w]))
         self.platform.resize_fleet(new_w)
         params = self.states[0].params          # merged model at the boundary
         self.parts = partition(self.ds_train, new_w)
@@ -467,6 +524,10 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
     states = [algo.init_worker(model, params0, p) for p in parts]
 
     comm = platform.make_comm()
+    ckpt_store = platform.make_ckpt_store(comm)
+    ckpt_spec = getattr(platform, "ckpt", None) or CheckpointSpec()
+    ckpt = Checkpointer(spec=ckpt_spec, store=ckpt_store, mbytes=int(mbytes),
+                        shards=ckpt_spec.shards(w))
     speeds = platform.worker_speeds()
     t_start = platform.startup_time(comm)
     part_bytes = max(p.nbytes for p in parts)
@@ -481,7 +542,7 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
     ctx = SimContext(
         platform=platform, model=model, algo=algo, states=states, parts=parts,
         ds_val=ds_val, res=res, comm=comm,
-        ckpt_store=platform.make_ckpt_store(comm),
+        ckpt_store=ckpt_store, ckpt=ckpt,
         failure=platform.failure_process(),
         clock=np.full(w, t_start + t_load),
         invoked_at=np.full(w, t_start + t_load),
@@ -494,10 +555,22 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
         worker_ids=np.arange(w), joined_at=np.zeros(w), next_worker_id=w)
 
     try:
+        if ckpt.every > 0:
+            # periodic-cadence mode: checkpoint the freshly-initialized
+            # fleet first, so the earliest involuntary kill always has a
+            # checkpoint to restore (rework is bounded by the cadence)
+            dt0 = ctx.ckpt.save("ckpt/fleet")
+            ctx.clock += dt0
+            ctx.meter_add("checkpoint", dt0)
+            ctx.ckpt.mark(0, float(np.max(ctx.clock)))
         sync.run(ctx)
     except ChannelItemTooLarge as e:
         res.error = str(e)
         return res
+    finally:
+        res.ckpt_bytes = ctx.ckpt.wire_bytes
+        res.ckpt_time = ctx.ckpt.time_s
+        res.ckpt_cost = ctx.ckpt.op_usd
 
     res.sim_time = float(np.max(ctx.clock))
     res.comm_cost = ctx.comm.service_cost(res.sim_time)

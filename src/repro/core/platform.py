@@ -30,6 +30,7 @@ from typing import Any, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core import cost as pricing
+from repro.core.ckpt import CheckpointSpec, ckpt_transport_constants
 from repro.core.engine import (
     CommBackend, FailureProcess, InjectedPreemptions, PoissonPreemptions,
     RunResult, StragglerProcess, simulate,
@@ -130,11 +131,17 @@ class FailureSpec:
     fleets, 2 preemptions per worker-hour for spot IaaS fleets -- so a
     bare ``FailureSpec(spot=True)`` buys the discount WITH the
     preemption risk, exactly like the legacy ``IaaSRuntime(spot=True)``.
+
+    ``trace`` replays a RECORDED preemption trace instead (a bundled
+    fixture name or a file path, :mod:`repro.core.failures`) -- failure
+    timing from data, not Poisson only.  Precedence: ``inject`` (an
+    explicit script always wins) > ``trace`` > Poisson rate.
     """
     rate: float | None = None            # preemptions per worker-hour
     inject: tuple = ()                   # ((worker, sim_time), ...) kills
     spot: bool = False                   # preemptible fleet, discounted $
     spot_discount: float = pricing.SPOT_DISCOUNT   # spot $ / on-demand $
+    trace: str = ""                      # recorded trace: fixture name|path
 
     def __post_init__(self):
         _freeze(self, "inject",
@@ -147,6 +154,9 @@ class FailureSpec:
                 default_rate: float = 0.0) -> FailureProcess:
         if self.inject:
             return InjectedPreemptions(self.inject)
+        if self.trace:
+            from repro.core.failures import TracePreemptions
+            return TracePreemptions.from_spec(self.trace, workers)
         rate = self.resolved_rate(default_rate)
         if armed and rate > 0.0:
             return PoissonPreemptions(rate, workers, seed)
@@ -290,11 +300,14 @@ class ServingHooks:
     cold_start_s: float = 0.0      # sandbox/VM bring-up, EXCLUDING model load
     load_bandwidth: float = 1.0    # bytes/s for pulling weights on cold start
     load_latency: float = 0.0      # per-pull latency (S3 round trip)
+    load_shards: int = 1           # weight objects pulled (sharded ckpt)
     provision_table: tuple = ()    # ((w, s), ...) fleet-extension curve
 
     def model_load_s(self, model_bytes: float) -> float:
-        """Seconds to pull the weights into a fresh replica."""
-        return self.load_latency + model_bytes / self.load_bandwidth
+        """Seconds to pull the weights into a fresh replica (one latency
+        per checkpoint shard, bandwidth over the full byte size)."""
+        return self.load_shards * self.load_latency \
+            + model_bytes / self.load_bandwidth
 
     def cold_start_total_s(self, model_bytes: float) -> float:
         """Full cold start: sandbox/VM bring-up + weight pull."""
@@ -335,8 +348,12 @@ class Platform(Protocol):
 
     def load_time(self, part_bytes: int, data_local: bool = False) -> float: ...
 
-    def restart_time(self) -> float:
-        """Cold-start seconds for one replacement worker."""
+    def restart_time(self, model_bytes: int = 0) -> float:
+        """Cold-start seconds for one replacement worker.  With
+        ``model_bytes > 0`` the platform DERIVES the full restart:
+        startup plus the metered restore of the model's actual byte
+        size through the checkpoint transport (DESIGN.md §17) -- no
+        platform asserts a checkpoint-free restart."""
         ...
 
     def lifetime_s(self) -> float:
@@ -399,10 +416,16 @@ class BasePlatform:
     seed: int = 0
     scaling: object = "static"           # static|schedule:<w@r,..>|smlt|
                                          #   cost_cap:<$>|ScalingPolicy inst.
+    ckpt: object = field(default_factory=CheckpointSpec)
+                                         # CheckpointSpec | "s3:every=5:sharded"
 
     def __post_init__(self):
         if isinstance(self.comm, str):   # "s3/scatter_reduce/int8" grammar
             self.comm = CommSpec.parse(self.comm)
+        if self.ckpt is None:
+            self.ckpt = CheckpointSpec()
+        elif isinstance(self.ckpt, str):  # "s3:every=5:sharded" grammar
+            self.ckpt = CheckpointSpec.parse(self.ckpt)
 
     # ---- user entry point ---------------------------------------------------
     def train(self, model, algo, ds_train, ds_val, *,
@@ -448,6 +471,16 @@ class BasePlatform:
 
     def failure_process(self) -> FailureProcess:
         return self.failure.process(self.workers, self.seed)
+
+    def ckpt_channel_spec(self):
+        """The :class:`~repro.core.comm.ChannelSpec` checkpoint bytes move
+        over: an explicit ``CheckpointSpec.transport`` wins; otherwise the
+        platform's default checkpoint channel (``comm.ckpt_channel`` here;
+        FaaS overrides to its resolved comm transport, whose kvstore holds
+        the checkpoints by default)."""
+        if self.ckpt.transport is not None:
+            return ckpt_transport_constants(self.ckpt.transport)
+        return ckpt_transport_constants(self.comm.ckpt_channel)
 
     def validate(self, mbytes: int) -> str:
         return ""

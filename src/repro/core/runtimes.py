@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core import cost as pricing
 from repro.core.channels import StorageChannel, VMNetwork, VMParameterServer
+from repro.core.ckpt import ckpt_transport_constants, make_ckpt_transport
 from repro.core.comm.transports import (
     CHANNEL_SPECS, DCN_BANDWIDTH, DCN_LATENCY, NIC_BANDWIDTH, NIC_LATENCY,
 )
@@ -125,7 +126,8 @@ class FaaSRuntime(BasePlatform):
                  preempt_at: tuple = (), scaling: object = "static", *,
                  fleet: FleetSpec | None = None,
                  failure: FailureSpec | None = None,
-                 comm: CommSpec | None = None):
+                 comm: CommSpec | None = None,
+                 ckpt: object = None):
         super().__init__(
             fleet=fleet if fleet is not None else FleetSpec(
                 workers=workers, lambda_gb=lambda_gb, straggler=straggler,
@@ -134,7 +136,7 @@ class FaaSRuntime(BasePlatform):
                 rate=preempt_rate, inject=tuple(preempt_at)),
             comm=comm if comm is not None else CommSpec(
                 channel=channel, pattern=pattern),
-            sync=sync, seed=seed, scaling=scaling)
+            sync=sync, seed=seed, scaling=scaling, ckpt=ckpt)
         self.lifetime = lifetime
 
     # ---- legacy flat attributes (read-only views over the specs) ------------
@@ -206,7 +208,16 @@ class FaaSRuntime(BasePlatform):
         return build_comm_stack(*self.comm.resolved("faas"))
 
     def make_ckpt_store(self, comm):
+        if self.ckpt.transport is not None:   # dedicated checkpoint channel
+            return make_ckpt_transport(self.ckpt.transport)
         return comm.kvstore()     # the storage channel (PSComm: its S3 side)
+
+    def ckpt_channel_spec(self):
+        # the default FaaS checkpoint home IS the comm kvstore, so the
+        # derived restart reads the resolved comm transport's constants
+        if self.ckpt.transport is not None:
+            return ckpt_transport_constants(self.ckpt.transport)
+        return ckpt_transport_constants(self.comm.resolved("faas")[0])
 
     def startup_time(self, comm) -> float:
         return max(interp_startup(_T_FAAS, self.workers), comm.startup())
@@ -214,8 +225,12 @@ class FaaSRuntime(BasePlatform):
     def load_time(self, part_bytes: int, data_local: bool = False) -> float:
         return L_S3 + part_bytes / B_S3
 
-    def restart_time(self) -> float:
-        return interp_startup(_T_FAAS, 1)
+    def restart_time(self, model_bytes: int = 0) -> float:
+        dt = interp_startup(_T_FAAS, 1)
+        if model_bytes > 0:       # derived: startup + metered restore
+            dt += self.ckpt.restore_seconds(
+                model_bytes, self.ckpt_channel_spec(), self.workers)
+        return dt
 
     def lifetime_s(self) -> float:
         return self.lifetime
@@ -235,10 +250,14 @@ class FaaSRuntime(BasePlatform):
         gb_s = float(np.dot(self.fleet.gb_array(),
                             ctx.clock - ctx.joined_at))
         sim_time = float(np.max(ctx.clock))
+        # a DEDICATED checkpoint channel bills its service/op prices on
+        # top; the default store is the comm kvstore, already billed above
+        ckpt_usd = (ctx.ckpt_store.service_cost(sim_time)
+                    if self.ckpt.transport is not None else 0.0)
         return (gb_s * pricing.LAMBDA_GB_S
                 + ctx.invocations * pricing.LAMBDA_REQUEST
                 + ctx.comm.service_cost(sim_time)
-                + ctx.retired_cost)
+                + ctx.retired_cost + ckpt_usd)
 
     # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
     def resize_cost(self, added: int) -> tuple:
@@ -264,6 +283,11 @@ class FaaSRuntime(BasePlatform):
             raise ValueError("serving needs a homogeneous fleet: per-worker "
                              "lambda_gb tuples cannot autoscale")
         gb = float(self.fleet.gb_array()[0])
+        if self.ckpt.transport is not None:   # weights live where ckpts do
+            ch = ckpt_transport_constants(self.ckpt.transport)
+            load_bw, load_lat = ch.bandwidth, ch.latency
+        else:
+            load_bw, load_lat = B_S3, L_S3
         return ServingHooks(
             system="faas", billing="request",
             flops=float(self.worker_flops_array(None)[0]),
@@ -273,7 +297,8 @@ class FaaSRuntime(BasePlatform):
             request_fee_usd=pricing.LAMBDA_REQUEST,
             keep_warm_s=KEEP_WARM_S,
             cold_start_s=self.restart_time(),
-            load_bandwidth=B_S3, load_latency=L_S3)
+            load_bandwidth=load_bw, load_latency=load_lat,
+            load_shards=self.ckpt.shards(self.workers))
 
 
 class IaaSRuntime(BasePlatform):
@@ -293,7 +318,8 @@ class IaaSRuntime(BasePlatform):
                  ckpt_channel: str = "s3", scaling: object = "static", *,
                  fleet: FleetSpec | None = None,
                  failure: FailureSpec | None = None,
-                 comm: CommSpec | None = None):
+                 comm: CommSpec | None = None,
+                 ckpt: object = None):
         super().__init__(
             fleet=fleet if fleet is not None else FleetSpec(
                 workers=workers, instance=instance, gpu=gpu,
@@ -302,7 +328,7 @@ class IaaSRuntime(BasePlatform):
                 rate=preempt_rate, inject=tuple(preempt_at), spot=spot),
             comm=comm if comm is not None else CommSpec(
                 ckpt_channel=ckpt_channel),
-            sync=sync, seed=seed, scaling=scaling)
+            sync=sync, seed=seed, scaling=scaling, ckpt=ckpt)
 
     # ---- legacy flat attributes (read-only views over the specs) ------------
     @property
@@ -360,6 +386,8 @@ class IaaSRuntime(BasePlatform):
         return build_comm_stack(*self.comm.resolved("iaas"), nic=self._net())
 
     def make_ckpt_store(self, comm):
+        if self.ckpt.transport is not None:   # dedicated checkpoint channel
+            return make_ckpt_transport(self.ckpt.transport)
         return StorageChannel(self.comm.ckpt_channel)
 
     def startup_time(self, comm) -> float:
@@ -373,8 +401,12 @@ class IaaSRuntime(BasePlatform):
                                     for i in self.fleet.instances())
         return part_bytes / B_S3
 
-    def restart_time(self) -> float:
-        return interp_startup(_T_IAAS, 1)
+    def restart_time(self, model_bytes: int = 0) -> float:
+        dt = interp_startup(_T_IAAS, 1)
+        if model_bytes > 0:       # derived: startup + metered restore
+            dt += self.ckpt.restore_seconds(
+                model_bytes, self.ckpt_channel_spec(), self.workers)
+        return dt
 
     #: default spot-market preemption rate (per worker-hour) when the
     #: FailureSpec leaves ``rate=None``
@@ -450,13 +482,19 @@ class IaaSRuntime(BasePlatform):
         else:
             mem_gb = pricing.EC2_RAM_GB.get(inst, 4.0)
             mem_bw = pricing.VM_MEM_BW
+        if self.ckpt.transport is not None:   # weights live where ckpts do
+            ch = ckpt_transport_constants(self.ckpt.transport)
+            load_bw, load_lat = ch.bandwidth, ch.latency
+        else:
+            load_bw, load_lat = B_S3, 0.0
         return ServingHooks(
             system=self.system_name(), billing="provisioned",
             flops=float(self.worker_flops_array(None)[0]),
             memory_bytes=mem_gb * 1e9, mem_bandwidth=mem_bw,
             hourly_usd=float(self._hourly_array()[0]),
             cold_start_s=self.restart_time(),
-            load_bandwidth=B_S3, load_latency=0.0,
+            load_bandwidth=load_bw, load_latency=load_lat,
+            load_shards=self.ckpt.shards(self.workers),
             provision_table=tuple(sorted(_T_IAAS.items())))
 
 
@@ -519,14 +557,15 @@ class PodPlatform(BasePlatform):
                  scaling: object = "static", *,
                  fleet: FleetSpec | None = None,
                  failure: FailureSpec | None = None,
-                 comm: CommSpec | None = None):
+                 comm: CommSpec | None = None,
+                 ckpt: object = None):
         super().__init__(
             fleet=fleet if fleet is not None else FleetSpec(
                 workers=pods, straggler=straggler),
             failure=failure if failure is not None else FailureSpec(
                 inject=tuple(preempt_at)),
             comm=comm if comm is not None else CommSpec(),
-            sync=sync, seed=seed, scaling=scaling)
+            sync=sync, seed=seed, scaling=scaling, ckpt=ckpt)
         if chips_per_pod < 1:
             raise ValueError(f"chips_per_pod must be >= 1, got {chips_per_pod}")
         from repro.core.calibration import resolve_mfu
@@ -574,6 +613,8 @@ class PodPlatform(BasePlatform):
             dcn=VMNetwork(self.dcn_bandwidth, self.dcn_latency, "dcn"))
 
     def make_ckpt_store(self, comm):
+        if self.ckpt.transport is not None:   # dedicated checkpoint channel
+            return make_ckpt_transport(self.ckpt.transport)
         return StorageChannel(self.comm.ckpt_channel)
 
     def startup_time(self, comm) -> float:
@@ -584,8 +625,12 @@ class PodPlatform(BasePlatform):
             return self.dcn_latency + part_bytes / self.dcn_bandwidth
         return L_S3 + part_bytes / B_S3
 
-    def restart_time(self) -> float:
-        return interp_startup(_T_POD, 1)
+    def restart_time(self, model_bytes: int = 0) -> float:
+        dt = interp_startup(_T_POD, 1)
+        if model_bytes > 0:       # derived: startup + metered restore
+            dt += self.ckpt.restore_seconds(
+                model_bytes, self.ckpt_channel_spec(), self.workers)
+        return dt
 
     SPOT_DEFAULT_RATE = IaaSRuntime.SPOT_DEFAULT_RATE
 
@@ -644,6 +689,11 @@ class PodPlatform(BasePlatform):
         slice, so the streaming floor rides the aggregate HBM bandwidth --
         which is exactly why continuous batching pays on this platform."""
         from repro.distributed.roofline import HBM_BW, PEAK_FLOPS
+        if self.ckpt.transport is not None:   # weights live where ckpts do
+            ch = ckpt_transport_constants(self.ckpt.transport)
+            load_bw, load_lat = ch.bandwidth, ch.latency
+        else:
+            load_bw, load_lat = B_S3, L_S3
         return ServingHooks(
             system=self.system_name(), billing="provisioned",
             flops=self.chips_per_pod * PEAK_FLOPS * self.mfu,
@@ -651,5 +701,6 @@ class PodPlatform(BasePlatform):
             mem_bandwidth=self.chips_per_pod * HBM_BW,
             hourly_usd=self._pod_hourly(),
             cold_start_s=self.restart_time(),
-            load_bandwidth=B_S3, load_latency=L_S3,
+            load_bandwidth=load_bw, load_latency=load_lat,
+            load_shards=self.ckpt.shards(self.workers),
             provision_table=tuple(sorted(_T_POD.items())))

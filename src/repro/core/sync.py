@@ -137,6 +137,7 @@ class BSP(SyncProtocol):
             if ctx.record_eval(rnd, total_rounds, algo.eval_params(states[0])):
                 break
             rnd += 1
+            ctx.ckpt_boundary(rnd)      # cadence save (DESIGN.md §17)
             stop, total_rounds, rpe, resized = ctx.elastic_boundary(
                 rnd, total_rounds, rpe)
             if stop:
@@ -258,6 +259,14 @@ class SSP(SyncProtocol):
                 cur, _ = store.get("global")
                 if ctx.record_eval_at(t, unravel(cur)):
                     break
+                # cadence save at the eval boundary (the global model was
+                # just read); the fleet-wide stall shifts every pending
+                # event and park time uniformly, preserving the heap order
+                dt_ck = ctx.ckpt_boundary(int(fleet_round))
+                if dt_ck > 0.0:
+                    t += dt_ck
+                    heap = [(tj + dt_ck, j) for tj, j in heap]
+                    waiting = {j: tp + dt_ck for j, tp in waiting.items()}
                 if ctx.elastic is not None and done < total:
                     w_before = w
                     # resize rebuilds worker state from states[0]: hand it
@@ -433,6 +442,9 @@ class LocalSGD(SyncProtocol):
             if done:
                 break
             rnd += 1
+            # cadence saves ride the averaging boundaries too: between them
+            # workers hold un-merged local state no checkpoint could restore
+            ctx.ckpt_boundary(rnd)
             # averaging boundary = the only safe membership change: every
             # worker just resynced to the merged model
             stop, total_rounds, rpe, resized = ctx.elastic_boundary(

@@ -96,6 +96,25 @@ def _spot_vs_ondemand(quick: bool) -> list[ExperimentSpec]:
     ]
 
 
+def _spot_trace(quick: bool) -> list[ExperimentSpec]:
+    # trace-driven spot failures x checkpoint cadence (DESIGN.md §17): the
+    # recorded spot_burst reclaim wave replayed against a no-cadence fleet
+    # (save-at-kill seed semantics) and three checkpoint policies -- the
+    # cadence grid shows the rework-vs-overhead trade the derived restart
+    # term prices
+    base = ExperimentSpec(
+        platform="iaas", model="lr", dataset="higgs",
+        rows=30_000 if quick else 200_000, algorithm="ga_sgd",
+        algo_args=dict(_GA), max_epochs=3, fleet=FleetSpec(workers=8),
+        failure=FailureSpec(spot=True, trace="spot_burst"))
+    return [
+        base.with_(name="spot_trace_nockpt"),
+        base.with_(name="spot_trace_every2", ckpt="s3:every=2"),
+        base.with_(name="spot_trace_every8", ckpt="s3:every=8"),
+        base.with_(name="spot_trace_sharded", ckpt="s3:every=2:sharded"),
+    ]
+
+
 def _hetero_fleet(quick: bool) -> list[ExperimentSpec]:
     return [
         ExperimentSpec(
@@ -218,6 +237,10 @@ PRESETS: dict[str, Preset] = {p.name: p for p in [
     Preset("spot_vs_ondemand",
            "Spot IaaS with injected preemptions + restart-from-checkpoint "
            "vs the on-demand fleet", _spot_vs_ondemand),
+    Preset("spot_trace",
+           "Recorded spot-preemption trace (spot_burst) x checkpoint "
+           "cadence grid: no cadence vs s3:every=2/8 vs sharded (§17)",
+           _spot_trace),
     Preset("hetero_fleet",
            "Heterogeneous fleets: mixed 1/3 GB Lambdas and mixed instance "
            "types", _hetero_fleet),

@@ -22,6 +22,7 @@ import hashlib
 import json
 from dataclasses import asdict, dataclass, field, fields, replace
 
+from repro.core.ckpt import CheckpointSpec
 from repro.core.platform import CommSpec, FailureSpec, FleetSpec
 from repro.core.runtimes import (
     LIFETIME, FaaSRuntime, IaaSRuntime, PodPlatform,
@@ -41,7 +42,13 @@ PLATFORMS = ("faas", "iaas", "pod")
 #: scale per 256-element block -- the form the quant8 Pallas kernel ships)
 #: and the codecs now execute the kernels, so cached ``comm_bytes``/loss
 #: histories from the per-vector-scale era must not alias the new numbers.
-HASH_SCHEMA = "h4"
+#: h5: the metered checkpoint subsystem (DESIGN.md §17) landed -- restarts
+#: route real shard bytes through the transport, ``RunResult`` grew the
+#: ``ckpt_*`` meters, and the FaaS planner time gained the lifetime-rotation
+#: term -- so pre-checkpoint records must not alias runs that now bill
+#: checkpoint traffic (``FailureSpec.trace`` / ``ExperimentSpec.ckpt`` are
+#: new fields and elide from the hash when defaulted).
+HASH_SCHEMA = "h5"
 
 
 @dataclass(frozen=True)
@@ -56,6 +63,10 @@ class ExperimentSpec:
                                            # also accepts the string grammar
                                            # "transport/collective/codec",
                                            # e.g. "s3/scatter_reduce/int8"
+    ckpt: CheckpointSpec = field(default_factory=CheckpointSpec)
+                                           # also accepts the string grammar
+                                           # "<transport>[:every=<N>][:sharded]",
+                                           # e.g. "s3:every=5:sharded" (§17)
     sync: str = "bsp"                      # bsp | asp | ssp:<s>
                                            #   | local:<H>[:c8] | diloco:<H>[:c8]
     scaling: str = "static"                # elastic fleet policy (§13):
@@ -114,11 +125,13 @@ class ExperimentSpec:
         object.__setattr__(self, "sync", sync_name(self.sync))
         if isinstance(self.comm, str):     # "transport/collective/codec"
             object.__setattr__(self, "comm", CommSpec.parse(self.comm))
-        for f in ("fleet", "failure", "comm"):
+        if isinstance(self.ckpt, str) or self.ckpt is None:
+            object.__setattr__(self, "ckpt", CheckpointSpec.parse(self.ckpt))
+        for f in ("fleet", "failure", "comm", "ckpt"):
             v = getattr(self, f)
             if isinstance(v, dict):
                 cls = {"fleet": FleetSpec, "failure": FailureSpec,
-                       "comm": CommSpec}[f]
+                       "comm": CommSpec, "ckpt": CheckpointSpec}[f]
                 object.__setattr__(self, f, cls(**v))
         # the comm stack fails HERE, not mid-simulation: pairing/platform
         # rules and per-item limits (DynamoDB 400 KB x the estimated model
@@ -130,6 +143,17 @@ class ExperimentSpec:
             model_bytes=lambda: estimate_update_bytes(
                 self.model, self.dataset, self.model_args),
             workers=self.fleet.workers)
+        # checkpoint feasibility fails here too: every shard must fit the
+        # ckpt transport's per-item limit (DynamoDB 400 KB), same lazy
+        # size estimate as the comm check (§17)
+        self.ckpt.validate(
+            model_bytes=lambda: estimate_update_bytes(
+                self.model, self.dataset, self.model_args),
+            workers=self.fleet.workers)
+        # a preemption trace must exist and parse before a sweep starts
+        if self.failure.trace:
+            from repro.core.failures import load_trace, resolve_trace
+            load_trace(resolve_trace(self.failure.trace))
         # lossy codecs only act on collective reduces; reject the ASP/SSP
         # pairing eagerly (it would silently run fp32)
         from repro.core.platform import check_sync_codec
@@ -236,15 +260,16 @@ class ExperimentSpec:
             return FaaSRuntime(
                 fleet=fleet, failure=self.failure, comm=self.comm,
                 sync=self.sync, seed=self.seed, scaling=scaling,
+                ckpt=self.ckpt,
                 lifetime=LIFETIME if self.lifetime is None else self.lifetime)
         if self.platform == "pod":
             return PodPlatform(fleet=fleet, failure=self.failure,
                                comm=self.comm, sync=self.sync,
                                seed=self.seed, scaling=scaling,
-                               **self.platform_args)
+                               ckpt=self.ckpt, **self.platform_args)
         return IaaSRuntime(fleet=fleet, failure=self.failure,
                            comm=self.comm, sync=self.sync, seed=self.seed,
-                           scaling=scaling)
+                           scaling=scaling, ckpt=self.ckpt)
 
     def build_workload(self):
         """(workload, algo, ds_train, ds_val) via the unified

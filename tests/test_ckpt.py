@@ -1,0 +1,292 @@
+"""Metered checkpoint subsystem (DESIGN.md §17): spec grammar round-trip,
+transport-routed sharded save/restore with exact metering, trace-driven
+spot preemptions, derived restart times, and the elastic-join restore
+cost.  Registry constructors under test: ``make_ckpt`` /
+``make_ckpt_transport`` (checkpoint transports) and ``make_failure``
+(failure processes)."""
+import numpy as np
+import pytest
+
+from repro.core.algorithms import make_algorithm
+from repro.core.ckpt import (
+    CKPT_TRANSPORTS, CheckpointSpec, Checkpointer, ckpt_transport_constants,
+    list_ckpts, make_ckpt, make_ckpt_transport, shard_sizes,
+)
+from repro.core.comm.transports import ChannelItemTooLarge, xfer_seconds
+from repro.core.failures import (
+    TracePreemptions, list_failures, load_trace, make_failure, resolve_trace,
+    trace_fixtures,
+)
+from repro.core.platform import FailureSpec
+from repro.core.runtimes import FaaSRuntime, IaaSRuntime, PodPlatform
+from repro.data.synthetic import make_dataset, train_val_split
+
+
+@pytest.fixture(scope="module")
+def higgs():
+    ds = make_dataset("higgs", rows=20_000)
+    return train_val_split(ds)
+
+
+def _ga(**kw):
+    return make_algorithm("ga_sgd", **{"lr": 0.2, "batch_size": 2048, **kw})
+
+
+def _lr(tr):
+    from repro.core.mlmodels import make_study_model
+    return make_study_model("lr", tr)
+
+
+# ---------------------------------------------------- spec grammar (R002) ----
+
+def test_ckpt_spec_parse_name_roundtrip():
+    for text in ("s3:every=5:sharded", "local:every=1", "dynamodb:sharded",
+                 "every=3", "every=2:sharded", "memcached", ""):
+        spec = make_ckpt(text)
+        assert make_ckpt(spec.name) == spec        # name -> parse round-trip
+    assert CheckpointSpec().name == ""             # default elides (h5)
+    s = make_ckpt("s3:every=5:sharded")
+    assert (s.transport, s.every, s.sharded) == ("s3", 5, True)
+    assert make_ckpt("every=4").transport is None  # platform-default store
+    assert make_ckpt(None) == CheckpointSpec()
+    assert make_ckpt({"transport": "redis", "every": 2}).name == "redis:every=2"
+
+
+def test_ckpt_spec_rejects_bad_grammar():
+    with pytest.raises(KeyError):
+        make_ckpt("carrier-pigeon:every=2")
+    with pytest.raises(ValueError):
+        make_ckpt("s3:sometimes")
+    with pytest.raises(ValueError):
+        CheckpointSpec(every=-1)
+
+
+def test_ckpt_registry_and_transport_constructor():
+    names = set(list_ckpts())
+    assert {"s3", "dynamodb", "memcached", "redis", "local"} <= names
+    local = make_ckpt_transport("local")
+    assert local.spec.name == "local" and local.spec.put_cost == 0.0
+    assert ckpt_transport_constants("local").bandwidth == local.spec.bandwidth
+    # platform defaults (vmps) resolve through the comm registry fallback
+    assert ckpt_transport_constants("vmps").bandwidth > 0
+    with pytest.raises(KeyError):
+        make_ckpt_transport("carrier-pigeon")
+
+
+# ------------------------------------------------------- sharding layout ----
+
+def test_shard_sizes_partition_the_model():
+    mb = 1_000_003
+    for k in (1, 2, 7, 32):
+        sizes = shard_sizes(mb, k)
+        assert sum(sizes) == 4 * (mb // 4)      # fp32 words, nothing lost
+        assert len(sizes) <= k
+        assert min(sizes) > 0
+
+
+def test_dynamodb_feasibility_is_spec_time():
+    """A 1 MB model overflows DynamoDB's 400 KB items unsharded; splitting
+    it over 4 workers makes every shard feasible -- checked eagerly at
+    validate(), the checkpoint mirror of Table 1's N/A cells."""
+    big = 1_000_000
+    with pytest.raises(ChannelItemTooLarge):
+        make_ckpt("dynamodb:every=2").validate(model_bytes=big, workers=4)
+    make_ckpt("dynamodb:every=2:sharded").validate(model_bytes=big, workers=4)
+    # lazily-estimated model bytes (callable) work the same way
+    with pytest.raises(ChannelItemTooLarge):
+        make_ckpt("dynamodb").validate(model_bytes=lambda: big, workers=4)
+
+
+# ----------------------------------------- metered save/restore, exactly ----
+
+@pytest.mark.parametrize("name", sorted(CKPT_TRANSPORTS))
+def test_roundtrip_meters_exactly_per_transport(name):
+    """save()+restore() through EVERY registered transport: wire bytes,
+    transfer seconds and request $ must equal the closed-form per-shard
+    arithmetic (xfer_seconds over shard_sizes) to the last bit."""
+    mbytes, workers = 200_000, 4        # 50 KB shards: feasible everywhere
+    spec = CheckpointSpec(transport=name, every=1, sharded=True)
+    spec.validate(model_bytes=mbytes, workers=workers)
+    store = make_ckpt_transport(name)
+    ck = Checkpointer(spec=spec, store=store, mbytes=mbytes,
+                      shards=spec.shards(workers))
+    dt_put = ck.save("ckpt/fleet")
+    dt_get = ck.restore("ckpt/fleet")
+    sizes = shard_sizes(mbytes, workers)
+    ch = CKPT_TRANSPORTS[name]
+    expect = sum(xfer_seconds(ch, s) for s in sizes)
+    assert dt_put == expect and dt_get == expect
+    assert ck.time_s == dt_put + dt_get
+    assert ck.wire_bytes == 2 * sum(sizes)
+    usd = 0.0                           # replicate accumulation order (ULP)
+    for _ in sizes:
+        usd += ch.put_cost
+    for _ in sizes:
+        usd += ch.get_cost
+    assert ck.op_usd == usd
+    assert (ck.puts, ck.gets) == (len(sizes), len(sizes))
+    # the spec's closed-form restore matches the metered one bit-exactly
+    assert dt_get == spec.restore_seconds(mbytes, ch, workers)
+
+
+def test_single_shard_uses_seed_key_layout():
+    """shards=1 keeps the seed engine's one-key layout (parity contract)."""
+    ck = Checkpointer(spec=CheckpointSpec(), store=make_ckpt_transport("s3"),
+                      mbytes=4_000)
+    assert [k for k, _ in ck._blobs("ckpt/3")] == ["ckpt/3"]
+    ck4 = Checkpointer(spec=CheckpointSpec(sharded=True),
+                       store=make_ckpt_transport("s3"), mbytes=4_000, shards=4)
+    assert [k for k, _ in ck4._blobs("ckpt/fleet")] == [
+        f"ckpt/fleet/s{j}" for j in range(4)]
+
+
+# ------------------------------------------------- failure registry (§17) ----
+
+def test_failure_registry_and_trace_fixtures():
+    assert set(list_failures()) == {"poisson", "inject", "trace"}
+    assert {"spot_burst", "spot_ramp", "spot_sparse"} <= set(trace_fixtures())
+    assert isinstance(make_failure("trace:spot_burst", workers=8),
+                      TracePreemptions)
+    p = make_failure("poisson:2.0", workers=4, seed=7)
+    assert p.next_preemption(0, 0.0, 1e9) > 0.0
+    inj = make_failure("inject:1@5.0,3@9.0", workers=4)
+    assert inj.at == ((1, 5.0), (3, 9.0))
+    with pytest.raises(KeyError):
+        make_failure("solar-flare:1", workers=4)
+    with pytest.raises(ValueError):
+        make_failure("trace:", workers=4)
+
+
+def test_trace_replay_is_deterministic(tmp_path):
+    """Same trace -> same kill schedule, no RNG consumed; unassigned events
+    round-robin over the fleet; both file formats parse identically."""
+    a = make_failure("trace:spot_burst", workers=8)
+    b = make_failure("trace:spot_burst", workers=8)
+    assert a.at == b.at and len(a.at) > 0
+    events = load_trace(resolve_trace("spot_burst"))
+    assert all(t1 <= t2 for (t1, _), (t2, _) in zip(events, events[1:]))
+    # round-robin assignment for worker-less events
+    rr = TracePreemptions(((10.0, None), (20.0, None), (30.0, None)), 2)
+    assert rr.at == ((0, 10.0), (1, 20.0), (0, 30.0))
+    # JSON pair format == whitespace format
+    txt = tmp_path / "t.txt"
+    txt.write_text("5.0 1\n9.5\n# comment\n")
+    jsn = tmp_path / "t.json"
+    jsn.write_text("[[5.0, 1], 9.5]")
+    assert load_trace(txt) == load_trace(jsn) == ((5.0, 1), (9.5, None))
+
+
+def test_empty_trace_matches_no_failure_run(tmp_path, higgs):
+    """An empty trace consumes no randomness: the run is byte-identical to
+    the same spot fleet with no failure process at all."""
+    tr, va = higgs
+    model = _lr(tr)
+    empty = tmp_path / "empty.txt"
+    empty.write_text("# recorded nothing\n")
+    base = IaaSRuntime(workers=4, failure=FailureSpec(spot=True, rate=0.0)
+                       ).train(model, _ga(), tr, va, max_epochs=2)
+    traced = IaaSRuntime(workers=4,
+                         failure=FailureSpec(spot=True, trace=str(empty))
+                         ).train(model, _ga(), tr, va, max_epochs=2)
+    assert traced.preemptions == 0
+    assert traced.sim_time == base.sim_time
+    assert traced.cost == base.cost
+    assert traced.history == base.history
+
+
+def test_trace_spot_run_meters_checkpoints(higgs):
+    """A recorded-trace spot run with a checkpoint cadence: preemptions
+    fire, the ckpt meters land in RunResult, and restarts pay the derived
+    (startup + metered restore) price."""
+    tr, va = higgs
+    model = _lr(tr)
+    kw = dict(max_epochs=3)
+    fail = FailureSpec(spot=True, trace="spot_burst")
+    run = IaaSRuntime(workers=8, failure=fail, ckpt="s3:every=2").train(
+        model, _ga(), tr, va, **kw)
+    assert run.preemptions > 0
+    assert run.ckpt_bytes > 0 and run.ckpt_time > 0 and run.ckpt_cost > 0
+    assert run.breakdown.get("checkpoint", 0.0) > 0.0
+    assert run.breakdown.get("restart", 0.0) > 0.0
+    d = run.to_dict()
+    assert d["ckpt_bytes"] == run.ckpt_bytes
+    # determinism: the replay is RNG-free, so a rerun is byte-identical
+    rerun = IaaSRuntime(workers=8, failure=fail, ckpt="s3:every=2").train(
+        model, _ga(), tr, va, **kw)
+    assert rerun.sim_time == run.sim_time and rerun.cost == run.cost
+    # numerics are failure-transparent (resume restores exact state)
+    clean = IaaSRuntime(workers=8).train(model, _ga(), tr, va, **kw)
+    np.testing.assert_allclose([l for _, l in clean.history],
+                               [l for _, l in run.history], rtol=1e-6)
+
+
+# ------------------------------------------------------- derived restart ----
+
+def test_restart_time_is_derived_from_model_bytes():
+    """restart_time(model_bytes) = platform cold start + the metered
+    restore of the model's ACTUAL byte size through the platform's
+    checkpoint store -- on all three platforms, matching the analytical
+    planner's closed form."""
+    from repro.core.analytical import restart_seconds
+    mb = 100_000_000
+    for p, rt in (("faas", FaaSRuntime(workers=4)),
+                  ("iaas", IaaSRuntime(workers=4)),
+                  ("pod", PodPlatform(pods=2, chips_per_pod=2))):
+        bare = rt.restart_time()
+        loaded = rt.restart_time(mb)
+        ch = rt.ckpt_channel_spec()
+        assert loaded == bare + rt.ckpt.restore_seconds(mb, ch, rt.workers)
+        assert loaded > bare > 0
+        assert restart_seconds(p) == bare
+    # an explicit transport redirects the restore term
+    slow = IaaSRuntime(workers=4, ckpt="s3")
+    fast = IaaSRuntime(workers=4, ckpt="local")
+    assert slow.restart_time(mb) > fast.restart_time(mb)
+    assert fast.restart_time() == slow.restart_time()   # bare term identical
+    from repro.core.analytical import restart_seconds as rs
+    assert rs("iaas", mb, ckpt="local") == fast.restart_time(mb)
+
+
+# -------------------------------------------------- elastic join restore ----
+
+def test_elastic_join_pays_metered_restore(higgs):
+    """Scale-up joiners pull the published model through the checkpoint
+    transport: one fleet save + one restore per joiner, all metered."""
+    tr, va = higgs
+    model = _lr(tr)
+    run = IaaSRuntime(workers=2, scaling="schedule:2@0,6@2").train(
+        model, _ga(), tr, va, max_epochs=4)
+    assert run.workers == 6
+    import jax
+    from repro.core.mlmodels import model_bytes
+    mb = model_bytes(model.init(jax.random.key(0)))
+    added = 4
+    sizes = shard_sizes(mb, 1)
+    assert run.ckpt_bytes == (1 + added) * sum(sizes)   # 1 save + 4 pulls
+    ch = IaaSRuntime(workers=2).ckpt_channel_spec()
+    expect = (1 + added) * sum(xfer_seconds(ch, s) for s in sizes)
+    assert run.ckpt_time == expect
+    assert run.breakdown.get("resize", 0.0) >= expect   # lands on resize
+
+
+# ---------------------------------------------------- spec-level wiring ----
+
+def test_experiment_spec_ckpt_and_trace_fields():
+    """ExperimentSpec grows ckpt= and failure.trace= (h5): grammar strings
+    coerce, defaults elide from the hash, bad traces fail eagerly."""
+    from repro.experiments.spec import HASH_SCHEMA, ExperimentSpec
+    assert HASH_SCHEMA == "h5"
+    base = ExperimentSpec(platform="iaas", model="lr", dataset="higgs",
+                          rows=5_000, algorithm="ga_sgd", max_epochs=1)
+    spec = base.with_(ckpt="s3:every=2:sharded",
+                      failure=FailureSpec(spot=True, trace="spot_burst"))
+    assert spec.ckpt == CheckpointSpec("s3", 2, True)
+    assert spec.spec_hash() != base.spec_hash()
+    rt = spec.build_runtime()
+    assert rt.ckpt == spec.ckpt and rt.failure.trace == "spot_burst"
+    with pytest.raises(FileNotFoundError):
+        base.with_(failure=FailureSpec(trace="no_such_trace_anywhere"))
+    with pytest.raises(ChannelItemTooLarge):
+        ExperimentSpec(platform="iaas", model="mobilenet", dataset="cifar10",
+                       rows=2_000, algorithm="ga_sgd", max_epochs=1,
+                       ckpt="dynamodb:every=1")

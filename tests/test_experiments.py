@@ -189,7 +189,7 @@ def test_sweep_duplicate_points_run_once(tmp_path):
 
 def test_presets_build_valid_specs():
     assert set(PRESETS) == {"fig10_breakdown", "fig11_end2end", "fig8_sync",
-                            "spot_vs_ondemand", "hetero_fleet",
+                            "spot_vs_ondemand", "spot_trace", "hetero_fleet",
                             "faas_vs_pod", "pod_local_sgd", "comm_axis",
                             "elastic_axis"}
     for name, preset in PRESETS.items():
