@@ -1,0 +1,94 @@
+"""Trace subsystem (DESIGN.md §18): recorder overhead and conservation.
+
+Replays the pinned PR-9 parity cases (``tests/fixtures/trace_parity_pr9``)
+twice each -- recorder off, recorder on -- and asserts the acceptance
+story: disabled tracing is byte-identical to the pinned pre-trace metered
+outputs (overhead == 0 in the simulated domain), enabled tracing perturbs
+nothing while the three conservation gates (clock tiling, $ ledger, byte
+census) all hold, and the Chrome exporter round-trips every span.  Rows
+record span/mark volume, event rate, and the wall-clock cost of carrying
+the recorder.  Writes ``BENCH_trace.json`` at the repo root
+(schema ``repro.bench.trace/v1``).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ROOT, emit, emit_root, timeit
+from repro.core.trace import assert_invariants, derive_breakdown, export_chrome
+from repro.experiments.spec import ExperimentSpec
+
+FIXTURE = ROOT / "tests" / "fixtures" / "trace_parity_pr9.json"
+
+#: metered RunResult fields pinned by the fixture (exact == comparison)
+PINNED = ("sim_time", "cost", "comm_bytes", "comm_cost",
+          "ckpt_bytes", "ckpt_time", "ckpt_cost")
+
+
+def _run(spec: ExperimentSpec, trace: bool):
+    model, algo, tr, va = spec.build_workload()
+    return spec.build_runtime().train(model, algo, tr, va,
+                                      max_epochs=spec.max_epochs,
+                                      trace=trace)
+
+
+def run(quick: bool = True):
+    rows = []
+    cases = json.loads(FIXTURE.read_text())["cases"]
+    reps = 3 if quick else 7
+
+    for case in cases:
+        spec = ExperimentSpec.from_dict(case["spec"])
+        exp = case["result"]
+
+        # -- disabled: byte-identical to the pinned pre-trace outputs ------
+        off = _run(spec, trace=False)
+        assert off.trace is None
+        for f in PINNED:
+            assert getattr(off, f) == exp[f], f
+        assert off.breakdown == exp["breakdown"]
+
+        # -- enabled: same meters + the three conservation gates -----------
+        on = _run(spec, trace=True)
+        for f in PINNED:
+            assert getattr(on, f) == exp[f], f
+        inv = assert_invariants(on)
+        assert inv["ok"]
+        assert on.trace.meters == on.breakdown
+        events = export_chrome(on.trace)["traceEvents"]
+        assert sum(e["ph"] == "X" for e in events) == len(on.trace.spans)
+        bd = derive_breakdown(on.trace)
+
+        # -- wall-clock cost of carrying the recorder ----------------------
+        t_off = timeit(_run, spec, False, reps=reps)
+        t_on = timeit(_run, spec, True, reps=reps)
+        n_ev = on.trace.n_events
+        rows.append({
+            "name": f"trace[{spec.name}]",
+            "us_per_call": t_on * 1e6,
+            "kind": "parity", "platform": spec.platform,
+            "spans": len(on.trace.spans), "marks": len(on.trace.marks),
+            "events": n_ev,
+            "wall_off_s": t_off, "wall_on_s": t_on,
+            "overhead_x": t_on / t_off,
+            "us_per_event": t_on * 1e6 / n_ev,
+            "sim_time_s": on.sim_time,
+            "traced_wall_s": bd["wall"],
+            "metered_overhead": 0.0,    # asserted byte-identical above
+            "derived": (f"ev={n_ev};"
+                        f"over={t_on / t_off:.2f}x;"
+                        f"sim={on.sim_time:.2f}s"),
+        })
+
+    emit_root("trace", rows, fixture=str(FIXTURE.relative_to(ROOT)),
+              pinned_fields=list(PINNED), reps=reps)
+    return emit(rows, "bench_trace")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    run(quick=ap.parse_args().quick)

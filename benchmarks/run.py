@@ -24,6 +24,7 @@ MODULES = [
     "bench_elastic",       # §13 elastic fleets: w(t) per policy + planner
     "bench_serving",       # §14 serving frontier: cost vs p99 per arrival
     "bench_ckpt",          # §17 checkpoint cadence grid + derived restart
+    "bench_trace",         # §18 recorder overhead + conservation gates
     "bench_roofline",      # §Roofline (dry-run derived)
     "bench_crosspod",      # §Perf paper-technique headline
     "bench_kernels",       # kernel microbench

@@ -140,6 +140,9 @@ def cmd_list(args) -> int:
     print(f"\nlint checkers (repro lint --select ..., DESIGN.md §15):")
     for line in list_checkers():
         print(f"  {line}")
+    from repro.core.trace import list_exporters
+    print(f"\ntrace exporters (repro trace --export ..., DESIGN.md §18):")
+    print(f"  {', '.join(list_exporters())}")
     return 0
 
 
@@ -270,6 +273,47 @@ def cmd_serve(args) -> int:
     return 0
 
 
+def cmd_trace(args) -> int:
+    """Span-level observability (DESIGN.md §18): run a preset with the
+    recorder on, print the Figure-10 phase breakdown and the three
+    conservation gates, optionally export a Chrome/Perfetto trace."""
+    from repro.core.trace import (
+        check_invariants, make_exporter, render_breakdown, render_invariants)
+    exporter = make_exporter(args.export) if args.export else None
+    specs = _load_specs(args.target, quick=not args.full)
+    overrides = _parse_set(args.set or [])
+    if overrides:
+        specs = [s.with_(**overrides) for s in specs]
+    rc = 0
+    for k, spec in enumerate(specs):
+        spec = spec.with_(trace=True)
+        model, algo, tr, va = spec.build_workload()
+        res = spec.build_runtime().train(
+            model, algo, tr, va, target_loss=spec.target_loss,
+            max_epochs=spec.max_epochs, eval_every=spec.eval_every,
+            data_local=spec.data_local, trace=True)
+        if res.error:
+            print(f"# {spec.name or args.target}: ERROR {res.error}",
+                  file=sys.stderr)
+            rc = 1
+            continue
+        print(render_breakdown(res.trace, title=spec.name or args.target))
+        inv = check_invariants(res)
+        print(render_invariants(inv))
+        print()
+        if not inv["ok"]:
+            rc = 1
+        if exporter is not None:
+            path = Path(args.out or f"{spec.name or 'trace'}"
+                                    f".{args.export}.json")
+            if len(specs) > 1 and args.out:
+                path = path.with_name(f"{path.stem}.{k}{path.suffix}")
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(exporter(res.trace)))
+            print(f"# {args.export} trace -> {path}", file=sys.stderr)
+    return rc
+
+
 def cmd_run(args) -> int:
     specs = _load_specs(args.target, quick=not args.full)
     overrides = _parse_set(args.set or [])
@@ -385,6 +429,26 @@ def main(argv: list[str] | None = None) -> int:
                              "to read the benchmarked roofline fraction "
                              "from BENCH_kernels.json")
     plan_p.set_defaults(fn=cmd_plan)
+
+    trace_p = sub.add_parser(
+        "trace",
+        help="run a preset with the span recorder on (DESIGN.md §18): "
+             "Figure-10 phase breakdown, conservation gates, Chrome export")
+    trace_p.add_argument("target",
+                         help="preset name (see `list`) or spec JSON file")
+    tsize = trace_p.add_mutually_exclusive_group()
+    tsize.add_argument("--quick", action="store_true",
+                       help="small CI-friendly sizes (the default)")
+    tsize.add_argument("--full", action="store_true",
+                       help="paper-scale sizes")
+    trace_p.add_argument("--set", action="append", metavar="FIELD=VALUE",
+                         help="override a spec field on every trial")
+    trace_p.add_argument("--export", default=None,
+                         choices=("chrome", "perfetto"),
+                         help="also write a trace-event JSON file")
+    trace_p.add_argument("--out", default=None,
+                         help="export file name (default <name>.chrome.json)")
+    trace_p.set_defaults(fn=cmd_trace)
 
     serve_p = sub.add_parser(
         "serve",

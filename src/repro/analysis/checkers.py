@@ -268,6 +268,8 @@ class RegistryChecker(Checker):
                     {"make_failure"}),
         "checkers": ("src/repro/analysis/checkers.py", "CHECKERS",
                      {"make_checker", "select_checkers"}),
+        "exporter": ("src/repro/core/trace/export.py", "EXPORTERS",
+                     {"make_exporter", "list_exporters"}),
     }
 
     @staticmethod
@@ -299,6 +301,9 @@ class RegistryChecker(Checker):
             return sorted(FAILURES)
         if registry == "checkers":
             return sorted(CHECKERS)
+        if registry == "exporter":
+            from repro.core.trace import list_exporters
+            return list_exporters()
         raise KeyError(registry)
 
     @staticmethod
@@ -524,6 +529,82 @@ class MeteringChecker(Checker):
                     f"run is billed (read RunResult.cost instead)")
 
 
+# ------------------------------------------------------------------ trace ---
+
+#: the modules the TraceRecorder is wired through (DESIGN.md §18): every
+#: metered mutation in these files has a span/mark/byte-event emission site
+_TRACE_HOME = ("src/repro/core/engine.py", "src/repro/core/sync.py",
+               "src/repro/core/comm/stack.py", "src/repro/core/ckpt/store.py",
+               "src/repro/core/runtimes.py", "src/repro/serving/sim.py")
+#: attribute writes that move metered state (clocks, meters, money, bytes)
+_TRACED_ATTRS = {"clock", "breakdown", "comm_bytes", "ckpt_bytes",
+                 "wire_bytes", "op_usd", "time_s", "cost", "retired_cost",
+                 "sim_time"}
+
+
+class TraceChecker(Checker):
+    """Metered mutations in the recorder-instrumented modules stay traced.
+
+    The conservation gates (clock tiling, $ attribution, byte accounting --
+    :mod:`repro.core.trace.invariants`) only hold if every NEW metered
+    mutation emits a matching span/mark/byte event.  This checker makes the
+    contract structural: inside the trace home modules, any function that
+    writes a metered attribute must also reference the recorder (``rec`` /
+    ``ctx.rec`` / ``self.rec``) -- or carry an explicit
+    ``# lint: ignore[T001]`` stating why no event is owed (e.g. a numeric
+    no-op re-assignment the invariants already cover).
+    """
+
+    name = "trace"
+    description = ("metered mutations in the trace home modules carry a "
+                   "span emission (or an explicit ignore)")
+    codes = {"T001": "metered mutation without a recorder emission path"}
+    scope = _TRACE_HOME
+
+    @staticmethod
+    def _references_rec(fn: ast.AST) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and node.id == "rec":
+                return True
+            if isinstance(node, ast.Attribute) and node.attr == "rec":
+                return True
+        return False
+
+    @staticmethod
+    def _metered_writes(fn: ast.AST) -> Iterator[Tuple[int, str]]:
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.Assign, ast.AugAssign)):
+                continue
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                for sub in ast.walk(t):
+                    if (isinstance(sub, ast.Attribute)
+                            and sub.attr in _TRACED_ATTRS):
+                        yield node.lineno, sub.attr
+
+    def run(self, cache: ModuleCache) -> Iterator[Finding]:
+        for mod in cache.modules(self.scope):
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                # nested defs are walked as part of the enclosing function:
+                # a closure that mutates meters may lean on the enclosing
+                # scope's recorder reference (the serving loops do)
+                writes = list(self._metered_writes(node))
+                if writes and not self._references_rec(node):
+                    line, attr = writes[0]
+                    yield self.finding(
+                        mod, line, "T001",
+                        f"function {node.name}() writes metered attribute "
+                        f"'.{attr}' but never references the trace "
+                        f"recorder; emit a span/mark/byte event next to the "
+                        f"mutation (DESIGN.md §18) or annotate the line "
+                        f"with `# lint: ignore[T001]` explaining why no "
+                        f"event is owed")
+
+
 # -------------------------------------------------------------- constants ---
 
 #: modules that own measured constants: everything numeric defined at
@@ -624,6 +705,7 @@ CHECKERS = {
     "registry": RegistryChecker,
     "units": UnitsChecker,
     "metering": MeteringChecker,
+    "trace": TraceChecker,
     "constants": ConstantsChecker,
 }
 

@@ -40,6 +40,9 @@ class Checkpointer:
     gets: int = 0
     last_ckpt_t: float = 0.0  # sim time of the last fleet checkpoint
     _last_save_rnd: int = 0
+    rec: Any = None           # TraceRecorder (DESIGN.md §18): every shard
+                              # put/get lands one "ckpt" byte event, in the
+                              # exact order wire_bytes accumulates
 
     @property
     def every(self) -> int:
@@ -65,6 +68,9 @@ class Checkpointer:
             self.wire_bytes += blob.nbytes
             self.op_usd += self._op_price("put")
             self.puts += 1
+            if self.rec is not None:
+                self.rec.bytes_event("ckpt", blob.nbytes,
+                                     meta={"op": "put", "key": k})
         self.time_s += dt
         return dt
 
@@ -77,6 +83,9 @@ class Checkpointer:
             self.wire_bytes += blob.nbytes
             self.op_usd += self._op_price("get")
             self.gets += 1
+            if self.rec is not None:
+                self.rec.bytes_event("ckpt", blob.nbytes,
+                                     meta={"op": "get", "key": k})
         self.time_s += dt
         return dt
 

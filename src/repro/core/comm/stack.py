@@ -69,11 +69,34 @@ class CommStack:
         times = np.asarray(times, float)
         ctx.meter_add("comm", float(np.mean(times)))
         ctx.meter_bytes(float(payloads[0].nbytes))
+        rec = ctx.rec
+        if rec is not None and not codec.is_identity:
+            rec.mark("codec", float(np.max(ctx.clock)), codec=self.codec.name,
+                     raw_bytes=int(updates[0].nbytes),
+                     wire_bytes=int(payloads[0].nbytes))
         if self.collective.barrier:
             base = float(np.max(ctx.clock))
-            ctx.clock[:] = base + times
+            if rec is None:
+                ctx.clock[:] = base + times
+            else:
+                # barrier semantics: wait to the fleet max (idle), then the
+                # collective's per-worker comm seconds
+                before = ctx.clock.copy()
+                ctx.clock[:] = base + times
+                meta = {"stack": self.name}
+                for i in range(len(ctx.worker_ids)):  # times may be 0-d
+                    wid = int(ctx.worker_ids[i])
+                    rec.span(wid, "barrier", "idle", float(before[i]), base)
+                    rec.span(wid, "comm.reduce", "comm", base,
+                             float(ctx.clock[i]), meta=meta)
         else:
-            ctx.clock += times
+            if rec is None:
+                ctx.clock += times
+            else:
+                before = ctx.clock.copy()
+                ctx.clock += times
+                rec.tile(ctx.worker_ids, before, ctx.clock, "comm.reduce",
+                         "comm", meta={"stack": self.name})
         return merged if merged_lossy is None else merged_lossy
 
     def kvstore(self):

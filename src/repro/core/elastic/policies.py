@@ -247,11 +247,19 @@ class ElasticController:
         if fresh_eval and self._prev_loss is not None:
             loss_delta = (self._prev_loss - loss) / max(
                 res.rounds - self._rounds_at_eval, 1)
+        # one source of truth (DESIGN.md §18): when tracing, both the comm
+        # seconds and the cost snapshot come from the recorder -- its meter
+        # mirror and $ ledger are bitwise-equal to the engine values by
+        # construction, so policy decisions are identical either way
+        from repro.core.trace import comm_seconds
+        cost_now = float(ctx.platform.finalize_cost(ctx))
+        if ctx.rec is not None:
+            cost_now = ctx.rec.cost_total()
         tel = Telemetry(
             round=int(rnd), workers=ctx.w, loss=loss, loss_delta=loss_delta,
             round_time=round_time,
-            comm_share=res.breakdown.get("comm", 0.0) / max(now, 1e-12),
-            cost_so_far=float(ctx.platform.finalize_cost(ctx)),
+            comm_share=comm_seconds(ctx) / max(now, 1e-12),
+            cost_so_far=cost_now,
             sim_time=now, min_workers=self.min_w, max_workers=self.max_w)
         self.telemetry_log.append(tel)
         if fresh_eval:

@@ -40,6 +40,7 @@ from repro.core.comm import (  # noqa: F401  (adapters re-exported)
     StorageChannel, VMNetwork,
 )
 from repro.core.mlmodels import model_bytes
+from repro.core.trace import TraceRecorder
 from repro.data.synthetic import partition
 
 
@@ -75,6 +76,9 @@ class RunResult:
                                   # per membership change, so benchmarks can
                                   # plot w(t); [] for fixed fleets; a final
                                   # w=0 entry means the policy stopped the run
+    trace: Any = field(default=None, repr=False)
+                                  # TraceRecorder when run with trace=True
+                                  # (DESIGN.md §18); None otherwise
 
     @property
     def final_loss(self) -> float:
@@ -87,25 +91,58 @@ class RunResult:
         return self.breakdown.get("comm", 0.0)
 
     def to_dict(self):
-        return {"system": self.system, "algorithm": self.algorithm,
-                "workers": self.workers, "rounds": self.rounds,
-                "sim_time_s": round(self.sim_time, 2),
-                "cost_usd": round(self.cost, 4),
-                "final_loss": self.final_loss,
-                "converged": self.converged,
-                "preemptions": self.preemptions,
-                "max_staleness": self.max_staleness,
-                "comm_bytes": self.comm_bytes,
-                "comm_time_s": round(self.comm_time, 2),
-                "comm_cost_usd": round(self.comm_cost, 6),
-                "ckpt_bytes": self.ckpt_bytes,
-                "ckpt_time_s": round(self.ckpt_time, 2),
-                "ckpt_cost_usd": round(self.ckpt_cost, 6),
-                "scaling_timeline": [[int(r), int(w), round(s, 3),
-                                      round(c, 6)]
-                                     for r, w, s, c in self.scaling_timeline],
-                "breakdown": {k: round(v, 2) for k, v in self.breakdown.items()},
-                "error": self.error}
+        """Full-precision record payload.  Rounding is presentation-only
+        (see :meth:`summary`): the record keeps every metered float exact
+        so span-derived breakdown fractions reconcile bitwise with
+        ``sim_time`` and ``cost``."""
+        d = {"system": self.system, "algorithm": self.algorithm,
+             "workers": self.workers, "rounds": self.rounds,
+             "sim_time_s": self.sim_time,
+             "cost_usd": self.cost,
+             "final_loss": self.final_loss,
+             "converged": self.converged,
+             "preemptions": self.preemptions,
+             "max_staleness": self.max_staleness,
+             "comm_bytes": self.comm_bytes,
+             "comm_time_s": self.comm_time,
+             "comm_cost_usd": self.comm_cost,
+             "ckpt_bytes": self.ckpt_bytes,
+             "ckpt_time_s": self.ckpt_time,
+             "ckpt_cost_usd": self.ckpt_cost,
+             "scaling_timeline": [[int(r), int(w), float(s), float(c)]
+                                  for r, w, s, c in self.scaling_timeline],
+             "breakdown": dict(self.breakdown),
+             "error": self.error}
+        if self.trace is not None and not self.error:
+            from repro.core.trace import check_invariants, derive_breakdown
+            inv = check_invariants(self)
+            bd = derive_breakdown(self.trace)
+            d["trace"] = {
+                "spans": len(self.trace.spans),
+                "marks": len(self.trace.marks),
+                "breakdown": bd["phases"],
+                "usd": bd["usd"],
+                "invariants": {"clock": inv["clock"]["ok"],
+                               "cost": inv["cost"]["ok"],
+                               "bytes": inv["bytes"]["ok"]},
+            }
+        return d
+
+    def summary(self):
+        """Presentation view of :meth:`to_dict` -- the legacy 2-decimal
+        rounding, applied at the edge instead of inside the record."""
+        d = self.to_dict()
+        d.update(
+            sim_time_s=round(self.sim_time, 2),
+            cost_usd=round(self.cost, 4),
+            comm_time_s=round(self.comm_time, 2),
+            comm_cost_usd=round(self.comm_cost, 6),
+            ckpt_time_s=round(self.ckpt_time, 2),
+            ckpt_cost_usd=round(self.ckpt_cost, 6),
+            scaling_timeline=[[int(r), int(w), round(s, 3), round(c, 6)]
+                              for r, w, s, c in self.scaling_timeline],
+            breakdown={k: round(v, 2) for k, v in self.breakdown.items()})
+        return d
 
 
 # ------------------------------------------------------------ processes -----
@@ -282,6 +319,9 @@ class SimContext:
                                     # vector (EM ships sums+counts, more
                                     # than the params) -- what resize
                                     # feasibility checks item limits with
+    rec: Any = None                 # TraceRecorder (DESIGN.md §18), or None;
+                                    # every emission site is guarded so the
+                                    # disabled path is byte-identical
 
     @property
     def w(self) -> int:
@@ -289,18 +329,41 @@ class SimContext:
 
     def meter_add(self, key: str, dt: float):
         self.res.breakdown[key] = self.res.breakdown.get(key, 0.0) + dt
+        if self.rec is not None:
+            # mirrored accumulation: same value, same order, so
+            # rec.meters stays bitwise-equal to res.breakdown
+            self.rec.meter(key, dt)
 
     def meter_bytes(self, n: float):
         """Count per-worker update bytes crossing the metered substrate
         (the storage channel, the PS link, VM NICs, or the cross-pod DCN
         -- never the free intra-pod ICI)."""
         self.res.comm_bytes += n
+        if self.rec is not None:
+            self.rec.bytes_event("comm", n)
 
     # ---- compute ----
     def tick_compute(self):
         """Advance every worker by one local round of compute."""
         c = self.c_round * self.speeds
-        self.clock += c
+        if self.rec is None:
+            self.clock += c
+        else:
+            before = self.clock.copy()
+            self.clock += c
+            for i in range(self.w):
+                wid = int(self.worker_ids[i])
+                t0, t1 = float(before[i]), float(self.clock[i])
+                if self.speeds[i] > 1.0:
+                    # a straggler's extra seconds beyond the nominal round
+                    # are a stall, not useful compute (paper §V straggler
+                    # mitigation); the split point is interior, so tiling
+                    # stays endpoint-exact
+                    mid = t0 + float(self.c_round[i])
+                    self.rec.span(wid, "compute", "compute", t0, mid)
+                    self.rec.span(wid, "straggler", "stall", mid, t1)
+                else:
+                    self.rec.span(wid, "compute", "compute", t0, t1)
         self.meter_add("compute", float(np.mean(c)))
 
     def step_compute(self, i: int) -> float:
@@ -323,18 +386,41 @@ class SimContext:
         moment of a preemption); planned lifetime rotations still save
         on their way out in both modes."""
         ck = self.ckpt
+        rec = self.rec
+        if rec is not None:
+            wid = int(self.worker_ids[i])
+            # work since the last sync point dies with the instance: the
+            # interval from the worker's clock to the (possibly later) kill
+            # time is lost progress, traced as a stall
+            rec.span(wid, "preempt.lost", "stall", float(self.clock[i]),
+                     at_time, meta={"cause": meter_key})
         if ck is not None and ck.every > 0 and meter_key == "restart":
             restart = self.platform.restart_time()
             dt_get = ck.restore("ckpt/fleet")
             rework = max(at_time - ck.last_ckpt_t, 0.0)
             self.clock[i] = at_time + restart + dt_get + rework
             self.meter_add(meter_key, restart + dt_get + rework)
+            if rec is not None:
+                # split points are the engine's own left-associative
+                # partial sums, so the sub-spans tile bitwise
+                s1 = at_time + restart
+                s2 = s1 + dt_get
+                rec.span(wid, "coldstart", "startup", at_time, s1)
+                rec.span(wid, "ckpt.restore", "ckpt", s1, s2)
+                rec.span(wid, "rework", "stall", s2, float(self.clock[i]))
         else:
             dt_put = ck.save(f"ckpt/{i}")
             restart = self.platform.restart_time()
             dt_get = ck.restore(f"ckpt/{i}")
             self.clock[i] = at_time + dt_put + restart + dt_get
             self.meter_add(meter_key, dt_put + restart + dt_get)
+            if rec is not None:
+                s1 = at_time + dt_put
+                s2 = s1 + restart
+                rec.span(wid, "ckpt.save", "ckpt", at_time, s1)
+                rec.span(wid, "coldstart", "startup", s1, s2)
+                rec.span(wid, "ckpt.restore", "ckpt", s2,
+                         float(self.clock[i]))
         self.invoked_at[i] = self.clock[i]
         self.invocations += 1
 
@@ -347,7 +433,13 @@ class SimContext:
         if ck is None or not ck.due(rnd):
             return 0.0
         dt = ck.save("ckpt/fleet")
-        self.clock += dt
+        if self.rec is None:
+            self.clock += dt
+        else:
+            before = self.clock.copy()
+            self.clock += dt
+            self.rec.tile(self.worker_ids, before, self.clock,
+                          "ckpt.save", "ckpt")
         self.meter_add("checkpoint", dt)
         ck.mark(rnd, float(np.max(self.clock)))
         return dt
@@ -363,6 +455,8 @@ class SimContext:
         t_pre = self.failure.next_preemption(wid, float(self.clock[i]),
                                              float(self.clock[i]) + est)
         while t_pre is not None:
+            if self.rec is not None:
+                self.rec.mark("preempt", t_pre, wid)
             self._rotate(i, max(t_pre, float(self.clock[i])), "restart")
             self.res.preemptions += 1
             t_pre = self.failure.next_preemption(wid, float(self.clock[i]),
@@ -423,6 +517,10 @@ class SimContext:
         if new_w < old_w:
             gone = np.arange(new_w, old_w)
             self.retired_cost += float(self.platform.retire_cost(self, gone))
+            if self.rec is not None:
+                for k in gone:
+                    self.rec.retire_worker(int(self.worker_ids[k]),
+                                           float(self.clock[k]))
             for name in ("clock", "invoked_at", "joined_at", "speeds",
                          "worker_ids"):
                 setattr(self, name, getattr(self, name)[:new_w])
@@ -442,6 +540,12 @@ class SimContext:
                 [self.speeds, self.platform.joiner_speeds(ids)])
             self.invocations += added
             self.meter_add("resize", dt)
+            if self.rec is not None:
+                for k in range(old_w, new_w):
+                    wid = int(self.worker_ids[k])
+                    self.rec.birth(wid, t_now)
+                    self.rec.span(wid, "provision", "startup", t_now,
+                                  float(self.clock[k]))
             if self.ckpt is not None:
                 # joiners are not born with the model: the merged params are
                 # published once through the checkpoint transport and every
@@ -451,7 +555,18 @@ class SimContext:
                 dt_pull = 0.0
                 for _ in range(added):
                     dt_pull = self.ckpt.restore("ckpt/fleet")
-                self.clock[old_w:] += dt_save + dt_pull
+                if self.rec is None:
+                    self.clock[old_w:] += dt_save + dt_pull
+                else:
+                    # the engine adds the SCALAR SUM dt_save + dt_pull, so
+                    # decomposed save/pull sub-spans would not tile bitwise:
+                    # trace one combined span with the split in its meta
+                    before = self.clock[old_w:].copy()
+                    self.clock[old_w:] += dt_save + dt_pull
+                    self.rec.tile(self.worker_ids[old_w:], before,
+                                  self.clock[old_w:], "ckpt.join", "ckpt",
+                                  meta={"save_s": dt_save,
+                                        "pull_s": dt_pull})
                 self.invoked_at[old_w:] += dt_save + dt_pull
                 self.meter_add("resize", dt_save + dt_pull)
                 self.ckpt.mark(rnd, float(self.clock[old_w]))
@@ -468,6 +583,9 @@ class SimContext:
         self.res.workers = new_w
         self.res.scaling_timeline.append(
             (int(rnd), int(new_w), float(dt), float(usd)))
+        if self.rec is not None:
+            self.rec.mark("resize", t_now, old_w=old_w, new_w=new_w,
+                          stall_s=dt, usd=usd)
 
     # ---- evaluation ----
     def record_eval(self, rnd: int, total_rounds: int, params) -> bool:
@@ -495,13 +613,15 @@ class SimContext:
 def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
              target_loss: float | None = None, max_epochs: int = 10,
              eval_every: int = 1, data_local: bool = False,
-             elastic=None) -> RunResult:
+             elastic=None, trace: bool = False) -> RunResult:
     """Run one training scenario: ``platform`` (any
     :class:`~repro.core.platform.Platform` implementation) x ``sync``
     (protocol object) x ``algo`` on real data/numerics.  ``elastic`` is an
     optional :class:`repro.core.elastic.ElasticController` consulted at
     round boundaries (DESIGN.md §13); ``None`` keeps the fixed-fleet path
-    byte-identical to the pre-elastic engine."""
+    byte-identical to the pre-elastic engine.  ``trace=True`` attaches a
+    :class:`~repro.core.trace.TraceRecorder` (DESIGN.md §18) recording
+    every event as a span, without perturbing any metered value."""
     import jax
 
     if elastic is not None:
@@ -512,6 +632,8 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
             platform.resize_fleet(w0)
     w = platform.workers
     res = RunResult(platform.system_name(), algo.name, w)
+    rec = TraceRecorder("train") if trace else None
+    res.trace = rec
     if elastic is not None:
         res.scaling_timeline.append((0, w, 0.0, 0.0))
     parts = partition(ds_train, w)
@@ -527,13 +649,17 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
     ckpt_store = platform.make_ckpt_store(comm)
     ckpt_spec = getattr(platform, "ckpt", None) or CheckpointSpec()
     ckpt = Checkpointer(spec=ckpt_spec, store=ckpt_store, mbytes=int(mbytes),
-                        shards=ckpt_spec.shards(w))
+                        shards=ckpt_spec.shards(w), rec=rec)
     speeds = platform.worker_speeds()
     t_start = platform.startup_time(comm)
     part_bytes = max(p.nbytes for p in parts)
     t_load = platform.load_time(part_bytes, data_local)
     res.breakdown = dict(platform.init_breakdown())
     res.breakdown.update(startup=t_start, load=t_load)
+    if rec is not None:
+        # seed the meter mirror with the prologue values so the two dicts
+        # stay bitwise-equal under the same subsequent accumulations
+        rec.meters.update(res.breakdown)
 
     flops = platform.worker_flops_array(model)
     rows = algo.rows_per_round(parts[0])
@@ -552,7 +678,15 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
         target_loss=target_loss, max_epochs=max_epochs, eval_every=eval_every,
         invocations=w,
         ds_train=ds_train, elastic=elastic,
-        worker_ids=np.arange(w), joined_at=np.zeros(w), next_worker_id=w)
+        worker_ids=np.arange(w), joined_at=np.zeros(w), next_worker_id=w,
+        rec=rec)
+    if rec is not None:
+        # every initial worker is born at t=0 and spends the prologue in
+        # startup then data loading (clock starts at t_start + t_load)
+        for i in range(w):
+            rec.birth(i, 0.0)
+            rec.span(i, "startup", "startup", 0.0, t_start)
+            rec.span(i, "load", "data", t_start, float(ctx.clock[i]))
 
     try:
         if ckpt.every > 0:
@@ -560,7 +694,13 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
             # fleet first, so the earliest involuntary kill always has a
             # checkpoint to restore (rework is bounded by the cadence)
             dt0 = ctx.ckpt.save("ckpt/fleet")
-            ctx.clock += dt0
+            if rec is None:
+                ctx.clock += dt0
+            else:
+                before = ctx.clock.copy()
+                ctx.clock += dt0
+                rec.tile(ctx.worker_ids, before, ctx.clock,
+                         "ckpt.save", "ckpt")
             ctx.meter_add("checkpoint", dt0)
             ctx.ckpt.mark(0, float(np.max(ctx.clock)))
         sync.run(ctx)
@@ -575,4 +715,6 @@ def simulate(platform: "Platform", sync, model, algo, ds_train, ds_val, *,
     res.sim_time = float(np.max(ctx.clock))
     res.comm_cost = ctx.comm.service_cost(res.sim_time)
     res.cost = platform.finalize_cost(ctx)
+    if rec is not None:
+        rec.finalize_clock(ctx.worker_ids, ctx.clock)
     return res

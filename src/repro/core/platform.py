@@ -430,7 +430,8 @@ class BasePlatform:
     # ---- user entry point ---------------------------------------------------
     def train(self, model, algo, ds_train, ds_val, *,
               target_loss: float | None = None, max_epochs: int = 10,
-              eval_every: int = 1, data_local: bool = False) -> RunResult:
+              eval_every: int = 1, data_local: bool = False,
+              trace: bool = False) -> RunResult:
         from repro.core.elastic import build_controller
         from repro.core.sync import make_sync
         proto = make_sync(self.sync)
@@ -453,7 +454,8 @@ class BasePlatform:
             return simulate(self, proto, model, algo,
                             ds_train, ds_val, target_loss=target_loss,
                             max_epochs=max_epochs, eval_every=eval_every,
-                            data_local=data_local, elastic=elastic)
+                            data_local=data_local, elastic=elastic,
+                            trace=trace)
         finally:
             self.fleet = fleet0
 

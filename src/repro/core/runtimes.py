@@ -254,10 +254,21 @@ class FaaSRuntime(BasePlatform):
         # top; the default store is the comm kvstore, already billed above
         ckpt_usd = (ctx.ckpt_store.service_cost(sim_time)
                     if self.ckpt.transport is not None else 0.0)
-        return (gb_s * pricing.LAMBDA_GB_S
-                + ctx.invocations * pricing.LAMBDA_REQUEST
-                + ctx.comm.service_cost(sim_time)
-                + ctx.retired_cost + ckpt_usd)
+        usd_gb_s = gb_s * pricing.LAMBDA_GB_S
+        usd_req = ctx.invocations * pricing.LAMBDA_REQUEST
+        usd_comm = ctx.comm.service_cost(sim_time)
+        if ctx.rec is not None:
+            # invariant 2 ledger (DESIGN.md §18): each additive term, in
+            # the summation order, so the sequential ledger sum is bitwise
+            # the return value; reset because mid-run telemetry snapshots
+            # call finalize_cost too and only the last call's ledger counts
+            ctx.rec.cost_reset()
+            ctx.rec.cost("lambda_gb_s", usd_gb_s)
+            ctx.rec.cost("requests", usd_req)
+            ctx.rec.cost("comm_service", usd_comm)
+            ctx.rec.cost("retired", ctx.retired_cost)
+            ctx.rec.cost("ckpt_service", ckpt_usd)
+        return usd_gb_s + usd_req + usd_comm + ctx.retired_cost + ckpt_usd
 
     # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
     def resize_cost(self, added: int) -> tuple:
@@ -448,10 +459,21 @@ class IaaSRuntime(BasePlatform):
                                      ctx.joined_at)) / 3600.0
         # comm substrate dollars: $0 for the default NIC ring, but a pinned
         # storage/PS stack bills its hourly + per-op prices like on FaaS
-        return (hourly / 3600.0 * sim_time - joined_rebate
-                + ctx.retired_cost
-                + ctx.ckpt_store.service_cost(sim_time)
-                + ctx.comm.service_cost(sim_time))
+        usd_vm = hourly / 3600.0 * sim_time
+        usd_ckpt = ctx.ckpt_store.service_cost(sim_time)
+        usd_comm = ctx.comm.service_cost(sim_time)
+        if ctx.rec is not None:
+            # invariant 2 ledger (DESIGN.md §18): the rebate enters as a
+            # negative entry -- IEEE a - b == a + (-b), so the sequential
+            # ledger sum is bitwise the return value
+            ctx.rec.cost_reset()
+            ctx.rec.cost("vm_hours", usd_vm)
+            ctx.rec.cost("joined_rebate", -joined_rebate)
+            ctx.rec.cost("retired", ctx.retired_cost)
+            ctx.rec.cost("ckpt_service", usd_ckpt)
+            ctx.rec.cost("comm_service", usd_comm)
+        return (usd_vm - joined_rebate
+                + ctx.retired_cost + usd_ckpt + usd_comm)
 
     # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
     def resize_cost(self, added: int) -> tuple:
@@ -667,10 +689,19 @@ class PodPlatform(BasePlatform):
         joined_rebate = self._pod_hourly() * float(np.sum(ctx.joined_at)) \
             / 3600.0
         # DCN rings bill $0; pinned storage/PS stacks bill their service
-        return (hourly / 3600.0 * sim_time - joined_rebate
-                + ctx.retired_cost
-                + ctx.ckpt_store.service_cost(sim_time)
-                + ctx.comm.service_cost(sim_time))
+        usd_pod = hourly / 3600.0 * sim_time
+        usd_ckpt = ctx.ckpt_store.service_cost(sim_time)
+        usd_comm = ctx.comm.service_cost(sim_time)
+        if ctx.rec is not None:
+            # invariant 2 ledger (DESIGN.md §18), rebate as a negative entry
+            ctx.rec.cost_reset()
+            ctx.rec.cost("pod_hours", usd_pod)
+            ctx.rec.cost("joined_rebate", -joined_rebate)
+            ctx.rec.cost("retired", ctx.retired_cost)
+            ctx.rec.cost("ckpt_service", usd_ckpt)
+            ctx.rec.cost("comm_service", usd_comm)
+        return (usd_pod - joined_rebate
+                + ctx.retired_cost + usd_ckpt + usd_comm)
 
     # ---- elastic-fleet hooks (DESIGN.md §13) --------------------------------
     def resize_cost(self, added: int) -> tuple:

@@ -221,8 +221,24 @@ class SSP(SyncProtocol):
             lr = algo.lr / np.sqrt(T)      # 1/sqrt(T) decay (paper §4.5)
             dt2 = store.put("global", (g_flat - lr * upd).astype(np.float32))
             c = ctx.step_compute(i)
+            if ctx.rec is not None:
+                t_round0 = t
             t += dt1 + c + dt2
             ctx.clock[i] = t
+            if ctx.rec is not None:
+                # interior split points are approximate partials; the round
+                # endpoint is the stored clock, so tiling stays exact
+                wid = int(ctx.worker_ids[i])
+                s1 = t_round0 + dt1
+                s2 = s1 + c
+                ctx.rec.span(wid, "comm.get", "comm", t_round0, s1)
+                if ctx.speeds[i] > 1.0:
+                    mid = s1 + float(ctx.c_round[i])
+                    ctx.rec.span(wid, "compute", "compute", s1, mid)
+                    ctx.rec.span(wid, "straggler", "stall", mid, s2)
+                else:
+                    ctx.rec.span(wid, "compute", "compute", s1, s2)
+                ctx.rec.span(wid, "comm.put", "comm", s2, t)
             ctx.meter_add("comm", dt1 + dt2)
             # same accounting convention as the BSP backends: one update
             # vector per per-worker round (BSP meters nbytes once per fleet
@@ -242,7 +258,13 @@ class SSP(SyncProtocol):
                           if rounds[j] - amin <= bound]:
                     t_park = waiting.pop(j)
                     ctx.meter_add("wait", max(0.0, t - t_park))
-                    ctx.clock[j] = max(t, t_park)
+                    if ctx.rec is None:
+                        ctx.clock[j] = max(t, t_park)
+                    else:
+                        wait0 = float(ctx.clock[j])
+                        ctx.clock[j] = max(t, t_park)
+                        ctx.rec.span(int(ctx.worker_ids[j]), "ssp.wait",
+                                     "stall", wait0, float(ctx.clock[j]))
                     heapq.heappush(heap, (float(ctx.clock[j]), j))
 
             if done % eval_stride == 0 or done == total:
@@ -279,7 +301,14 @@ class SSP(SyncProtocol):
                         for j, t_park in waiting.items():
                             ctx.meter_add("wait", max(0.0, t - t_park))
                             if j < ctx.w:
-                                ctx.clock[j] = max(float(ctx.clock[j]), t)
+                                if ctx.rec is None:
+                                    ctx.clock[j] = max(float(ctx.clock[j]), t)
+                                else:
+                                    wait0 = float(ctx.clock[j])
+                                    ctx.clock[j] = max(wait0, t)
+                                    ctx.rec.span(int(ctx.worker_ids[j]),
+                                                 "ssp.wait", "stall", wait0,
+                                                 float(ctx.clock[j]))
                         waiting.clear()
                         epochs_done = epoch_acc
                         rpe = algo.rounds_per_epoch(ctx.parts[0])
@@ -367,6 +396,10 @@ class LocalSGD(SyncProtocol):
             residual[i] = err
             deq.append(d)
         wire = [np.zeros(int8_wire_floats(v.size), np.float32) for v in vecs]
+        if ctx.rec is not None:
+            ctx.rec.mark("codec", float(np.max(ctx.clock)),
+                         codec="int8-ef", raw_bytes=int(vecs[0].nbytes),
+                         wire_bytes=int(wire[0].nbytes))
         ctx.comm.bsp_reduce(ctx, wire, tag + ".q8")   # meters time+bytes only
         return np.mean(np.stack(deq), axis=0)
 

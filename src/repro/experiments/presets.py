@@ -51,6 +51,15 @@ def _fig10_breakdown(quick: bool) -> list[ExperimentSpec]:
     ]
 
 
+def _fig10_trace(quick: bool) -> list[ExperimentSpec]:
+    """The Fig-10 trials with the span recorder on (§18): the breakdown
+    table is re-derived from spans alone and gated on the conservation
+    invariants (``repro trace fig10_trace``)."""
+    return [s.with_(name=s.name.replace("fig10_", "fig10_trace_"),
+                    trace=True)
+            for s in _fig10_breakdown(quick)]
+
+
 def _fig11_end2end(quick: bool) -> list[ExperimentSpec]:
     base = ExperimentSpec(
         model="lr", dataset="higgs", rows=30_000 if quick else 400_000,
@@ -228,6 +237,10 @@ PRESETS: dict[str, Preset] = {p.name: p for p in [
     Preset("fig10_breakdown",
            "Fig 10: startup/load/compute/comm breakdown, FaaS channels vs "
            "hybrid VM-PS vs IaaS (LR on Higgs, w=10)", _fig10_breakdown),
+    Preset("fig10_trace",
+           "Fig 10 re-derived from spans (§18): the same four trials with "
+           "trace=True, phase table from the recorder + conservation gates",
+           _fig10_trace),
     Preset("fig11_end2end",
            "Fig 11: end-to-end runtime+cost vs worker count, FaaS vs IaaS "
            "(LR+ADMM on Higgs)", _fig11_end2end),

@@ -2,10 +2,12 @@
 
 ``run_experiment(spec)`` executes one :class:`ExperimentSpec` through the
 discrete-event engine and returns a :class:`RunRecord` -- the stable JSON
-schema every study emits (schema ``repro.experiment/v1``):
+schema every study emits (schema ``repro.experiment/v2``; v2 records full-
+precision metered values and, when ``spec.trace`` is set, a ``trace``
+section with the span list and Figure-10 phase breakdown, DESIGN.md §18):
 
     {
-      "schema":    "repro.experiment/v1",
+      "schema":    "repro.experiment/v2",
       "name":      "<human label>",
       "spec_hash": "<16-hex content hash of the spec, name excluded>",
       "spec":      { ...ExperimentSpec.to_dict()... },
@@ -31,7 +33,7 @@ from pathlib import Path
 
 from repro.experiments.spec import ExperimentSpec
 
-SCHEMA = "repro.experiment/v1"
+SCHEMA = "repro.experiment/v2"
 DEFAULT_CACHE = Path(__file__).resolve().parents[3] / "experiments" / "runs"
 
 
@@ -97,7 +99,7 @@ def run_experiment(spec: ExperimentSpec, cache_dir: str | Path | None = None,
     res = spec.build_runtime().train(
         model, algo, tr, va, target_loss=spec.target_loss,
         max_epochs=spec.max_epochs, eval_every=spec.eval_every,
-        data_local=spec.data_local)
+        data_local=spec.data_local, trace=spec.trace)
     rec = RunRecord(spec=spec, result=_result_dict(res))
 
     if cache_file is not None:

@@ -47,8 +47,14 @@ PLATFORMS = ("faas", "iaas", "pod")
 #: ``ckpt_*`` meters, and the FaaS planner time gained the lifetime-rotation
 #: term -- so pre-checkpoint records must not alias runs that now bill
 #: checkpoint traffic (``FailureSpec.trace`` / ``ExperimentSpec.ckpt`` are
-#: new fields and elide from the hash when defaulted).
-HASH_SCHEMA = "h5"
+#: new fields and elide from the hash when defaulted).  h6: the structured
+#: trace subsystem (DESIGN.md §18) landed -- ``ExperimentSpec.trace`` asks
+#: the engine for a span recorder, and recorded results moved to full
+#: precision (``repro.experiment/v2``: ``sim_time_s``/``cost_usd``/... are
+#: no longer rounded at record time, and traced records carry a ``trace``
+#: section) -- so h5-era rounded records must not alias the full-precision
+#: schema.
+HASH_SCHEMA = "h6"
 
 
 @dataclass(frozen=True)
@@ -88,6 +94,9 @@ class ExperimentSpec:
     eval_every: int = 1
     target_loss: float | None = None
     data_local: bool = False               # IaaS/pod: peer-to-peer data load
+    trace: bool = False                    # record per-event spans (§18);
+                                           # metered results are byte-equal
+                                           # either way (property-tested)
     lifetime: float | None = None          # FaaS: worker lease override (s)
     platform_args: dict = field(default_factory=dict)
                                            # pod: chips_per_pod, mfu,

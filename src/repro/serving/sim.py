@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.elastic import MAX_FLEET, SMLTPolicy, StaticPolicy, make_policy
 from repro.core.elastic.telemetry import ServingTelemetry
+from repro.core.trace import TraceRecorder
 from repro.serving.arrivals import ArrivalProcess, make_arrivals
 from repro.serving.latency import LatencyModel
 
@@ -155,6 +156,9 @@ class ServingResult:
     scaling_timeline: List[tuple] = field(default_factory=list)  # (win,w,t)
     windows: List[dict] = field(default_factory=list)
     sim_time: float = 0.0
+    trace: object = field(default=None, repr=False)
+                                 # TraceRecorder when serve(trace=True)
+                                 # (DESIGN.md §18); None otherwise
 
     def _pct(self, q: float) -> float:
         if not self.latencies:
@@ -197,7 +201,18 @@ class ServingResult:
             "kv_budget_bytes": self.kv_budget_bytes,
             "scaling_timeline": [list(x) for x in self.scaling_timeline],
             "sim_time": round(self.sim_time, 3),
+            "breakdown": self.breakdown(),
         }
+
+    def breakdown(self) -> dict:
+        """Span-derived phase seconds (queue wait, cold start, prefill,
+        decode) -- {} when the run was not traced."""
+        if self.trace is None:
+            return {}
+        out: dict = {}
+        for s in self.trace.spans:
+            out[s.kind] = out.get(s.kind, 0.0) + (s.t1 - s.t0)
+        return out
 
 
 # ------------------------------------------------------------- internals ----
@@ -238,13 +253,59 @@ def _fleet_bounds(platform) -> tuple:
     return lo, hi
 
 
+class _WindowMeter:
+    """Per-window telemetry, built once for both billing loops (they used
+    to duplicate this block).  One source of truth for
+    :class:`ServingTelemetry` and the ``res.windows`` record; when tracing,
+    each window also lands a ``serve.window`` mark on the recorder."""
+
+    def __init__(self, rec, res, window_s: float, lo: int, hi: int):
+        self.rec = rec
+        self.res = res
+        self.window_s = window_s
+        self.lo = lo
+        self.hi = hi
+        self.arr = 0                # arrivals this window
+        self.lat: list = []         # completion latencies this window
+        self.prev_busy = 0.0        # busy_integral at the last boundary
+
+    def observe(self, widx: int, t: float, workers: int,
+                busy_integral: float, queue_depth: int,
+                cost_now: float) -> ServingTelemetry:
+        util = (busy_integral - self.prev_busy) / (max(workers, 1)
+                                                   * self.window_s)
+        tele = ServingTelemetry(
+            round=widx, workers=workers, qps=self.arr / self.window_s,
+            queue_depth=queue_depth,
+            p50_ms=(float(np.percentile(self.lat, 50)) * 1e3
+                    if self.lat else None),
+            p99_ms=(float(np.percentile(self.lat, 99)) * 1e3
+                    if self.lat else None),
+            utilization=min(1.0, util), cost_so_far=cost_now,
+            sim_time=t, min_workers=self.lo, max_workers=self.hi)
+        self.res.windows.append({"t": t, "qps": tele.qps,
+                                 "queue": tele.queue_depth,
+                                 "p50_ms": tele.p50_ms,
+                                 "p99_ms": tele.p99_ms,
+                                 "util": round(tele.utilization, 4),
+                                 "workers": workers, "cost": cost_now})
+        if self.rec is not None:
+            self.rec.mark("serve.window", t, workers=workers, qps=tele.qps,
+                          queue=queue_depth, util=tele.utilization,
+                          cost_usd=cost_now)
+        self.prev_busy = busy_integral
+        self.arr = 0
+        self.lat = []
+        return tele
+
+
 # ------------------------------------------------------------------ serve ---
 
 def serve(platform, lat, arrivals, *, duration_s: float = 300.0,
           prompt_len: int = 32, new_tokens: int = 32,
           window_s: float = 15.0, scaling=None, max_batch: int = 32,
           prewarm: int = 0, reduced: bool = False,
-          seed: int = 0) -> ServingResult:
+          seed: int = 0, trace: bool = False) -> ServingResult:
     """Serve an open-loop arrival process on ``platform``.
 
     ``lat`` is a :class:`LatencyModel` or an arch name (resolved against the
@@ -252,7 +313,10 @@ def serve(platform, lat, arrivals, *, duration_s: float = 300.0,
     ``scaling`` is a ``core.elastic`` grammar string / policy instance
     (default: the platform's own ``scaling`` spec, ``static`` = fixed).
     ``prewarm`` seeds the FaaS warm pool (ignored on provisioned platforms,
-    whose initial fleet is warm by construction).
+    whose initial fleet is warm by construction).  ``trace=True`` records
+    the request lifecycle (queue wait, cold start, prefill, decode slices)
+    on a :class:`~repro.core.trace.TraceRecorder` (DESIGN.md §18) without
+    perturbing any metered value.
     """
     hooks = platform.serving_hooks()
     if isinstance(lat, str):
@@ -281,6 +345,7 @@ def serve(platform, lat, arrivals, *, duration_s: float = 300.0,
     res = ServingResult(system=hooks.system, arrival=arrivals.name,
                         duration_s=float(duration_s), workers0=w0,
                         kv_budget_bytes=hooks.memory_bytes - lat.model_bytes)
+    res.trace = TraceRecorder("serve") if trace else None
     if policy is not None:
         res.scaling_timeline.append((0, w0, 0.0))
 
@@ -312,6 +377,8 @@ def _serve_request_billed(platform, hooks, lat, policy, res, times, kv_req,
     heapq.heappush(heap, (window_s, seq, "win", 0))
     seq += 1
 
+    rec = res.trace
+    win = _WindowMeter(rec, res, window_s, lo, hi)
     service_s = lat.service_s(prompt_len, new_tokens, batch=1)
     cold_extra = hooks.cold_start_total_s(lat.model_bytes)
     warm: list = [hooks.keep_warm_s] * max(0, int(prewarm))
@@ -321,9 +388,6 @@ def _serve_request_billed(platform, hooks, lat, policy, res, times, kv_req,
     stopped = False
     last_t = 0.0
     busy_integral = 0.0
-    win_prev_busy = 0.0
-    win_arr = 0
-    win_lat: list = []
     last_done = 0.0
 
     def advance(t: float):
@@ -345,6 +409,19 @@ def _serve_request_billed(platform, hooks, lat, policy, res, times, kv_req,
         req.t_admit = t
         res.cost += req.cost
         res.per_request_usd.append(req.cost)
+        if rec is not None:
+            # invariant 2: one ledger entry per admitted dollar, in the
+            # exact order res.cost accumulates them
+            rec.cost("request", req.cost)
+            rec.span(req.rid, "serve.queue", "stall", req.t_arr, t)
+            if cold:
+                rec.span(req.rid, "serve.coldstart", "startup", t, t + delay)
+            t_exec = t + delay
+            t_pf = t_exec + prompt_len * lat.step_s(1)
+            rec.span(req.rid, "serve.prefill", "compute", t_exec, t_pf,
+                     usd=req.cost)
+            rec.span(req.rid, "serve.decode", "compute", t_pf,
+                     t_exec + service_s)
         res.peak_kv_bytes = max(res.peak_kv_bytes, req.kv_bytes)
         res.peak_batch = max(res.peak_batch, 1)
         busy += 1
@@ -356,7 +433,7 @@ def _serve_request_billed(platform, hooks, lat, policy, res, times, kv_req,
         advance(t)
         if kind == "arr":
             res.requests += 1
-            win_arr += 1
+            win.arr += 1
             if stopped or cap == 0:
                 res.dropped += 1
                 continue
@@ -376,32 +453,18 @@ def _serve_request_billed(platform, hooks, lat, policy, res, times, kv_req,
             res.completed += 1
             delay = t - req.t_arr
             res.latencies.append(delay)
-            win_lat.append(delay)
+            win.lat.append(delay)
             last_done = max(last_done, t)
             warm.append(t + hooks.keep_warm_s)
             if queue and not stopped and busy < cap:
                 start(queue.popleft(), t)
         elif kind == "win":
             widx = payload
-            util = ((busy_integral - win_prev_busy)
-                    / (max(cap, 1) * window_s))
-            tele = ServingTelemetry(
-                round=widx, workers=cap, qps=win_arr / window_s,
-                queue_depth=len(queue),
-                p50_ms=(float(np.percentile(win_lat, 50)) * 1e3
-                        if win_lat else None),
-                p99_ms=(float(np.percentile(win_lat, 99)) * 1e3
-                        if win_lat else None),
-                utilization=min(1.0, util), cost_so_far=res.cost,
-                sim_time=t, min_workers=lo, max_workers=hi)
-            res.windows.append({"t": t, "qps": tele.qps,
-                                "queue": tele.queue_depth,
-                                "p50_ms": tele.p50_ms, "p99_ms": tele.p99_ms,
-                                "util": round(tele.utilization, 4),
-                                "workers": cap, "cost": res.cost})
-            win_prev_busy = busy_integral
-            win_arr = 0
-            win_lat = []
+            # when tracing, the window's cost snapshot is the recorder's
+            # ledger sum -- bitwise-equal to res.cost by construction
+            cost_now = res.cost if rec is None else rec.cost_total()
+            tele = win.observe(widx, t, cap, busy_integral, len(queue),
+                               cost_now)
             if policy is not None:
                 target = int(policy.observe(tele))
                 if target == 0:
@@ -458,9 +521,8 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
     arr_idx = 0                 # next unseen arrival (horizon lookahead)
     next_win = window_s
     busy_integral = 0.0
-    win_prev_busy = 0.0
-    win_arr = 0
-    win_lat: list = []
+    rec = res.trace
+    win = _WindowMeter(rec, res, window_s, lo, hi)
     last_done = 0.0
 
     def cost_at(t: float) -> float:
@@ -482,6 +544,9 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
                and r.kv + queue[0].kv_bytes <= kv_budget):
             req = queue.popleft()
             req.t_admit = t
+            if rec is not None:
+                rec.span(req.rid, "serve.queue", "stall", req.t_arr, t,
+                         meta={"replica": r.rid})
             r.active.append(req)
             r.kv += req.kv_bytes
             res.peak_kv_bytes = max(res.peak_kv_bytes, r.kv)
@@ -496,7 +561,7 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
         if kind == "arr":
             arr_idx = payload + 1
             res.requests += 1
-            win_arr += 1
+            win.arr += 1
             if stopped:
                 res.dropped += 1
                 continue
@@ -519,7 +584,7 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
                 res.completed += 1
                 delay = t - req.t_arr
                 res.latencies.append(delay)
-                win_lat.append(delay)
+                win.lat.append(delay)
                 last_done = max(last_done, t)
             if r.draining:
                 if not r.active:
@@ -541,30 +606,18 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
             for q in r.active:
                 q.steps_left -= n
             busy_integral += n * step
+            if rec is not None:
+                # one continuous-batching decode slice per fast-forwarded
+                # chunk, on the replica's timeline
+                rec.span(r.rid, "serve.decode", "compute", t, t + n * step,
+                         meta={"batch": b, "steps": n})
             r.scheduled = True
             heapq.heappush(heap, (t + n * step, seq, "step", r.rid))
             seq += 1
         elif kind == "win":
             widx = payload
-            util = ((busy_integral - win_prev_busy)
-                    / (max(width, 1) * window_s))
-            tele = ServingTelemetry(
-                round=widx, workers=width, qps=win_arr / window_s,
-                queue_depth=len(queue),
-                p50_ms=(float(np.percentile(win_lat, 50)) * 1e3
-                        if win_lat else None),
-                p99_ms=(float(np.percentile(win_lat, 99)) * 1e3
-                        if win_lat else None),
-                utilization=min(1.0, util), cost_so_far=cost_at(t),
-                sim_time=t, min_workers=lo, max_workers=hi)
-            res.windows.append({"t": t, "qps": tele.qps,
-                                "queue": tele.queue_depth,
-                                "p50_ms": tele.p50_ms, "p99_ms": tele.p99_ms,
-                                "util": round(tele.utilization, 4),
-                                "workers": width, "cost": tele.cost_so_far})
-            win_prev_busy = busy_integral
-            win_arr = 0
-            win_lat = []
+            tele = win.observe(widx, t, width, busy_integral, len(queue),
+                               cost_at(t))
             if policy is not None and not stopped:
                 target = int(policy.observe(tele))
                 if target == 0:
@@ -597,6 +650,10 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
                             for _ in range(need):
                                 r = _Replica(len(replicas), t_ready, t)
                                 replicas.append(r)
+                                if rec is not None:
+                                    rec.span(r.rid, "serve.coldstart",
+                                             "startup", t, t_ready,
+                                             meta={"ordered": need})
                                 if queue:
                                     schedule(r, t_ready)
                         width = target
@@ -627,3 +684,10 @@ def _serve_provisioned(platform, hooks, lat, policy, res, times, kv_req,
     res.sim_time = sim_end
     res.cost = sum((t1 - t0) * hourly / 3600.0
                    for t0, t1, hourly in res.provisioned)
+    if rec is not None:
+        # invariant 2 for provisioned billing: one ledger entry per replica
+        # span, same terms in the same order as the sum above, so the
+        # ledger total is bitwise-equal to res.cost
+        rec.cost_reset()
+        for t0, t1, hourly in res.provisioned:
+            rec.cost("replica", (t1 - t0) * hourly / 3600.0)

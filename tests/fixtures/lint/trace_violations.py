@@ -1,0 +1,19 @@
+"""Seeded trace-discipline violations (never imported; AST fixture).
+
+Line numbers are asserted exactly in tests/test_analysis.py.
+"""
+
+
+def untraced_mutation(ctx, dt) -> None:
+    ctx.clock += dt                          # T001 (line 8): no rec anywhere
+    ctx.breakdown["comm"] = 0.0              # same function: one finding
+
+
+def traced_mutation(ctx, dt) -> None:
+    ctx.clock += dt                          # ok: recorder referenced below
+    if ctx.rec is not None:
+        ctx.rec.meter("comm", dt)
+
+
+def suppressed_mutation(res) -> None:
+    res.sim_time = 0.0  # lint: ignore[T001] -- numeric no-op demo

@@ -49,8 +49,19 @@ def test_units_fixture_exact_codes_and_lines():
 
 def test_metering_fixture_exact_codes_and_lines():
     got, _ = lint_fixture("metering_violations.py")
+    # steal_the_books also violates trace discipline (T001, first write)
     assert got == {("M001", 8), ("M001", 9), ("M001", 10), ("M001", 11),
-                   ("M002", 15)}
+                   ("M002", 15), ("T001", 8)}
+
+
+def test_trace_fixture_exact_codes_and_lines():
+    findings, _ = run_lint(paths=[FIXTURES / "trace_violations.py"],
+                           select=["trace"])
+    got = {(f.code, f.line) for f in findings}
+    # one finding per offending function (anchored at its first write);
+    # the rec-referencing and the suppressed functions stay silent
+    assert got == {("T001", 8)}
+    assert all(f.checker == "trace" for f in findings)
 
 
 def test_constants_fixture_exact_codes_and_lines():

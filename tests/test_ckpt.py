@@ -272,10 +272,11 @@ def test_elastic_join_pays_metered_restore(higgs):
 # ---------------------------------------------------- spec-level wiring ----
 
 def test_experiment_spec_ckpt_and_trace_fields():
-    """ExperimentSpec grows ckpt= and failure.trace= (h5): grammar strings
-    coerce, defaults elide from the hash, bad traces fail eagerly."""
+    """ExperimentSpec grows ckpt= and failure.trace= (h5, since re-keyed
+    to h6 by the trace= field): grammar strings coerce, defaults elide
+    from the hash, bad traces fail eagerly."""
     from repro.experiments.spec import HASH_SCHEMA, ExperimentSpec
-    assert HASH_SCHEMA == "h5"
+    assert HASH_SCHEMA == "h6"
     base = ExperimentSpec(platform="iaas", model="lr", dataset="higgs",
                           rows=5_000, algorithm="ga_sgd", max_epochs=1)
     spec = base.with_(ckpt="s3:every=2:sharded",

@@ -36,6 +36,8 @@ class _Ctx:
         self.clock = np.zeros(w)
         self.breakdown = {}
         self.bytes = 0.0
+        self.rec = None
+        self.worker_ids = list(range(w))
 
     def meter_add(self, key, dt):
         self.breakdown[key] = self.breakdown.get(key, 0.0) + dt

@@ -344,11 +344,11 @@ def test_spec_round_trip_and_hash_with_scaling():
                                           max_workers=8))
     assert ExperimentSpec.from_json(spec.to_json()) == spec
     assert spec.spec_hash() != spec.with_(scaling="static").spec_hash()
-    # defaults elide: an all-default spec hashes schema + {} (h5 re-key:
-    # the metered checkpoint subsystem landed, DESIGN.md §17)
+    # defaults elide: an all-default spec hashes schema + {} (h6 re-key:
+    # the trace= field landed, DESIGN.md §18)
     import hashlib
     from repro.experiments.spec import HASH_SCHEMA
-    assert HASH_SCHEMA == "h5"
+    assert HASH_SCHEMA == "h6"
     assert ExperimentSpec().spec_hash() == \
         hashlib.sha256(f"{HASH_SCHEMA}{{}}".encode()).hexdigest()[:16]
 

@@ -105,7 +105,7 @@ def test_run_experiment_cache_hit_miss_and_force(tmp_path):
 def test_record_schema_is_stable(tmp_path):
     rec = run_experiment(_spec(name="s"), cache_dir=tmp_path)
     d = json.loads(Path(rec.path).read_text())
-    assert d["schema"] == "repro.experiment/v1"
+    assert d["schema"] == "repro.experiment/v2"
     assert set(d) == {"schema", "name", "spec_hash", "spec", "result"}
     for key in ("system", "algorithm", "workers", "rounds", "sim_time_s",
                 "cost_usd", "final_loss", "converged", "preemptions",
@@ -141,7 +141,7 @@ def test_run_experiment_parity_with_legacy_faas_train():
 
     assert [l for _, l in rec.history] == [float(l) for _, l in legacy.history]
     assert [t for t, _ in rec.history] == [float(t) for t, _ in legacy.history]
-    assert rec.result["cost_usd"] == round(legacy.cost, 4)
+    assert rec.result["cost_usd"] == legacy.cost   # v2: full precision
     assert rec.result["rounds"] == legacy.rounds
 
 
@@ -188,10 +188,10 @@ def test_sweep_duplicate_points_run_once(tmp_path):
 # ---------------------------------------------------------------- presets ---
 
 def test_presets_build_valid_specs():
-    assert set(PRESETS) == {"fig10_breakdown", "fig11_end2end", "fig8_sync",
-                            "spot_vs_ondemand", "spot_trace", "hetero_fleet",
-                            "faas_vs_pod", "pod_local_sgd", "comm_axis",
-                            "elastic_axis"}
+    assert set(PRESETS) == {"fig10_breakdown", "fig10_trace", "fig11_end2end",
+                            "fig8_sync", "spot_vs_ondemand", "spot_trace",
+                            "hetero_fleet", "faas_vs_pod", "pod_local_sgd",
+                            "comm_axis", "elastic_axis"}
     for name, preset in PRESETS.items():
         specs = preset.build(True)
         assert specs, name
@@ -265,7 +265,7 @@ def test_cli_run_fig8_sync_quick(tmp_path):
     assert "fig8_higgs_bsp" in r.stdout
     records = json.loads(out.read_text())
     assert len(records) == 3
-    assert all(rec["schema"] == "repro.experiment/v1" for rec in records)
+    assert all(rec["schema"] == "repro.experiment/v2" for rec in records)
 
 
 def test_cli_sweep_2x2(tmp_path):

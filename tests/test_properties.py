@@ -127,3 +127,51 @@ def test_local_sgd_bytes_per_inner_step_shrink_by_h(h, w, compress, epochs):
                 if (rnd + 1) % h == 0 or rnd == res.rounds - 1)
     wire = (int8_wire_floats(tr.d) * 4) if compress else tr.d * 4
     assert res.comm_bytes == syncs * wire
+
+
+# ------------------------------------------------ trace conservation (§18) --
+
+#: platform x sync x codec x failure corners (the invariants must hold on
+#: ANY of them; tests/test_trace.py pins the same grid deterministically)
+_TRACE_GRID = [
+    {"platform": "faas", "sync": "bsp"},
+    {"platform": "faas", "sync": "asp"},
+    {"platform": "faas", "sync": "ssp:2",
+     "fleet": {"workers": 3, "straggler": 3.0}},
+    {"platform": "iaas", "sync": "bsp", "comm": {"codec": "int8"}},
+    {"platform": "iaas", "sync": "ssp:2",
+     "failure": {"inject": [[0, 30.0]], "spot": True}, "ckpt": "s3:every=2"},
+    {"platform": "iaas", "sync": "bsp", "scaling": "smlt:2",
+     "fleet": {"workers": 4}},
+    {"platform": "pod", "sync": "local:2:c8"},
+]
+
+
+@given(st.integers(0, len(_TRACE_GRID) - 1), st.integers(0, 3),
+       st.integers(1, 2))
+@settings(max_examples=12, deadline=None)
+def test_trace_conservation_invariants_property(idx, seed, epochs):
+    """For ANY spec corner and seed, tracing changes no metered value and
+    the three conservation gates hold EXACTLY: spans tile each worker's
+    clock, the $ ledger sums to finalize_cost, traced bytes == the meters
+    (DESIGN.md §18)."""
+    from repro.core.trace import assert_invariants
+    from repro.experiments import ExperimentSpec
+
+    over = {"rows": 2_000, "max_epochs": epochs, "seed": seed,
+            "fleet": {"workers": 2},
+            "algo_args": {"lr": 0.2, "batch_size": 1024},
+            **_TRACE_GRID[idx]}
+    spec = ExperimentSpec.from_dict(over)
+    model, algo, tr, va = spec.build_workload()
+    runtime = spec.build_runtime()
+    res = runtime.train(model, algo, tr, va, max_epochs=epochs, trace=True)
+    assert not res.error
+    inv = assert_invariants(res)
+    assert inv["ok"]
+    assert res.trace.meters == res.breakdown
+    plain = spec.build_runtime().train(model, algo, tr, va,
+                                       max_epochs=epochs)
+    assert plain.sim_time == res.sim_time
+    assert plain.cost == res.cost
+    assert plain.breakdown == res.breakdown

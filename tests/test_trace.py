@@ -1,0 +1,278 @@
+"""Structured trace subsystem (DESIGN.md §18): conservation gates, pinned
+PR-9 parity, the Figure-10 breakdown, exporters, and the serving ledger.
+
+The load-bearing claims, each tested here:
+
+- ``trace=False`` is byte-identical to the pre-trace engine (pinned against
+  ``tests/fixtures/trace_parity_pr9.json`` on all three platforms);
+- ``trace=True`` perturbs NO metered value, and the recorder satisfies the
+  three conservation invariants exactly (==, not approx): spans tile each
+  worker clock, the $ ledger sums to ``finalize_cost``, traced wire bytes
+  equal the ``comm_bytes``/``ckpt_bytes`` meters;
+- the same holds across a seeded platform x sync x codec x failure grid
+  (and under hypothesis when installed -- see test_properties.py);
+- the Chrome exporter emits loadable trace-event JSON via the registry.
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.trace import (
+    EXPORTERS, PHASES, TraceRecorder, assert_invariants, check_invariants,
+    derive_breakdown, export_chrome, list_exporters, make_exporter,
+    render_breakdown, render_invariants,
+)
+from repro.experiments import ExperimentSpec, run_experiment
+
+FIXTURE = Path(__file__).parent / "fixtures" / "trace_parity_pr9.json"
+
+#: valid platform x sync x codec x failure combinations (lossy codecs only
+#: pair with collective-reduce syncs; spot preemption needs a restart path)
+GRID = [
+    {"platform": "faas", "sync": "bsp", "comm": {"codec": "fp32"}},
+    {"platform": "faas", "sync": "asp"},
+    {"platform": "faas", "sync": "ssp:2",
+     "fleet": {"workers": 3, "straggler": 3.0}},
+    {"platform": "faas", "sync": "bsp", "comm": {"codec": "int8"}},
+    {"platform": "iaas", "sync": "bsp", "comm": {"codec": "topk:0.05"}},
+    {"platform": "iaas", "sync": "ssp:2",
+     "failure": {"inject": [[0, 30.0]], "spot": True},
+     "ckpt": "s3:every=2"},
+    {"platform": "iaas", "sync": "local:2"},
+    {"platform": "iaas", "sync": "bsp", "scaling": "smlt:2",
+     "fleet": {"workers": 4}},
+    {"platform": "pod", "sync": "local:2:c8"},
+    {"platform": "pod", "sync": "bsp",
+     "failure": {"inject": [[0, 10.0]], "spot": True}},
+]
+
+
+def _spec(over: dict) -> ExperimentSpec:
+    base = {"rows": 2_500, "max_epochs": 2, "seed": 3,
+            "fleet": {"workers": 2},
+            "algo_args": {"lr": 0.2, "batch_size": 1024}}
+    base.update(over)
+    return ExperimentSpec.from_dict(base)
+
+
+def _run(spec: ExperimentSpec, trace: bool):
+    model, algo, tr, va = spec.build_workload()
+    return spec.build_runtime().train(model, algo, tr, va,
+                                      max_epochs=spec.max_epochs,
+                                      trace=trace)
+
+
+# ----------------------------------------------------- pinned PR-9 parity ---
+
+def _fixture_cases():
+    return json.loads(FIXTURE.read_text())["cases"]
+
+
+@pytest.mark.parametrize("case", _fixture_cases(),
+                         ids=lambda c: c["spec"]["name"])
+def test_trace_off_is_byte_identical_to_pr9(case):
+    """The recorder is structurally absent when disabled: every metered
+    value equals the pinned pre-trace output EXACTLY (==, full float64)."""
+    spec = ExperimentSpec.from_dict(case["spec"])
+    res = _run(spec, trace=False)
+    exp = case["result"]
+    assert res.trace is None
+    assert res.system == exp["system"]
+    assert res.rounds == exp["rounds"]
+    assert res.sim_time == exp["sim_time"]
+    assert res.cost == exp["cost"]
+    assert res.comm_bytes == exp["comm_bytes"]
+    assert res.comm_cost == exp["comm_cost"]
+    assert res.ckpt_bytes == exp["ckpt_bytes"]
+    assert res.ckpt_time == exp["ckpt_time"]
+    assert res.ckpt_cost == exp["ckpt_cost"]
+    assert res.preemptions == exp["preemptions"]
+    assert res.max_staleness == exp["max_staleness"]
+    assert res.breakdown == exp["breakdown"]
+    assert [[t, l] for t, l in res.history] == exp["history"]
+    assert [list(x) for x in res.scaling_timeline] == exp["scaling_timeline"]
+
+
+@pytest.mark.parametrize("case", _fixture_cases(),
+                         ids=lambda c: c["spec"]["name"])
+def test_trace_on_perturbs_nothing_and_conserves(case):
+    """trace=True: same metered outputs, plus the three gates hold."""
+    spec = ExperimentSpec.from_dict(case["spec"])
+    res = _run(spec, trace=True)
+    exp = case["result"]
+    assert res.sim_time == exp["sim_time"]
+    assert res.cost == exp["cost"]
+    assert res.breakdown == exp["breakdown"]
+    assert [[t, l] for t, l in res.history] == exp["history"]
+    inv = assert_invariants(res)
+    assert inv["ok"]
+    # the meter mirror is the breakdown, bitwise
+    assert res.trace.meters == res.breakdown
+
+
+# ------------------------------------------------------------ spec grid -----
+
+@pytest.mark.parametrize("over", GRID,
+                         ids=lambda o: f"{o['platform']}-{o['sync']}")
+def test_invariants_hold_across_grid(over):
+    spec = _spec(over)
+    res = _run(spec, trace=True)
+    assert res.error == ""
+    inv = assert_invariants(res)
+    assert inv["clock"]["spans"] == len(res.trace.spans)
+    assert res.trace.meters == res.breakdown
+    # every span cites a known phase
+    assert {s.phase for s in res.trace.spans} <= set(PHASES)
+
+
+def test_grid_traced_equals_untraced():
+    """A seeded sample of the grid, run both ways: every metered value is
+    bitwise-equal with the recorder on."""
+    rng = np.random.default_rng(0)
+    for k in rng.choice(len(GRID), size=4, replace=False):
+        spec = _spec(GRID[int(k)])
+        r0, r1 = _run(spec, trace=False), _run(spec, trace=True)
+        assert r0.sim_time == r1.sim_time
+        assert r0.cost == r1.cost
+        assert r0.breakdown == r1.breakdown
+        assert r0.comm_bytes == r1.comm_bytes
+        assert r0.ckpt_bytes == r1.ckpt_bytes
+        assert [l for _, l in r0.history] == [l for _, l in r1.history]
+
+
+# ------------------------------------------------------------- breakdown ----
+
+def test_breakdown_derives_from_spans_alone():
+    res = _run(_spec({"platform": "faas", "sync": "bsp"}), trace=True)
+    bd = derive_breakdown(res.trace)
+    assert set(bd["phases"]) == set(PHASES)
+    # per-phase seconds re-sum to each worker's wall clock (float tolerance:
+    # the EXACT tiling claim is the invariant; this is the aggregate view)
+    for wid, phases in bd["per_worker"].items():
+        np.testing.assert_allclose(sum(phases.values()), bd["wall"][wid],
+                                   rtol=1e-9)
+    # $ ledger covers the whole bill
+    assert sum(bd["usd"].values()) == pytest.approx(res.cost, rel=1e-12)
+    text = render_breakdown(res.trace, title="t")
+    for phase in PHASES:
+        assert phase in text
+    assert "[OK  ]" in render_invariants(check_invariants(res))
+
+
+def test_run_record_carries_trace_section(tmp_path):
+    spec = _spec({"platform": "faas", "sync": "bsp", "trace": True})
+    rec = run_experiment(spec, cache_dir=tmp_path)
+    d = json.loads(Path(rec.path).read_text())
+    assert d["schema"] == "repro.experiment/v2"
+    t = d["result"]["trace"]
+    assert set(t["breakdown"]) == set(PHASES)
+    assert all(t["invariants"][k] for k in ("clock", "cost", "bytes"))
+    assert t["spans"] > 0                    # counts: full spans go through
+    assert sum(t["usd"].values()) == pytest.approx(   # the exporter, not
+        d["result"]["cost_usd"], rel=1e-12)           # the record cache
+    # full-precision record vs rounded presentation (satellite: rounding
+    # only happens in summary(), never in the stored record)
+    res = _run(spec, trace=False)
+    assert d["result"]["sim_time_s"] == res.sim_time
+    assert d["result"]["cost_usd"] == res.cost
+    s = res.summary()
+    assert s["sim_time_s"] == round(res.sim_time, 2)
+    assert s["cost_usd"] == round(res.cost, 4)
+
+
+# -------------------------------------------------------------- exporters ---
+
+def test_exporter_registry_round_trip():
+    assert list_exporters() == sorted(EXPORTERS)
+    for name in list_exporters():
+        assert make_exporter(name) is EXPORTERS[name]
+    with pytest.raises(ValueError, match="chrome"):
+        make_exporter("flamegraph")
+
+
+def test_chrome_export_is_valid_trace_event_json(tmp_path):
+    res = _run(_spec({"platform": "iaas", "sync": "ssp:2"}), trace=True)
+    doc = export_chrome(res.trace)
+    path = tmp_path / "t.json"
+    path.write_text(json.dumps(doc))
+    loaded = json.loads(path.read_text())
+    events = loaded["traceEvents"]
+    assert loaded["displayTimeUnit"] == "ms"
+    xs = [e for e in events if e["ph"] == "X"]
+    assert len(xs) == len(res.trace.spans)
+    for e in xs:
+        assert e["ts"] >= 0 and e["dur"] > 0
+        assert isinstance(e["tid"], int) and e["pid"] == 0
+        assert e["name"] and e["cat"] in PHASES
+    # µs timestamps: span t0 in simulated seconds -> ts in microseconds
+    s0 = res.trace.spans[0]
+    assert any(abs(e["ts"] - s0.t0 * 1e6) < 0.5 for e in xs)
+    # thread metadata names every worker timeline
+    mets = [e for e in events if e["ph"] == "M"]
+    assert {e["tid"] for e in mets} == {s["tid"] for s in
+                                        ({"tid": x["tid"]} for x in xs)}
+
+
+# ---------------------------------------------------------------- serving ---
+
+def _serve(platform, trace, scaling=None):
+    from repro.serving.sim import serve
+    return serve(platform, "smollm-360m", "poisson:4", duration_s=90,
+                 seed=7, reduced=True, trace=trace, scaling=scaling)
+
+
+def test_serving_trace_off_unperturbed_and_ledger_conserves():
+    from repro.core.runtimes import FaaSRuntime, IaaSRuntime
+    for make in (lambda: FaaSRuntime(workers=4),
+                 lambda: IaaSRuntime(workers=2)):
+        r0, r1 = _serve(make(), False), _serve(make(), True)
+        assert r0.cost == r1.cost
+        assert r0.completed == r1.completed
+        assert r0.latencies == r1.latencies
+        assert r0.windows == r1.windows
+        assert r0.breakdown() == {} and r1.breakdown()
+        # invariant 2, serving form: the ledger sums to the bill exactly
+        assert r1.trace.cost_total() == r1.cost
+        labels = {label for label, _ in r1.trace.cost_ledger()}
+        assert labels <= {"request", "replica"}
+
+
+def test_serving_request_lifecycle_spans():
+    from repro.core.runtimes import FaaSRuntime
+    r = _serve(FaaSRuntime(workers=2), True)
+    kinds = {s.kind for s in r.trace.spans}
+    assert {"serve.prefill", "serve.decode"} <= kinds
+    assert r.cold_starts == sum(1 for s in r.trace.spans
+                                if s.kind == "serve.coldstart")
+    # one ledger entry per admitted request, in admission order
+    ledger = r.trace.cost_ledger()
+    assert len(ledger) == len(r.per_request_usd)
+    assert [usd for _, usd in ledger] == r.per_request_usd
+
+
+def test_serving_provisioned_ledger_matches_replica_spans():
+    from repro.core.runtimes import IaaSRuntime
+    r = _serve(IaaSRuntime(workers=2), True, scaling="smlt:2")
+    assert len(r.trace.cost_ledger()) == len(r.provisioned)
+    assert r.trace.cost_total() == r.cost
+
+
+# -------------------------------------------------------- recorder units ----
+
+def test_recorder_drops_zero_length_spans_and_sums_sequentially():
+    rec = TraceRecorder("train")
+    rec.birth(0, 0.0)
+    rec.span(0, "compute", "compute", 1.0, 1.0)    # zero length: dropped
+    rec.span(0, "compute", "compute", 0.0, 1.0)
+    assert len(rec.spans) == 1
+    rec.cost("a", 0.1)
+    rec.cost("b", 0.2)
+    assert rec.cost_total() == (0.0 + 0.1) + 0.2   # left-assoc, from 0.0
+    rec.cost_reset()
+    assert rec.cost_total() == 0.0
+    rec.bytes_event("comm", 7)
+    rec.bytes_event("comm", 5)
+    assert rec.bytes_total("comm") == 12.0
+    assert rec.bytes_total("ckpt") == 0.0
